@@ -1,0 +1,33 @@
+"""§5.5 feasibility: output-conflict checking cost vs number of currently
+scheduled jobs (the paper observed no measurable growth up to 10 000 jobs;
+the N/P-set algorithm is O(depth) per output)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.conflicts import ProtectedOutputs
+
+from .common import timer
+
+
+def run(sizes=(100, 1_000, 10_000, 50_000)) -> list[dict]:
+    rows = []
+    for n in sizes:
+        prot = ProtectedOutputs()
+        for j in range(n):
+            prot.check_and_add_all([f"jobs/{j // 100}/{j}/outdir"], j)
+        # measure checks against a DB of n protected outputs
+        with timer() as t:
+            for i in range(1_000):
+                prot.check_and_add_all([f"probe/{n}/{i}/outdir"], 10**6 + i)
+        rows.append({
+            "bench": "conflict_check",
+            "scheduled_jobs": n,
+            "wall_us_per_check": t["s"] / 1_000 * 1e6,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,40 @@
+"""Paper Figure 6 / artifact A2 (contribution C4): per-job branches merged
+with a single N-parent octopus merge after concurrent Slurm jobs."""
+from __future__ import annotations
+
+from repro.core.fsio import LOCAL_XFS
+
+from .common import cleanup, make_env, timer, write_job_dir
+
+
+def run(n_jobs: int = 8) -> list[dict]:
+    root, repo, cluster, sched, clock = make_env(LOCAL_XFS)
+    import os
+    with open(os.path.join(repo.root, "README"), "w") as f:
+        f.write("octopus demo\n")
+    repo.save(message="base")
+    for j in range(n_jobs):
+        write_job_dir(repo, j)
+        sched.schedule("slurm.sh", outputs=[f"jobs/{j}"], pwd=f"jobs/{j}")
+    cluster.wait(timeout=600)
+    with timer() as t:
+        results = sched.finish(octopus=True)
+    cluster.shutdown()
+    head = repo.head_commit()
+    merge = repo.objects.get_commit(head)
+    assert len(merge["parents"]) == n_jobs + 1, "octopus merge shape"
+    assert all(r.branch for r in results)
+    row = {
+        "bench": "octopus",
+        "n_jobs": n_jobs,
+        "merge_parents": len(merge["parents"]),
+        "wall_us_total": t["s"] * 1e6,
+        "branches": len(repo.branches()),
+    }
+    cleanup(root)
+    return [row]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,72 @@
+"""Paper Figures 7/8 (contribution C2): schedule overhead vs pure sbatch.
+
+Cases, exactly as in the paper's experiment setup (§6 + artifact A1):
+  (1) schedule, repo on the parallel FS (GPFS profile)
+  (2) schedule with --alt-dir, repo on local XFS, jobs staged to parallel FS
+  (3) pure sbatch baseline
+x {4, 8, 12} outputs per job (base 4 = result + bz2 + slurm log + env json).
+
+Expected reproduction: (1)/(2) carry a roughly CONSTANT ~0.35-0.7 s/job
+offset over (3)'s ~0.05 s, independent of the number of already-scheduled
+jobs; more outputs => slightly slower.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.fsio import GPFS, LOCAL_XFS
+
+from .common import cleanup, make_env, timer, write_job_dir
+
+
+def run(n_jobs: int = 120, extra_outputs: tuple = (0, 4, 8)) -> list[dict]:
+    rows = []
+    for n_extra in extra_outputs:
+        n_outputs = 4 + n_extra
+        for case, profile, alt in (
+            ("schedule_pfs", GPFS, False),
+            ("schedule_altdir", LOCAL_XFS, True),
+            ("pure_sbatch", GPFS, False),
+        ):
+            root, repo, cluster, sched, clock = make_env(profile)
+            alt_dir = None
+            if alt:
+                import os
+                alt_dir = os.path.join(root, "pfs_stage")
+            sim_t, wall_t = [], []
+            for j in range(n_jobs):
+                write_job_dir(repo, j, n_extra)
+                s0 = clock.snapshot()
+                with timer() as t:
+                    if case == "pure_sbatch":
+                        cluster.sbatch("slurm.sh", workdir=f"{repo.root}/jobs/{j}")
+                    else:
+                        sched.schedule(
+                            "slurm.sh",
+                            outputs=[f"jobs/{j}"],
+                            pwd=f"jobs/{j}",
+                            alt_dir=alt_dir,
+                        )
+                wall_t.append(t["s"])
+                sim_t.append(clock.snapshot() - s0)
+            cluster.wait(timeout=600)
+            cluster.shutdown()
+            rows.append({
+                "bench": "schedule",
+                "case": case,
+                "outputs_per_job": n_outputs,
+                "n_jobs": n_jobs,
+                "sim_s_per_job": float(np.mean(sim_t)),
+                "sim_s_p95": float(np.percentile(sim_t, 95)),
+                "wall_us_per_job": float(np.mean(wall_t) * 1e6),
+                # paper's key claim: offset constant in #scheduled jobs
+                "sim_s_first_quartile": float(np.mean(sim_t[: n_jobs // 4])),
+                "sim_s_last_quartile": float(np.mean(sim_t[-n_jobs // 4:])),
+            })
+            cleanup(root)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,65 @@
+"""Shared benchmark scaffolding.
+
+Two clocks are reported for every paper-reproduction benchmark:
+  - ``wall``: real wall time of the code path on this container (the cost of
+    our in-process implementation), and
+  - ``sim``: modeled filesystem/Slurm seconds from the virtual clock
+    (repro.core.fsio), calibrated to the paper's GPFS/XFS/Slurm measurements
+    — this is the quantity to compare against the paper's figures.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from contextlib import contextmanager
+
+from repro.core.fsio import FS, GPFS, LOCAL_XFS, FSProfile, SimClock
+from repro.core.repo import Repository
+from repro.core.scheduler import SlurmScheduler
+from repro.core.slurm import LocalSlurmCluster
+
+JOB_BODY = """#!/bin/bash
+for i in $(seq 1 20); do echo "line $i for job $SLURM_JOB_ID"; done > out.txt
+bzip2 -kf out.txt
+{extra}
+"""
+
+
+def make_env(profile: FSProfile, n_extra_outputs: int = 0, max_workers: int = 8):
+    """Repository + cluster + scheduler on the given FS profile."""
+    root = tempfile.mkdtemp(prefix=f"bench_{profile.name}_")
+    clock = SimClock()
+    repo = Repository.init(os.path.join(root, "repo"), profile=profile,
+                           clock=clock, annex_threshold=256)
+    cluster = LocalSlurmCluster(
+        max_workers=max_workers, clock=clock, sbatch_cost_s=0.05, sacct_cost_s=0.02
+    )
+    sched = SlurmScheduler(repo, cluster)
+    return root, repo, cluster, sched, clock
+
+
+def write_job_dir(repo, j: int, n_extra_outputs: int = 0) -> list[str]:
+    """One sub-directory per job with the Slurm job script inside (paper's
+    experiment setup). Returns the job's output paths."""
+    d = os.path.join(repo.root, "jobs", str(j))
+    os.makedirs(d, exist_ok=True)
+    extra = "\n".join(
+        f"md5sum out.txt out.txt.bz2 > hash_{i}.txt" for i in range(n_extra_outputs)
+    )
+    with open(os.path.join(d, "slurm.sh"), "w") as f:
+        f.write(JOB_BODY.format(extra=extra))
+    return [f"jobs/{j}"]
+
+
+@contextmanager
+def timer():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["s"] = time.perf_counter() - t0
+
+
+def cleanup(root):
+    shutil.rmtree(root, ignore_errors=True)

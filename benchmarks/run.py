@@ -1,0 +1,87 @@
+"""Benchmark harness: one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one row per benchmark case) plus a
+summary of the paper-claim checks. Roofline terms (deliverable g) are
+produced by ``repro.launch.roofline`` from the dry-run artifacts; this file
+covers the paper's own evaluation (Figures 6-10).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import bench_conflicts, bench_finish, bench_octopus, bench_schedule
+
+    rows = []
+    print("# running bench_schedule (paper Fig. 7/8) ...", file=sys.stderr)
+    rows += bench_schedule.run()
+    print("# running bench_finish (paper Fig. 9/10) ...", file=sys.stderr)
+    rows += bench_finish.run()
+    print("# running bench_conflicts (§5.5) ...", file=sys.stderr)
+    rows += bench_conflicts.run()
+    print("# running bench_octopus (Fig. 6 / A2) ...", file=sys.stderr)
+    rows += bench_octopus.run()
+
+    print("name,us_per_call,derived")
+    claims = []
+    sched = {}
+    for r in rows:
+        if r["bench"] == "schedule":
+            name = f"schedule/{r['case']}/{r['outputs_per_job']}out"
+            us = r["wall_us_per_job"]
+            derived = f"sim={r['sim_s_per_job']:.3f}s_per_job"
+            sched[(r["case"], r["outputs_per_job"])] = r
+        elif r["bench"] == "finish":
+            name = f"finish/{r['case']}/{r['repo_files']}files"
+            us = r["wall_us_per_job"]
+            derived = f"sim={r['sim_s_per_job']:.3f}s_per_job"
+        elif r["bench"] == "conflict_check":
+            name = f"conflicts/{r['scheduled_jobs']}jobs"
+            us = r["wall_us_per_check"]
+            derived = "per_output_check"
+        else:
+            name = f"octopus/{r['n_jobs']}jobs"
+            us = r["wall_us_total"]
+            derived = f"parents={r['merge_parents']}"
+        print(f"{name},{us:.1f},{derived}")
+
+    # ---- paper-claim checks -------------------------------------------
+    for n_out in (4, 8, 12):
+        pfs = sched[("schedule_pfs", n_out)]
+        alt = sched[("schedule_altdir", n_out)]
+        base = sched[("pure_sbatch", n_out)]
+        off_pfs = pfs["sim_s_per_job"] - base["sim_s_per_job"]
+        claims.append(
+            ("C2: schedule offset %d outputs (paper: ~0.35-0.7s, const)" % n_out,
+             0.2 < off_pfs < 1.0
+             and abs(pfs["sim_s_last_quartile"] - pfs["sim_s_first_quartile"])
+             < 0.5 * pfs["sim_s_per_job"],
+             f"offset={off_pfs:.2f}s alt={alt['sim_s_per_job'] - base['sim_s_per_job']:.2f}s")
+        )
+    fin = {(r["case"], r["repo_files"]): r for r in rows if r["bench"] == "finish"}
+    blow = fin[("finish_pfs", 200_000)]["sim_s_per_job"]
+    small = fin[("finish_pfs", 1_000)]["sim_s_per_job"]
+    alt_big = fin[("finish_altdir", 200_000)]["sim_s_per_job"]
+    claims.append(("C3: parallel-FS finish blowup past 50k files (paper: >10s/job)",
+                   blow > 10.0 and blow > 5 * small, f"{small:.2f}s -> {blow:.2f}s"))
+    claims.append(("C3: --alt-dir stays flat (paper: 0.6-1.7s/job)",
+                   alt_big < 3.0, f"{alt_big:.2f}s at 200k files"))
+    conf = {r["scheduled_jobs"]: r for r in rows if r["bench"] == "conflict_check"}
+    claims.append(("§5.5: conflict check ~O(1) in scheduled jobs",
+                   conf[50_000]["wall_us_per_check"] < 20 * conf[100]["wall_us_per_check"],
+                   f"{conf[100]['wall_us_per_check']:.0f}us@100 -> "
+                   f"{conf[50_000]['wall_us_per_check']:.0f}us@50k"))
+
+    print()
+    print("# paper-claim checks")
+    ok = True
+    for name, passed, detail in claims:
+        ok &= passed
+        print(f"# [{'PASS' if passed else 'FAIL'}] {name}: {detail}")
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

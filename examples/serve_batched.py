@@ -1,0 +1,72 @@
+"""Batched serving of a small LM: prefill + decode with KV caches, request
+batching, and per-request latency stats. The serving states are exactly the
+structures the decode dry-run lowers at production scale (launch/dryrun.py).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--requests 8]
+"""
+import argparse
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.train.steps import make_decode_step, make_prefill_step
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen-tokens", type=int, default=32)
+    ap.add_argument("--arch", default="qwen3_0_6b")
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch)
+    params = init_params(T.param_defs(cfg), seed=0)
+    cache_len = args.prompt_len + args.gen_tokens
+    prefill = jax.jit(make_prefill_step(cfg, None, cache_len=cache_len))
+    step = jax.jit(make_decode_step(cfg, None), donate_argnums=(1,))
+
+    rng = np.random.default_rng(0)
+    B = args.requests
+    prompts = rng.integers(0, cfg.vocab_size, (B, args.prompt_len))
+    batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+
+    t0 = time.perf_counter()
+    caches, logits = jax.block_until_ready(prefill(params, batch))
+    t_prefill = time.perf_counter() - t0
+    tok = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)[:, None]
+
+    generated = [tok]
+    lat = []
+    for i in range(args.gen_tokens - 1):
+        t0 = time.perf_counter()
+        logits, caches = step(params, caches, tok,
+                              jnp.asarray(args.prompt_len + i, jnp.int32))
+        logits = jax.block_until_ready(logits)
+        lat.append(time.perf_counter() - t0)
+        tok = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)[:, None]
+        generated.append(tok)
+    out = jnp.concatenate(generated, axis=1)
+
+    lat_ms = np.array(lat[1:]) * 1e3  # skip first (includes compile)
+    print(f"model          : {cfg.name} ({args.arch})")
+    print(f"batch          : {B} requests x {args.prompt_len} prompt tokens")
+    print(f"prefill        : {t_prefill*1e3:.1f} ms "
+          f"({B*args.prompt_len/t_prefill:.0f} tok/s incl. compile)")
+    print(f"decode/step    : p50={np.percentile(lat_ms,50):.2f} ms "
+          f"p95={np.percentile(lat_ms,95):.2f} ms")
+    print(f"throughput     : {B*1e3/np.mean(lat_ms):.0f} tok/s at batch {B}")
+    print(f"sample request0: {np.asarray(out[0])[:12]}")
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,81 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get(name)`` returns the exact full-size config from the assignment table;
+``get_smoke(name)`` returns the reduced same-family config used by the CPU
+smoke tests (tiny widths, few experts, tiny vocab — same code paths).
+
+Shape grid (the assignment's 4 shapes; ``runnable`` encodes the long_500k
+sub-quadratic rule and is recorded as explicit skips in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+from .base import LayerKind, MambaConfig, ModelConfig, MoEConfig
+
+ARCH_IDS = [
+    "internlm2_20b",
+    "qwen3_0_6b",
+    "phi3_mini_3_8b",
+    "granite_3_2b",
+    "arctic_480b",
+    "mixtral_8x22b",
+    "seamless_m4t_large_v2",
+    "qwen2_vl_7b",
+    "rwkv6_1_6b",
+    "jamba_1_5_large_398b",
+]
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+
+def _module(name: str):
+    return importlib.import_module(f".{name.replace('-', '_')}", __package__)
+
+
+def get(name: str) -> ModelConfig:
+    return _module(name).config()
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _module(name).smoke_config()
+
+
+def is_subquadratic(cfg: ModelConfig) -> bool:
+    """True if decoding at 500k context doesn't need a full-size KV cache."""
+    return (
+        cfg.ssm is not None
+        or cfg.attn_period > 0
+        or cfg.sliding_window is not None
+    )
+
+
+def cell_runnable(cfg: ModelConfig, shape: Shape) -> tuple[bool, str]:
+    """The assignment's skip rules for (arch x shape) cells."""
+    if shape.name == "long_500k" and not is_subquadratic(cfg):
+        return False, (
+            "long_500k skipped: pure full-attention architecture (O(S) KV "
+            "cache at 524288 ctx; assignment mandates sub-quadratic only)"
+        )
+    return True, ""
+
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "Shape", "LayerKind", "MambaConfig", "ModelConfig",
+    "MoEConfig", "get", "get_smoke", "cell_runnable", "is_subquadratic",
+]

@@ -1,0 +1,34 @@
+"""repro.core — the paper's contribution as a library.
+
+Data version management (git/git-annex model), machine-actionable
+reproducibility records (datalad run/rerun model), and the Slurm scheduling
+protocol (datalad slurm-schedule/finish/reschedule) that makes both
+HPC-compatible. See DESIGN.md for the mapping.
+"""
+from .annex import AnnexStore, make_pointer, parse_pointer
+from .conflicts import (
+    OutputConflict,
+    ProtectedOutputs,
+    WildcardOutputError,
+    normalize,
+    proper_prefixes,
+)
+from .fsio import FS, GPFS, LOCAL_XFS, NULL_FS, FSProfile, SimClock
+from .hashing import annex_key_for_bytes, annex_key_for_file, verify_annex_key
+from .jobdb import JobDB
+from .records import RunFailed, RunRecord, rerun, run
+from .repo import ConflictError, Repository
+from .scheduler import FinishResult, ScheduleError, SlurmScheduler
+from .slurm import LocalSlurmCluster, SlurmCluster, SubprocessSlurmCluster
+
+__all__ = [
+    "AnnexStore", "make_pointer", "parse_pointer",
+    "OutputConflict", "ProtectedOutputs", "WildcardOutputError",
+    "normalize", "proper_prefixes",
+    "FS", "GPFS", "LOCAL_XFS", "NULL_FS", "FSProfile", "SimClock",
+    "annex_key_for_bytes", "annex_key_for_file", "verify_annex_key",
+    "JobDB", "RunFailed", "RunRecord", "rerun", "run",
+    "ConflictError", "Repository",
+    "FinishResult", "ScheduleError", "SlurmScheduler",
+    "LocalSlurmCluster", "SlurmCluster", "SubprocessSlurmCluster",
+]

@@ -1,0 +1,91 @@
+"""Annex layer: large-file content kept outside the object store.
+
+Mirrors git-annex as the paper uses it (§2.3): a versioned *pointer* travels
+with the tree while the content lives in one or more key/value stores that can
+hold different subsets of keys. After ``clone`` the annexed files are *known*
+but not *present* — ``annex_get`` fetches them from any store that has them,
+``annex_drop`` removes the local copy while refusing to destroy the last one
+(numcopies protection, unless forced).
+
+Pointer files are what a checkout writes when content is absent:
+    #%REPRO-ANNEX%# SHA256-s<size>--<hex>\n
+"""
+from __future__ import annotations
+
+import os
+
+from .fsio import FS
+from .hashing import parse_annex_key, verify_annex_key
+
+POINTER_PREFIX = b"#%REPRO-ANNEX%#"
+_POINTER_MAX = 256
+
+
+def make_pointer(key: str) -> bytes:
+    parse_annex_key(key)  # validate
+    return POINTER_PREFIX + b" " + key.encode() + b"\n"
+
+
+def parse_pointer(data: bytes) -> str | None:
+    """Return the annex key if ``data`` is a pointer file, else None."""
+    if len(data) > _POINTER_MAX or not data.startswith(POINTER_PREFIX):
+        return None
+    try:
+        return data[len(POINTER_PREFIX):].strip().decode()
+    except UnicodeDecodeError:
+        return None
+
+
+class AnnexStore:
+    """One key/value store (local annex dir, 'S3 bucket', second-tier FS...).
+
+    All stores share this implementation but may live on filesystems with
+    different :class:`~repro.core.fsio.FSProfile` costs — that is exactly the
+    paper's second-tier-storage scenario (§2.6).
+    """
+
+    def __init__(self, root: str, fs: FS, name: str = "local"):
+        self.root = root
+        self.fs = fs
+        self.name = name
+
+    def _path(self, key: str) -> str:
+        _, hx = parse_annex_key(key)
+        return os.path.join(self.root, hx[:3], key)
+
+    def has(self, key: str) -> bool:
+        return self.fs.exists(self._path(key))
+
+    def put_bytes(self, key: str, data: bytes) -> None:
+        if not verify_annex_key(key, data):
+            raise ValueError(f"content does not match key {key}")
+        path = self._path(key)
+        if not self.fs.exists(path):
+            self.fs.write_bytes(path, data)
+
+    def put_file(self, key: str, src: str) -> None:
+        path = self._path(key)
+        if not self.fs.exists(path):
+            self.fs.copy_file(src, path)
+
+    def read(self, key: str) -> bytes:
+        data = self.fs.read_bytes(self._path(key))
+        if not verify_annex_key(key, data):
+            raise IOError(f"annex corruption for {key} in store {self.name}")
+        return data
+
+    def copy_to(self, key: str, dst: str) -> None:
+        self.fs.copy_file(self._path(key), dst)
+
+    def drop(self, key: str) -> None:
+        self.fs.unlink(self._path(key))
+
+    def keys(self) -> list[str]:
+        out = []
+        if not os.path.isdir(self.root):
+            return out
+        for shard in sorted(os.listdir(self.root)):
+            d = os.path.join(self.root, shard)
+            if os.path.isdir(d):
+                out.extend(sorted(os.listdir(d)))
+        return out

@@ -1,0 +1,55 @@
+"""Content hashing and annex key handling.
+
+Annex keys follow the git-annex SHA256E-style convention used by the paper:
+``SHA256-s<size>--<hex>``. The key alone is sufficient to verify content,
+which is what makes ``rerun``'s bitwise verification possible without the
+original outputs (paper §3 step 8).
+"""
+from __future__ import annotations
+
+import hashlib
+import re
+
+_CHUNK = 1 << 20
+
+ANNEX_KEY_RE = re.compile(r"^SHA256-s(?P<size>\d+)--(?P<hex>[0-9a-f]{64})$")
+
+
+def sha256_bytes(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+def sha256_file(path: str) -> tuple[str, int]:
+    """Return (hex digest, size) streaming the file in 1 MiB chunks."""
+    h = hashlib.sha256()
+    size = 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(_CHUNK)
+            if not chunk:
+                break
+            size += len(chunk)
+            h.update(chunk)
+    return h.hexdigest(), size
+
+
+def annex_key_for_bytes(data: bytes) -> str:
+    return f"SHA256-s{len(data)}--{sha256_bytes(data)}"
+
+
+def annex_key_for_file(path: str) -> str:
+    hx, size = sha256_file(path)
+    return f"SHA256-s{size}--{hx}"
+
+
+def parse_annex_key(key: str) -> tuple[int, str]:
+    """Return (size, hex) or raise ValueError."""
+    m = ANNEX_KEY_RE.match(key)
+    if not m:
+        raise ValueError(f"not a valid annex key: {key!r}")
+    return int(m.group("size")), m.group("hex")
+
+
+def verify_annex_key(key: str, data: bytes) -> bool:
+    size, hx = parse_annex_key(key)
+    return size == len(data) and sha256_bytes(data) == hx

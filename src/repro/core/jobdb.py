@@ -1,0 +1,186 @@
+"""Intermediate job database (paper §5.3).
+
+A sqlite database *hidden from the data repository* — it lives under
+``.repro/`` which is never committed, so it is never synchronized via the
+version store. Its scope is the current clone; a single instance is shared by
+all branches. It tracks every scheduled-but-not-finished job and persists the
+protected-output sets N and P used by the §5.5 conflict checks.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sqlite3
+import threading
+import time
+
+from .conflicts import OutputConflict, ProtectedOutputs
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS jobs (
+    job_id      INTEGER PRIMARY KEY AUTOINCREMENT,
+    slurm_id    INTEGER,
+    status      TEXT NOT NULL DEFAULT 'scheduled',
+    script      TEXT NOT NULL,
+    script_args TEXT NOT NULL DEFAULT '',
+    pwd         TEXT NOT NULL DEFAULT '.',
+    inputs      TEXT NOT NULL DEFAULT '[]',
+    outputs     TEXT NOT NULL DEFAULT '[]',
+    alt_dir     TEXT,
+    is_array    INTEGER NOT NULL DEFAULT 0,
+    array_n     INTEGER NOT NULL DEFAULT 1,
+    message     TEXT NOT NULL DEFAULT '',
+    submitted_at REAL NOT NULL,
+    finished_at REAL,
+    heartbeat   REAL
+);
+CREATE TABLE IF NOT EXISTS protected (
+    name   TEXT NOT NULL,
+    kind   TEXT NOT NULL CHECK (kind IN ('name', 'prefix')),
+    job_id INTEGER NOT NULL REFERENCES jobs(job_id),
+    PRIMARY KEY (name, kind, job_id)
+);
+CREATE INDEX IF NOT EXISTS idx_protected_name ON protected(name, kind);
+CREATE INDEX IF NOT EXISTS idx_jobs_status ON jobs(status);
+"""
+
+
+class JobDB:
+    def __init__(self, repro_dir: str):
+        self.path = os.path.join(repro_dir, "jobdb.sqlite")
+        self._local = threading.local()
+        with self._conn() as c:
+            c.executescript(_SCHEMA)
+
+    def _conn(self) -> sqlite3.Connection:
+        conn = getattr(self._local, "conn", None)
+        if conn is None:
+            conn = sqlite3.connect(self.path, timeout=30.0)
+            conn.row_factory = sqlite3.Row
+            self._local.conn = conn
+        return conn
+
+    # ------------------------------------------------------------------
+    def add_job(
+        self,
+        script: str,
+        outputs: list[str],
+        inputs: list[str] | None = None,
+        script_args: str = "",
+        pwd: str = ".",
+        alt_dir: str | None = None,
+        array_n: int = 1,
+        message: str = "",
+    ) -> int:
+        """Insert a job and protect its outputs atomically.
+
+        Performs the §5.5 conflict checks against the persisted N/P sets
+        inside the same transaction, so two concurrent ``schedule`` calls
+        cannot both claim the same output.
+        """
+        conn = self._conn()
+        with conn:  # single transaction: check + insert + protect
+            prot = self._load_protected(conn)
+            cur = conn.execute(
+                "INSERT INTO jobs (script, script_args, pwd, inputs, outputs,"
+                " alt_dir, is_array, array_n, message, submitted_at)"
+                " VALUES (?,?,?,?,?,?,?,?,?,?)",
+                (
+                    script,
+                    script_args,
+                    pwd,
+                    json.dumps(inputs or []),
+                    json.dumps(outputs),
+                    alt_dir,
+                    int(array_n > 1),
+                    array_n,
+                    message,
+                    time.time(),
+                ),
+            )
+            job_id = cur.lastrowid
+            normed = prot.check_and_add_all(outputs, job_id)  # raises on conflict
+            conn.executemany(
+                "INSERT OR IGNORE INTO protected (name, kind, job_id) VALUES (?,?,?)",
+                [(n, "name", job_id) for n in normed]
+                + [
+                    (p, "prefix", job_id)
+                    for n in normed
+                    for p in _prefixes(n)
+                ],
+            )
+            conn.execute(
+                "UPDATE jobs SET outputs=? WHERE job_id=?",
+                (json.dumps(normed), job_id),
+            )
+        return job_id
+
+    @staticmethod
+    def _load_protected(conn: sqlite3.Connection) -> ProtectedOutputs:
+        prot = ProtectedOutputs()
+        for row in conn.execute("SELECT name, kind, job_id FROM protected"):
+            if row["kind"] == "name":
+                prot.names[row["name"]] = row["job_id"]
+            else:
+                prot.prefixes.setdefault(row["name"], set()).add(row["job_id"])
+        return prot
+
+    def check_outputs(self, outputs: list[str]) -> None:
+        """Non-mutating §5.5 check (used by reschedule previews)."""
+        conn = self._conn()
+        prot = self._load_protected(conn)
+        for o in outputs:
+            prot.check(o)
+
+    # ------------------------------------------------------------------
+    def set_slurm_id(self, job_id: int, slurm_id: int) -> None:
+        with self._conn() as c:
+            c.execute("UPDATE jobs SET slurm_id=? WHERE job_id=?", (slurm_id, job_id))
+
+    def heartbeat(self, job_id: int) -> None:
+        with self._conn() as c:
+            c.execute("UPDATE jobs SET heartbeat=? WHERE job_id=?", (time.time(), job_id))
+
+    def close_job(self, job_id: int, status: str) -> None:
+        """Mark finished/failed-closed and release protected outputs."""
+        with self._conn() as c:
+            c.execute(
+                "UPDATE jobs SET status=?, finished_at=? WHERE job_id=?",
+                (status, time.time(), job_id),
+            )
+            c.execute("DELETE FROM protected WHERE job_id=?", (job_id,))
+
+    def get(self, job_id: int) -> dict | None:
+        row = self._conn().execute(
+            "SELECT * FROM jobs WHERE job_id=?", (job_id,)
+        ).fetchone()
+        return _to_dict(row) if row else None
+
+    def by_slurm_id(self, slurm_id: int) -> dict | None:
+        row = self._conn().execute(
+            "SELECT * FROM jobs WHERE slurm_id=?", (slurm_id,)
+        ).fetchone()
+        return _to_dict(row) if row else None
+
+    def open_jobs(self) -> list[dict]:
+        rows = self._conn().execute(
+            "SELECT * FROM jobs WHERE status='scheduled' ORDER BY job_id"
+        ).fetchall()
+        return [_to_dict(r) for r in rows]
+
+    def n_protected(self) -> int:
+        return self._conn().execute(
+            "SELECT COUNT(*) FROM protected WHERE kind='name'"
+        ).fetchone()[0]
+
+
+def _prefixes(name: str) -> list[str]:
+    parts = name.split("/")
+    return ["/".join(parts[:i]) for i in range(len(parts) - 1, 0, -1)]
+
+
+def _to_dict(row: sqlite3.Row) -> dict:
+    d = dict(row)
+    d["inputs"] = json.loads(d["inputs"])
+    d["outputs"] = json.loads(d["outputs"])
+    return d

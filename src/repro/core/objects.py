@@ -1,0 +1,89 @@
+"""Content-addressed object store: blobs, trees, commits.
+
+The design mirrors git's object model (the paper's foundation): an object is
+``<kind> <len>\\0<payload>`` hashed with SHA-256, stored zlib-compressed under
+``objects/<2-hex>/<62-hex>``. Trees and commits are canonical JSON so they can
+be introspected without a porcelain layer.
+
+Tree entries (one dict per name):
+    {"t": "blob", "oid": ...}                   # regular versioned file
+    {"t": "tree", "oid": ...}                   # subdirectory
+    {"t": "annex", "key": "SHA256-s...--..."}   # annexed large/binary file
+
+Commits:
+    {"tree": oid, "parents": [oid...], "author": str,
+     "timestamp": float, "message": str}
+
+Octopus merges are just commits with len(parents) > 2, exactly like git.
+"""
+from __future__ import annotations
+
+import json
+import os
+import zlib
+
+from .fsio import FS
+from .hashing import sha256_bytes
+
+KINDS = ("blob", "tree", "commit")
+
+
+def canonical_json(obj) -> bytes:
+    return json.dumps(obj, sort_keys=True, separators=(",", ":")).encode()
+
+
+class ObjectStore:
+    def __init__(self, root: str, fs: FS):
+        self.root = root
+        self.fs = fs
+
+    def _path(self, oid: str) -> str:
+        return os.path.join(self.root, oid[:2], oid[2:])
+
+    def put(self, kind: str, payload: bytes) -> str:
+        assert kind in KINDS, kind
+        framed = kind.encode() + b" " + str(len(payload)).encode() + b"\0" + payload
+        oid = sha256_bytes(framed)
+        path = self._path(oid)
+        if not self.fs.exists(path):
+            self.fs.write_bytes(path, zlib.compress(framed, 1))
+        return oid
+
+    def get(self, oid: str) -> tuple[str, bytes]:
+        framed = zlib.decompress(self.fs.read_bytes(self._path(oid)))
+        header, _, payload = framed.partition(b"\0")
+        kind, _, length = header.decode().partition(" ")
+        if int(length) != len(payload):
+            raise IOError(f"corrupt object {oid}")
+        return kind, payload
+
+    def has(self, oid: str) -> bool:
+        return self.fs.exists(self._path(oid))
+
+    # -- typed helpers ---------------------------------------------------
+    def put_blob(self, data: bytes) -> str:
+        return self.put("blob", data)
+
+    def put_tree(self, entries: dict) -> str:
+        return self.put("tree", canonical_json(entries))
+
+    def put_commit(self, commit: dict) -> str:
+        return self.put("commit", canonical_json(commit))
+
+    def get_blob(self, oid: str) -> bytes:
+        kind, payload = self.get(oid)
+        if kind != "blob":
+            raise TypeError(f"{oid} is a {kind}, not a blob")
+        return payload
+
+    def get_tree(self, oid: str) -> dict:
+        kind, payload = self.get(oid)
+        if kind != "tree":
+            raise TypeError(f"{oid} is a {kind}, not a tree")
+        return json.loads(payload)
+
+    def get_commit(self, oid: str) -> dict:
+        kind, payload = self.get(oid)
+        if kind != "commit":
+            raise TypeError(f"{oid} is a {kind}, not a commit")
+        return json.loads(payload)

@@ -1,0 +1,210 @@
+"""Machine-actionable reproducibility records (paper §3, Figures 2 & 4).
+
+A record is a structured JSON block embedded in the commit message between
+sentinel lines, exactly like DataLad's ``[DATALAD RUNCMD]``:
+
+    [REPRO RUNCMD] <human title>
+
+    === Do not change lines below ===
+    { "chain": [], "cmd": ..., "dsid": ..., "exit": 0,
+      "extra_inputs": [], "inputs": [...], "outputs": [...], "pwd": "." }
+    ^^^ Do not change lines above ^^^
+
+``run`` executes a command and commits its outputs with such a record;
+``rerun`` re-executes a past record and *hash-verifies* the outputs against
+the recorded tree (paper §3 step 8: "based on file hashes and doesn't even
+need the original outputs"). Scheduler records (Figure 4) add slurm fields.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+from dataclasses import dataclass, field
+
+from .repo import Repository
+
+BEGIN = "=== Do not change lines below ==="
+END = "^^^ Do not change lines above ^^^"
+
+TITLE_RUN = "[REPRO RUNCMD]"
+TITLE_SLURM = "[REPRO SLURM RUN]"
+
+
+@dataclass
+class RunRecord:
+    cmd: str
+    dsid: str
+    inputs: list[str] = field(default_factory=list)
+    outputs: list[str] = field(default_factory=list)
+    extra_inputs: list[str] = field(default_factory=list)
+    chain: list[str] = field(default_factory=list)
+    exit: int | None = 0
+    pwd: str = "."
+    # slurm extension fields (paper Fig. 4); None for plain run records
+    slurm_job_id: int | None = None
+    slurm_outputs: list[str] | None = None
+    extras: dict = field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        d = {
+            "chain": self.chain,
+            "cmd": self.cmd,
+            "dsid": self.dsid,
+            "exit": self.exit,
+            "extra_inputs": self.extra_inputs,
+            "inputs": self.inputs,
+            "outputs": self.outputs,
+            "pwd": self.pwd,
+        }
+        if self.slurm_job_id is not None:
+            d["slurm_job_id"] = self.slurm_job_id
+            d["slurm_outputs"] = self.slurm_outputs or []
+        d.update(self.extras)
+        return d
+
+    def to_message(self, title: str, kind: str = TITLE_RUN) -> str:
+        body = json.dumps(self.to_json(), indent=1, sort_keys=True)
+        return f"{kind} {title}\n\n{BEGIN}\n{body}\n{END}\n"
+
+    @classmethod
+    def from_message(cls, message: str) -> "RunRecord | None":
+        if BEGIN not in message or END not in message:
+            return None
+        blob = message.split(BEGIN, 1)[1].split(END, 1)[0]
+        d = json.loads(blob)
+        known = {
+            "chain", "cmd", "dsid", "exit", "extra_inputs", "inputs", "outputs",
+            "pwd", "slurm_job_id", "slurm_outputs",
+        }
+        extras = {k: v for k, v in d.items() if k not in known}
+        return cls(
+            cmd=d["cmd"],
+            dsid=d["dsid"],
+            inputs=d.get("inputs", []),
+            outputs=d.get("outputs", []),
+            extra_inputs=d.get("extra_inputs", []),
+            chain=d.get("chain", []),
+            exit=d.get("exit"),
+            pwd=d.get("pwd", "."),
+            slurm_job_id=d.get("slurm_job_id"),
+            slurm_outputs=d.get("slurm_outputs"),
+            extras=extras,
+        )
+
+
+class RunFailed(RuntimeError):
+    def __init__(self, cmd: str, returncode: int, stderr: str = ""):
+        super().__init__(f"command failed (exit {returncode}): {cmd}\n{stderr}")
+        self.returncode = returncode
+
+
+def _prepare_io(repo: Repository, inputs: list[str], outputs: list[str]) -> None:
+    """Paper §3 step 1: datalad-get inputs, unlock outputs."""
+    for p in inputs:
+        abspath = os.path.join(repo.root, p)
+        if os.path.isdir(abspath):
+            for dirpath, _, files in os.walk(abspath):
+                for f in files:
+                    repo.annex_get(os.path.relpath(os.path.join(dirpath, f), repo.root))
+        elif os.path.exists(abspath):
+            repo.annex_get(p)
+        else:
+            raise FileNotFoundError(f"input does not exist: {p}")
+    for p in outputs:
+        repo.unlock(p)
+
+
+def run(
+    repo: Repository,
+    cmd: str,
+    inputs: list[str] | None = None,
+    outputs: list[str] | None = None,
+    message: str = "",
+    pwd: str = ".",
+    chain: list[str] | None = None,
+) -> str:
+    """``datalad run`` equivalent: execute ``cmd``, commit outputs + record.
+
+    Returns the commit oid. The command runs blocking (paper §3 step 2); a
+    non-zero exit aborts without committing.
+    """
+    inputs = inputs or []
+    outputs = outputs or []
+    _prepare_io(repo, inputs, outputs)
+    workdir = os.path.join(repo.root, pwd)
+    proc = subprocess.run(
+        cmd, shell=True, cwd=workdir, capture_output=True, text=True
+    )
+    if proc.returncode != 0:
+        raise RunFailed(cmd, proc.returncode, proc.stderr)
+    record = RunRecord(
+        cmd=cmd,
+        dsid=repo.dsid,
+        inputs=inputs,
+        outputs=outputs,
+        chain=chain or [],
+        exit=0,
+        pwd=pwd,
+    )
+    save_paths = outputs if outputs else None
+    return repo.save(paths=save_paths, message=record.to_message(message or cmd))
+
+
+def rerun(repo: Repository, commitish: str, report_only: bool = False) -> dict:
+    """``datalad rerun`` equivalent (paper §3 steps 6-8).
+
+    Re-executes the record at ``commitish`` with the *current* inputs, then
+    hash-compares the produced outputs against the recorded tree. If bitwise
+    identical, no new commit is made. Returns a report dict:
+    ``{"bitwise": bool, "new_commit": oid|None, "outputs": {path: same?}}``.
+    """
+    oid = repo.resolve(commitish)
+    commit = repo.objects.get_commit(oid)
+    record = RunRecord.from_message(commit["message"])
+    if record is None:
+        raise ValueError(f"commit {oid} has no reproducibility record")
+    recorded_tree = repo.tree_of(oid)
+
+    _prepare_io(repo, record.inputs, record.outputs)
+    workdir = os.path.join(repo.root, record.pwd)
+    proc = subprocess.run(
+        record.cmd, shell=True, cwd=workdir, capture_output=True, text=True
+    )
+    if proc.returncode != 0:
+        raise RunFailed(record.cmd, proc.returncode, proc.stderr)
+
+    # hash-verify each output against the recorded entries
+    per_output: dict[str, bool] = {}
+    changed = False
+    for out in record.outputs:
+        abspath = os.path.join(repo.root, out)
+        paths = []
+        if os.path.isdir(abspath):
+            for dirpath, _, files in os.walk(abspath):
+                paths.extend(
+                    os.path.relpath(os.path.join(dirpath, f), repo.root) for f in files
+                )
+        else:
+            paths.append(out)
+        for p in paths:
+            new_entry = repo._hash_working_file(p)
+            same = recorded_tree.get(p) == new_entry
+            per_output[p] = same
+            changed |= not same
+    report = {"bitwise": not changed, "new_commit": None, "outputs": per_output}
+    if changed and not report_only:
+        new_record = RunRecord(
+            cmd=record.cmd,
+            dsid=repo.dsid,
+            inputs=record.inputs,
+            outputs=record.outputs,
+            chain=record.chain + [oid],
+            exit=0,
+            pwd=record.pwd,
+        )
+        report["new_commit"] = repo.save(
+            paths=record.outputs or None,
+            message=new_record.to_message(f"rerun of {oid[:12]}"),
+        )
+    return report

@@ -1,0 +1,481 @@
+"""Repository: working tree + object store + annex + branches.
+
+This is git/git-annex/DataLad rebuilt as an in-process library (see DESIGN.md
+§2 for why): ``save`` = stage+commit, ``checkout`` materializes a commit,
+``merge_octopus`` is the N-parent merge of paper §5.8, annex get/drop/whereis
+follow §2.3/§2.6. Every filesystem touch goes through :class:`FS` so the
+parallel-FS cost model applies to the entire stack.
+"""
+from __future__ import annotations
+
+import fnmatch
+import json
+import os
+import time
+import uuid
+
+from .annex import AnnexStore, make_pointer, parse_pointer
+from .fsio import FS, NULL_FS, FSProfile, SimClock
+from .hashing import annex_key_for_bytes
+from .objects import ObjectStore
+
+REPRO_DIR = ".repro"
+DEFAULT_ANNEX_THRESHOLD = 64 * 1024  # bytes; files >= this are annexed
+
+
+class ConflictError(Exception):
+    pass
+
+
+class Repository:
+    def __init__(self, root: str, fs: FS | None = None):
+        self.root = os.path.abspath(root)
+        self.repro_dir = os.path.join(self.root, REPRO_DIR)
+        cfg_path = os.path.join(self.repro_dir, "config.json")
+        if not os.path.exists(cfg_path):
+            raise FileNotFoundError(f"not a repro repository: {root}")
+        self.fs = fs or FS(NULL_FS)
+        self.config = json.loads(self.fs.read_bytes(cfg_path))
+        self.objects = ObjectStore(os.path.join(self.repro_dir, "objects"), self.fs)
+        self.annex = AnnexStore(os.path.join(self.repro_dir, "annex", "objects"), self.fs)
+        self._remotes: list[AnnexStore] = [
+            AnnexStore(p, self.fs, name=f"remote{i}")
+            for i, p in enumerate(self.config.get("annex_remotes", []))
+        ]
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def init(
+        cls,
+        root: str,
+        profile: FSProfile = NULL_FS,
+        clock: SimClock | None = None,
+        annex_threshold: int = DEFAULT_ANNEX_THRESHOLD,
+        annex_patterns: tuple[str, ...] = (),
+        dsid: str | None = None,
+    ) -> "Repository":
+        fs = FS(profile, clock)
+        root = os.path.abspath(root)
+        repro_dir = os.path.join(root, REPRO_DIR)
+        os.makedirs(os.path.join(repro_dir, "objects"), exist_ok=True)
+        os.makedirs(os.path.join(repro_dir, "refs", "heads"), exist_ok=True)
+        os.makedirs(os.path.join(repro_dir, "annex", "objects"), exist_ok=True)
+        cfg = {
+            "dsid": dsid or str(uuid.uuid4()),
+            "annex_threshold": annex_threshold,
+            "annex_patterns": list(annex_patterns),
+            "annex_remotes": [],
+        }
+        fs.write_bytes(os.path.join(repro_dir, "config.json"), json.dumps(cfg).encode())
+        fs.write_bytes(os.path.join(repro_dir, "HEAD"), b"main")
+        return cls(root, fs)
+
+    @classmethod
+    def clone(cls, src: "Repository", dst_root: str, fs: FS | None = None) -> "Repository":
+        """Clone metadata + objects; annexed content stays behind (paper §2.3:
+        'after cloning ... the annexed files are known but their content is
+        not present'). The source's annex store is registered as a remote so
+        ``annex_get`` can fetch on demand."""
+        dst_root = os.path.abspath(dst_root)
+        repo = cls.init(
+            dst_root,
+            annex_threshold=src.config["annex_threshold"],
+            annex_patterns=tuple(src.config.get("annex_patterns", ())),
+            dsid=src.config["dsid"],
+        )
+        if fs is not None:
+            repo.fs = fs
+            repo.objects.fs = fs
+            repo.annex.fs = fs
+        # copy objects + refs
+        for dirpath, _, files in os.walk(src.objects.root):
+            rel = os.path.relpath(dirpath, src.objects.root)
+            for f in files:
+                repo.fs.copy_file(
+                    os.path.join(dirpath, f), os.path.join(repo.objects.root, rel, f)
+                )
+        refs_src = os.path.join(src.repro_dir, "refs", "heads")
+        for dirpath, _, files in os.walk(refs_src):
+            for f in files:
+                s = os.path.join(dirpath, f)
+                rel = os.path.relpath(s, refs_src)
+                repo.fs.copy_file(
+                    s, os.path.join(repo.repro_dir, "refs", "heads", rel)
+                )
+        repo.fs.copy_file(
+            os.path.join(src.repro_dir, "HEAD"), os.path.join(repo.repro_dir, "HEAD")
+        )
+        repo.add_annex_remote(src.annex.root)
+        head = repo.head_commit()
+        if head:
+            repo.checkout(head)
+        return repo
+
+    # ------------------------------------------------------------------
+    @property
+    def dsid(self) -> str:
+        return self.config["dsid"]
+
+    def _save_config(self) -> None:
+        self.fs.write_bytes(
+            os.path.join(self.repro_dir, "config.json"), json.dumps(self.config).encode()
+        )
+
+    def add_annex_remote(self, store_root: str) -> None:
+        store_root = os.path.abspath(store_root)
+        if store_root not in self.config["annex_remotes"]:
+            self.config["annex_remotes"].append(store_root)
+            self._save_config()
+            self._remotes.append(
+                AnnexStore(store_root, self.fs, name=f"remote{len(self._remotes)}")
+            )
+
+    # -- refs ----------------------------------------------------------
+    def _ref_path(self, branch: str) -> str:
+        return os.path.join(self.repro_dir, "refs", "heads", branch)
+
+    def current_branch(self) -> str:
+        return self.fs.read_bytes(os.path.join(self.repro_dir, "HEAD")).decode().strip()
+
+    def branches(self) -> list[str]:
+        d = os.path.join(self.repro_dir, "refs", "heads")
+        out = []
+        for dirpath, _, files in os.walk(d):
+            for f in files:
+                out.append(os.path.relpath(os.path.join(dirpath, f), d))
+        return sorted(out)
+
+    def branch_head(self, branch: str) -> str | None:
+        p = self._ref_path(branch)
+        if not self.fs.exists(p):
+            return None
+        return self.fs.read_bytes(p).decode().strip()
+
+    def head_commit(self) -> str | None:
+        return self.branch_head(self.current_branch())
+
+    def set_branch(self, branch: str, oid: str) -> None:
+        self.fs.write_bytes(self._ref_path(branch), oid.encode())
+
+    def create_branch(self, branch: str, at: str | None = None) -> None:
+        at = at or self.head_commit()
+        if at is None:
+            raise ValueError("cannot branch from an empty repository")
+        if self.fs.exists(self._ref_path(branch)):
+            raise ValueError(f"branch exists: {branch}")
+        self.set_branch(branch, at)
+
+    def switch(self, branch: str, checkout: bool = True) -> None:
+        if not self.fs.exists(self._ref_path(branch)):
+            raise ValueError(f"no such branch: {branch}")
+        self.fs.write_bytes(os.path.join(self.repro_dir, "HEAD"), branch.encode())
+        if checkout:
+            head = self.head_commit()
+            if head:
+                self.checkout(head)
+
+    def resolve(self, commitish: str) -> str:
+        """Branch name, full oid, or unique oid prefix -> full oid."""
+        if self.fs.exists(self._ref_path(commitish)):
+            return self.branch_head(commitish)  # type: ignore[return-value]
+        if self.objects.has(commitish):
+            return commitish
+        # prefix search
+        matches = []
+        obj_root = self.objects.root
+        if len(commitish) >= 4 and os.path.isdir(os.path.join(obj_root, commitish[:2])):
+            for f in os.listdir(os.path.join(obj_root, commitish[:2])):
+                if (commitish[:2] + f).startswith(commitish):
+                    matches.append(commitish[:2] + f)
+        if len(matches) == 1:
+            return matches[0]
+        raise ValueError(f"cannot resolve {commitish!r} ({len(matches)} matches)")
+
+    # -- trees -----------------------------------------------------------
+    def tree_of(self, commit_oid: str) -> dict[str, dict]:
+        """Flat {relpath: entry} map for a commit (entries: blob|annex)."""
+        commit = self.objects.get_commit(commit_oid)
+        flat: dict[str, dict] = {}
+
+        def walk(tree_oid: str, prefix: str) -> None:
+            for name, entry in self.objects.get_tree(tree_oid).items():
+                p = f"{prefix}{name}"
+                if entry["t"] == "tree":
+                    walk(entry["oid"], p + "/")
+                else:
+                    flat[p] = entry
+
+        if commit["tree"]:
+            walk(commit["tree"], "")
+        return flat
+
+    def _write_nested(self, flat: dict[str, dict]) -> str | None:
+        """Build hierarchical tree objects from a flat path map."""
+        if not flat:
+            return None
+        root: dict = {}
+        for path, entry in flat.items():
+            parts = path.split("/")
+            node = root
+            for part in parts[:-1]:
+                node = node.setdefault(part, {})
+                if not isinstance(node, dict) or "t" in node:
+                    raise ConflictError(f"file/directory conflict at {part} in {path}")
+            node[parts[-1]] = {"_entry": entry}
+
+        def emit(node: dict) -> str:
+            entries = {}
+            for name, child in sorted(node.items()):
+                if "_entry" in child:
+                    entries[name] = child["_entry"]
+                else:
+                    entries[name] = {"t": "tree", "oid": emit(child)}
+            return self.objects.put_tree(entries)
+
+        return emit(root)
+
+    # -- staging/saving ----------------------------------------------------
+    def _is_ignored(self, relpath: str) -> bool:
+        return relpath == REPRO_DIR or relpath.startswith(REPRO_DIR + "/")
+
+    def _should_annex(self, relpath: str, size: int) -> bool:
+        if size >= self.config["annex_threshold"]:
+            return True
+        return any(
+            fnmatch.fnmatch(relpath, pat) for pat in self.config.get("annex_patterns", ())
+        )
+
+    def _hash_working_file(self, relpath: str) -> dict:
+        abspath = os.path.join(self.root, relpath)
+        data = self.fs.read_bytes(abspath)
+        key = parse_pointer(data)
+        if key is not None:  # pointer file: content not present, key known
+            return {"t": "annex", "key": key}
+        if self._should_annex(relpath, len(data)):
+            key = annex_key_for_bytes(data)
+            self.annex.put_bytes(key, data)
+            return {"t": "annex", "key": key}
+        return {"t": "blob", "oid": self.objects.put_blob(data)}
+
+    def _expand_paths(self, paths) -> list[str]:
+        out: list[str] = []
+        for p in paths:
+            rel = os.path.relpath(os.path.join(self.root, p), self.root)
+            if rel.startswith(".."):
+                raise ValueError(f"path escapes repository: {p}")
+            abspath = os.path.join(self.root, rel)
+            if os.path.isdir(abspath):
+                for dirpath, dirnames, files in os.walk(abspath):
+                    dirnames[:] = [d for d in dirnames if d != REPRO_DIR]
+                    for f in sorted(files):
+                        r = os.path.relpath(os.path.join(dirpath, f), self.root)
+                        if not self._is_ignored(r):
+                            out.append(r)
+            elif os.path.exists(abspath):
+                if not self._is_ignored(rel):
+                    out.append(rel)
+            else:
+                raise FileNotFoundError(f"no such path: {p}")
+        return out
+
+    def save(
+        self,
+        paths=None,
+        message: str = "",
+        parents: list[str] | None = None,
+        author: str = "repro",
+        allow_empty: bool = False,
+        branch: str | None = None,
+    ) -> str:
+        """Stage ``paths`` (files or directories; None = whole worktree) on top
+        of the current tree and commit. Returns the commit oid."""
+        branch = branch or self.current_branch()
+        base = self.branch_head(branch)
+        flat = self.tree_of(base) if base else {}
+        before = dict(flat)
+        if paths is None:
+            paths = [p for p in os.listdir(self.root) if not self._is_ignored(p)]
+            # full save: drop tracked files that disappeared from the worktree
+            expanded = set(self._expand_paths(paths))
+            for known in list(flat):
+                if known not in expanded and not os.path.exists(
+                    os.path.join(self.root, known)
+                ):
+                    del flat[known]
+            for rel in sorted(expanded):
+                flat[rel] = self._hash_working_file(rel)
+        else:
+            for rel in self._expand_paths(paths):
+                flat[rel] = self._hash_working_file(rel)
+        if flat == before and base is not None and not allow_empty:
+            return base  # nothing changed -> no commit (paper §3 step 8)
+        tree_oid = self._write_nested(flat)
+        commit = {
+            "tree": tree_oid or "",
+            "parents": [base] if base else [],
+            "author": author,
+            "timestamp": time.time(),
+            "message": message,
+        }
+        if parents is not None:
+            commit["parents"] = parents
+        oid = self.objects.put_commit(commit)
+        self.set_branch(branch, oid)
+        return oid
+
+    # -- checkout ----------------------------------------------------------
+    def checkout(self, commitish: str, paths: list[str] | None = None) -> None:
+        """Materialize files from a commit into the worktree. Annexed files are
+        written as content when present in any store, else as pointer files."""
+        oid = self.resolve(commitish)
+        flat = self.tree_of(oid)
+        targets = flat if paths is None else {
+            p: e
+            for p, e in flat.items()
+            if any(p == t or p.startswith(t.rstrip("/") + "/") for t in paths)
+        }
+        for relpath, entry in targets.items():
+            abspath = os.path.join(self.root, relpath)
+            if entry["t"] == "blob":
+                self.fs.write_bytes(abspath, self.objects.get_blob(entry["oid"]))
+            else:
+                # git-annex semantics: only *local* content is materialized;
+                # remote content needs an explicit annex_get.
+                key = entry["key"]
+                if self.annex.has(key):
+                    self.annex.copy_to(key, abspath)
+                else:
+                    self.fs.write_bytes(abspath, make_pointer(key))
+
+    # -- history ------------------------------------------------------------
+    def log(self, start: str | None = None):
+        """Yield (oid, commit) from ``start`` (default HEAD) over all parents,
+        newest-first by timestamp."""
+        start = start or self.head_commit()
+        if start is None:
+            return
+        seen: set[str] = set()
+        frontier = [self.resolve(start)]
+        commits = []
+        while frontier:
+            oid = frontier.pop()
+            if oid in seen:
+                continue
+            seen.add(oid)
+            c = self.objects.get_commit(oid)
+            commits.append((oid, c))
+            frontier.extend(c["parents"])
+        commits.sort(key=lambda oc: -oc[1]["timestamp"])
+        yield from commits
+
+    # -- merge ---------------------------------------------------------------
+    def merge_octopus(
+        self, branches: list[str], message: str = "", author: str = "repro"
+    ) -> str:
+        """N-parent merge (paper §5.8 / Fig. 6). Union of trees; a path changed
+        to different contents by different parents is a conflict — concurrent
+        jobs with overlapping outputs were already rejected at schedule time,
+        so this only fires on misuse."""
+        branch = self.current_branch()
+        base_oid = self.head_commit()
+        base = self.tree_of(base_oid) if base_oid else {}
+        merged = dict(base)
+        provenance: dict[str, str] = {}
+        parent_oids = [base_oid] if base_oid else []
+        for b in branches:
+            b_oid = self.resolve(b)
+            parent_oids.append(b_oid)
+            for path, entry in self.tree_of(b_oid).items():
+                if path in base and base[path] == entry:
+                    continue
+                if path in provenance and merged.get(path) != entry:
+                    raise ConflictError(
+                        f"octopus conflict on {path!r} between {provenance[path]} and {b}"
+                    )
+                merged[path] = entry
+                provenance[path] = b
+        tree_oid = self._write_nested(merged)
+        commit = {
+            "tree": tree_oid or "",
+            "parents": parent_oids,
+            "author": author,
+            "timestamp": time.time(),
+            "message": message or f"octopus merge of {len(branches)} branches",
+        }
+        oid = self.objects.put_commit(commit)
+        self.set_branch(branch, oid)
+        self.checkout(oid)
+        return oid
+
+    # -- annex ops -------------------------------------------------------------
+    def _find_store(self, key: str) -> AnnexStore | None:
+        for store in [self.annex, *self._remotes]:
+            if store.has(key):
+                return store
+        return None
+
+    def whereis(self, key: str) -> list[str]:
+        return [s.name for s in [self.annex, *self._remotes] if s.has(key)]
+
+    def annex_key_at(self, path: str, commitish: str | None = None) -> str:
+        oid = self.resolve(commitish) if commitish else self.head_commit()
+        if oid is None:
+            raise KeyError("empty repository")
+        entry = self.tree_of(oid).get(path)
+        if entry is None or entry["t"] != "annex":
+            raise KeyError(f"{path} is not an annexed file")
+        return entry["key"]
+
+    def annex_get(self, path: str) -> bool:
+        """Ensure the worktree file at ``path`` has real content (datalad get).
+        Returns True if a fetch occurred."""
+        abspath = os.path.join(self.root, path)
+        data = self.fs.read_bytes(abspath)
+        key = parse_pointer(data)
+        if key is None:
+            return False  # already content
+        store = self._find_store(key)
+        if store is None:
+            raise FileNotFoundError(f"no store has {key} for {path}")
+        content = store.read(key)
+        self.annex.put_bytes(key, content)  # cache locally
+        self.fs.write_bytes(abspath, content)
+        return True
+
+    def annex_drop(self, path: str, force: bool = False) -> None:
+        """Replace worktree content with a pointer and drop the local copy.
+        Refuses to drop the last copy unless forced (paper §2.6)."""
+        abspath = os.path.join(self.root, path)
+        data = self.fs.read_bytes(abspath)
+        key = parse_pointer(data)
+        if key is None:
+            key = annex_key_for_bytes(data)
+        others = [s for s in self._remotes if s.has(key)]
+        if not others and not force:
+            raise RuntimeError(
+                f"refusing to drop last copy of {path} ({key}); use force=True"
+            )
+        self.fs.write_bytes(abspath, make_pointer(key))
+        if self.annex.has(key):
+            self.annex.drop(key)
+
+    def annex_push(self, store: AnnexStore, keys: list[str] | None = None) -> int:
+        """Push local annex content to another store (datalad push). Returns
+        number of keys transferred."""
+        n = 0
+        for key in keys if keys is not None else self.annex.keys():
+            if self.annex.has(key) and not store.has(key):
+                store.put_bytes(key, self.annex.read(key))
+                n += 1
+        return n
+
+    # -- lock/unlock -------------------------------------------------------------
+    def unlock(self, path: str) -> None:
+        abspath = os.path.join(self.root, path)
+        if os.path.exists(abspath):
+            self.fs.chmod_readonly(abspath, readonly=False)
+
+    def lock(self, path: str) -> None:
+        abspath = os.path.join(self.root, path)
+        if os.path.exists(abspath):
+            self.fs.chmod_readonly(abspath, readonly=True)

@@ -1,0 +1,3 @@
+from .tokens import RepoTokenDataset, SyntheticTokens
+
+__all__ = ["RepoTokenDataset", "SyntheticTokens"]

@@ -1,0 +1,96 @@
+"""Deterministic, shardable, checkpointable token pipelines.
+
+Determinism is what makes training jobs *machine-actionably reproducible*
+(the paper's core property): a batch is a pure function of
+``(seed, step, shard)`` via counter-based Philox, so the pipeline "state" is
+just the integer step — trivially checkpointable, resumable, and elastic
+(re-sharding on resume changes ``shard_count`` without changing the global
+batch content, because shards slice a canonical global batch).
+
+``RepoTokenDataset`` reads token shards committed as annexed ``.npy`` files
+in a version-store repository — the paper's §7 scenario where "the current
+subset of the data collection can be identified by a git commit hash": the
+dataset is constructed *at a commit*, and its record (file list + hashes) is
+what training jobs put in their reproducibility records.
+"""
+from __future__ import annotations
+
+import io
+import os
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SyntheticTokens:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def global_batch_at(self, step: int) -> np.ndarray:
+        """The canonical global batch for ``step``: [global_batch, seq_len]."""
+        bit = np.random.Generator(
+            np.random.Philox(key=self.seed, counter=[0, 0, 0, step])
+        )
+        return bit.integers(
+            0, self.vocab_size, size=(self.global_batch, self.seq_len), dtype=np.int32
+        )
+
+    def shard_batch_at(self, step: int, shard: int, shard_count: int) -> np.ndarray:
+        g = self.global_batch_at(step)
+        assert self.global_batch % shard_count == 0
+        per = self.global_batch // shard_count
+        return g[shard * per : (shard + 1) * per]
+
+
+class RepoTokenDataset:
+    """Token shards stored as annexed .npy files in a Repository, pinned to a
+    commit. Iteration order is deterministic given (commit, seed)."""
+
+    def __init__(self, repo, commit: str, prefix: str = "data/tokens",
+                 seq_len: int = 256, global_batch: int = 8, seed: int = 0):
+        self.repo = repo
+        self.commit = repo.resolve(commit)
+        self.prefix = prefix.rstrip("/")
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.seed = seed
+        tree = repo.tree_of(self.commit)
+        self.files = sorted(
+            p for p in tree if p.startswith(self.prefix + "/") and p.endswith(".npy")
+        )
+        if not self.files:
+            raise FileNotFoundError(f"no token shards under {prefix} at {commit[:12]}")
+        self._tokens = None
+
+    @property
+    def manifest(self) -> dict:
+        """What goes into the reproducibility record: the exact inputs."""
+        return {"data_commit": self.commit, "files": self.files}
+
+    def _load(self) -> np.ndarray:
+        if self._tokens is None:
+            parts = []
+            for f in self.files:
+                self.repo.annex_get(f)
+                with open(os.path.join(self.repo.root, f), "rb") as fh:
+                    parts.append(np.load(io.BytesIO(fh.read())).ravel())
+            self._tokens = np.concatenate(parts).astype(np.int32)
+        return self._tokens
+
+    def global_batch_at(self, step: int) -> np.ndarray:
+        toks = self._load()
+        n_seq = len(toks) // self.seq_len
+        usable = toks[: n_seq * self.seq_len].reshape(n_seq, self.seq_len)
+        rng = np.random.Generator(
+            np.random.Philox(key=self.seed, counter=[0, 0, 0, step])
+        )
+        idx = rng.integers(0, n_seq, size=self.global_batch)
+        return usable[idx]
+
+    def shard_batch_at(self, step: int, shard: int, shard_count: int) -> np.ndarray:
+        g = self.global_batch_at(step)
+        per = self.global_batch // shard_count
+        return g[shard * per : (shard + 1) * per]

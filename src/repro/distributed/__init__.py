@@ -1,0 +1,3 @@
+from .sharding import ShardingRules, make_rules, constrain
+
+__all__ = ["ShardingRules", "make_rules", "constrain"]

@@ -1,0 +1,157 @@
+"""Sharding rules for the production meshes.
+
+The assignment fixes the meshes: ``(16,16) -> ("data","model")`` single-pod
+and ``(2,16,16) -> ("pod","data","model")`` multi-pod. Data parallelism maps
+to ``("pod","data")`` when a pod axis exists; tensor parallelism to
+``"model"``. Rules are *logical*: model code asks for e.g. ``rules.residual``
+and gets a PartitionSpec valid for whichever mesh is active. When no mesh is
+active (single-device smoke tests) ``rules`` is None and all constraints are
+no-ops.
+
+Baseline layout (hillclimbed in EXPERIMENTS.md §Perf):
+  - residual stream [B, S, D]: P(dp, "model", None) — Megatron-style sequence
+    parallelism so per-layer saved activations are 1/|model| (toggle:
+    ``seq_shard_residual``),
+  - attention/FFN weights: fused head & ff dims over "model",
+  - embedding/lm_head: d_model-local, vocab over "model" (loss uses one-hot
+    contraction so vocab-sharded logits never gather),
+  - MoE expert weights: experts over "data" (ZeRO-3-style gather at use),
+    ff dim over "model",
+  - decode KV caches: batch over dp, head_dim over "model" (cache update
+    stays shard-local; the score all-reduce is what §Perf attacks),
+  - optimizer moments: sharded exactly like their parameters.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh = field(repr=False)
+    dp: tuple[str, ...] = ()  # data-parallel axes, e.g. ("pod", "data")
+    tp: str | None = None  # tensor-parallel axis name
+    seq_shard_residual: bool = True
+    kv_shard: str = "head_dim"  # 'head_dim' | 'seq' — KV-cache tp placement
+    expert_axis: str = "data"  # 'data' (ZeRO gather) | 'model' (EP all-to-all)
+    fsdp: bool = False  # ZeRO-3: second weight dim over 'data' (gather at use)
+
+    def _dp(self):
+        if not self.dp:
+            return None
+        return self.dp if len(self.dp) > 1 else self.dp[0]
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def constrain(self, x, spec: P):
+        return jax.lax.with_sharding_constraint(x, self.sharding(spec))
+
+    # ---- activations -------------------------------------------------
+    @property
+    def batch(self) -> P:  # [B, S]
+        return P(self._dp())
+
+    @property
+    def residual(self) -> P:  # [B, S, D]
+        seq = self.tp if self.seq_shard_residual else None
+        return P(self._dp(), seq, None)
+
+    @property
+    def heads(self) -> P:  # [B, S, H, Dh]
+        return P(self._dp(), None, self.tp, None)
+
+    # ---- decode-time state --------------------------------------------
+    def kv_cache(self, batch_shardable: bool) -> P:
+        """[B, S_cache, KV, Dh]: batch over dp when B >= |dp|; the tp axis
+        goes on head_dim (local single-token writes; decode-friendly) or on
+        the sequence dim (local full-prefill writes; avoids the per-layer
+        cache replication GSPMD falls back to when resharding the projection
+        output into a head_dim-sharded buffer — see EXPERIMENTS.md §Perf)."""
+        dp = self._dp() if batch_shardable else None
+        if self.kv_shard == "seq":
+            return P(dp, self.tp, None, None)
+        return P(dp, None, None, self.tp)
+
+    def ssm_state(self, batch_shardable: bool) -> P:
+        """Leading channel-ish dim over tp: [B, H, Dh, Dh] / [B, Di, St]."""
+        return P(self._dp() if batch_shardable else None, self.tp)
+
+    # ---- params ----------------------------------------------------------
+    def _fsdp_axis(self):
+        return "data" if (self.fsdp and "data" in self.dp) else None
+
+    @property
+    def w_in(self) -> P:  # [D, fused_out] : fused dim over tp (+ D over data)
+        return P(self._fsdp_axis(), self.tp)
+
+    @property
+    def w_out(self) -> P:  # [fused_in, D]
+        return P(self.tp, self._fsdp_axis())
+
+    def _data_size(self) -> int:
+        return self.mesh.shape.get("data", 1) if "data" in self.dp else 1
+
+    def w_expert_in(self, n_experts: int) -> P:  # [E, D, F]
+        """expert_axis='data': experts over 'data' (ZeRO-3-style gather at
+        use) when the count divides, else d_model over 'data'.
+        expert_axis='model': expert parallelism — experts over the tp axis,
+        tokens move via all-to-all on the (much smaller) dispatch tensors
+        instead of gathering expert weights (EXPERIMENTS.md §Perf)."""
+        data = "data" if "data" in self.dp else None
+        if self.expert_axis == "model" and self.tp:
+            tp_size = self.mesh.shape.get(self.tp, 1)
+            if n_experts % tp_size == 0:
+                return P(self.tp, data, None)
+        if n_experts % max(1, self._data_size()) == 0:
+            return P(data, None, self.tp)
+        return P(None, data, self.tp)
+
+    def w_expert_out(self, n_experts: int) -> P:  # [E, F, D]
+        data = "data" if "data" in self.dp else None
+        if self.expert_axis == "model" and self.tp:
+            tp_size = self.mesh.shape.get(self.tp, 1)
+            if n_experts % tp_size == 0:
+                return P(self.tp, None, data)
+        if n_experts % max(1, self._data_size()) == 0:
+            return P(data, self.tp, None)
+        return P(None, self.tp, data)
+
+    @property
+    def embed(self) -> P:  # [V, D] — row-gather local, D-sharded output
+        return P(self._fsdp_axis(), self.tp)
+
+    @property
+    def lm_head(self) -> P:  # [D, V] — vocab-sharded logits
+        return P(self._fsdp_axis(), self.tp)
+
+    @property
+    def replicated(self) -> P:
+        return P()
+
+
+def make_rules(mesh: Mesh | None, seq_shard_residual: bool = True,
+               kv_shard: str = "head_dim", expert_axis: str = "data",
+               fsdp: bool = False) -> ShardingRules | None:
+    if mesh is None:
+        return None
+    axes = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    tp = "model" if "model" in axes else None
+    return ShardingRules(mesh=mesh, dp=dp, tp=tp,
+                         seq_shard_residual=seq_shard_residual,
+                         kv_shard=kv_shard, expert_axis=expert_axis, fsdp=fsdp)
+
+
+def constrain(x, rules: ShardingRules | None, spec_name: str, *args):
+    """No-op without rules; otherwise apply the named rule's constraint."""
+    if rules is None:
+        return x
+    spec = getattr(rules, spec_name)
+    if callable(spec):
+        spec = spec(*args)
+    return rules.constrain(x, spec)

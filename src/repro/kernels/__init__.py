@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical mixers.
+
+Each kernel ships three layers (see EXAMPLE.md convention):
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling,
+  ops.py    — jit-able wrappers (layout + backend dispatch + custom_vjp),
+  ref.py    — pure-jnp oracles the tests sweep against.
+"""
+from . import ops, ref
+from .ops import flash_attention, mamba_scan, rwkv6
+
+__all__ = ["ops", "ref", "flash_attention", "mamba_scan", "rwkv6"]

@@ -1,0 +1,111 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Layout adaptation ([B,S,H,Dh] model convention <-> [B,H,S,Dh] kernel
+convention), backend dispatch (``interpret=True`` automatically off-TPU so
+the kernels execute correctly on CPU), and custom_vjp wiring: forward runs
+the kernel, backward rematerializes through the pure-jnp reference — exact
+same math, so gradients are correct while the hot forward path uses the
+hand-tiled kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_bhsd
+from .mamba import mamba_scan_bsd
+from .rwkv6 import rwkv6_bhsd
+
+
+def _interpret(flag: bool | None) -> bool:
+    if flag is not None:
+        return flag
+    return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------------------ flash attention
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal=True, window=None, interpret=None):
+    """q [B,Sq,H,Dh]; k/v [B,Sk,KV,Dh] -> [B,Sq,H,Dh]."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    bq = _pick_block(q.shape[1])
+    bk = _pick_block(k.shape[1])
+    out = flash_attention_bhsd(
+        qt, kt, vt, causal=causal, window=window,
+        block_q=bq, block_k=bk, interpret=_interpret(interpret),
+    )
+    return jnp.swapaxes(out, 1, 2)
+
+
+def _pick_block(s: int, target: int = 256) -> int:
+    b = min(target, s)
+    while s % b:
+        b //= 2
+    return max(b, 1)
+
+
+def _fa_fwd(q, k, v, causal, window, interpret):
+    return flash_attention(q, k, v, causal, window, interpret), (q, k, v)
+
+
+def _fa_bwd(causal, window, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, causal, window),
+                     q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ------------------------------------------------------------------- rwkv6
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def rwkv6(r, k, v, logw, u, state0, interpret=None):
+    """All inputs [B,S,H,Dh] (u: [H,Dh]; state0: [B,H,Dh,Dh] fp32).
+    Returns (out [B,S,H,Dh], state [B,H,Dh,Dh])."""
+    args = [jnp.swapaxes(t, 1, 2) for t in (r, k, v, logw)]
+    out, state = rwkv6_bhsd(*args, u, state0.astype(jnp.float32),
+                            interpret=_interpret(interpret))
+    return jnp.swapaxes(out, 1, 2), state
+
+
+def _rwkv_fwd(r, k, v, logw, u, state0, interpret):
+    return rwkv6(r, k, v, logw, u, state0, interpret), (r, k, v, logw, u, state0)
+
+
+def _rwkv_bwd(interpret, res, g):
+    r, k, v, logw, u, state0 = res
+    _, vjp = jax.vjp(
+        lambda *a: ref.rwkv6_ref(*a), r, k, v, logw, u, state0
+    )
+    return vjp(g)
+
+
+rwkv6.defvjp(_rwkv_fwd, _rwkv_bwd)
+
+
+# ------------------------------------------------------------------- mamba
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def mamba_scan(u, dt, A, B_, C_, h0, interpret=None):
+    """u/dt [B,S,Di]; A [Di,St]; B_/C_ [B,S,St]; h0 [B,Di,St] fp32.
+    Returns (y [B,S,Di], h [B,Di,St])."""
+    return mamba_scan_bsd(u, dt, A, B_, C_, h0.astype(jnp.float32),
+                          interpret=_interpret(interpret))
+
+
+def _mamba_fwd(u, dt, A, B_, C_, h0, interpret):
+    return mamba_scan(u, dt, A, B_, C_, h0, interpret), (u, dt, A, B_, C_, h0)
+
+
+def _mamba_bwd(interpret, res, g):
+    u, dt, A, B_, C_, h0 = res
+    _, vjp = jax.vjp(lambda *a: ref.mamba_ref(*a), u, dt, A, B_, C_, h0)
+    return vjp(g)
+
+
+mamba_scan.defvjp(_mamba_fwd, _mamba_bwd)

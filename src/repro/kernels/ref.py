@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel (self-contained, no model deps).
+
+These are the ground truth the kernel tests sweep against; they are also the
+math-identical fallbacks the model uses on non-TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,  # [B, Sq, H, Dh]
+    k: jax.Array,  # [B, Sk, KV, Dh]
+    v: jax.Array,  # [B, Sk, KV, Dh]
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    """Direct softmax attention with GQA head repetition."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    if kv != h:
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d**-0.5)
+    if causal:
+        rows = jnp.arange(sq)[:, None]
+        cols = jnp.arange(k.shape[1])[None, :]
+        mask = cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_ref(
+    r: jax.Array,  # [B, S, H, Dh]
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,  # [B, S, H, Dh] (negative log decays)
+    u: jax.Array,  # [H, Dh]
+    state0: jax.Array | None = None,  # [B, H, Dh, Dh] fp32
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential WKV recurrence:
+    out_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ); S_t = diag(w_t) S_{t-1} + k_t v_tᵀ."""
+    b, s, h, dh = r.shape
+    S = (
+        jnp.zeros((b, h, dh, dh), jnp.float32) if state0 is None
+        else state0.astype(jnp.float32)
+    )
+
+    def step(S, inp):
+        r_t, k_t, v_t, lw_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        out = jnp.einsum("bhd,bhde->bhe", r_t, S + u[None, :, :, None] * kv)
+        S = jnp.exp(lw_t)[..., :, None] * S + kv
+        return S, out
+
+    seq = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, logw))
+    S, out = jax.lax.scan(step, S, seq)
+    return jnp.moveaxis(out, 0, 1).astype(r.dtype), S
+
+
+def mamba_ref(
+    u: jax.Array,  # [B, S, Di]
+    dt: jax.Array,  # [B, S, Di]
+    A: jax.Array,  # [Di, St]
+    B_: jax.Array,  # [B, S, St]
+    C_: jax.Array,  # [B, S, St]
+    h0: jax.Array | None = None,  # [B, Di, St] fp32
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential selective scan:
+    h_t = exp(dt_t A) h_{t-1} + (dt_t u_t) B_t; y_t = h_t · C_t."""
+    b, s, di = u.shape
+    st = A.shape[-1]
+    h = jnp.zeros((b, di, st), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp
+        a = jnp.exp(dt_t[..., None] * A[None].astype(jnp.float32))
+        h = a * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        return h, jnp.einsum("bds,bs->bd", h, c_t)
+
+    seq = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (u, dt, B_, C_))
+    h, ys = jax.lax.scan(step, h, seq)
+    return jnp.moveaxis(ys, 0, 1).astype(u.dtype), h

@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks the device count on
+# first init, and the production meshes need 512 placeholder host devices.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape) cell, on the single-pod 16x16 mesh
+AND the 2x16x16 multi-pod mesh:
+
+    with mesh:
+        lowered  = jax.jit(step, ...).lower(**input_specs(arch, shape))
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())   # proves it fits
+        print(compiled.cost_analysis())     # FLOPs/bytes for the roofline
+
+plus collective-byte extraction from the compiled HLO. Results are cached
+as JSON under ``results_dryrun/`` for launch/roofline.py and EXPERIMENTS.md.
+
+Usage:
+    python -m repro.launch.dryrun --arch internlm2_20b --shape train_4k
+    python -m repro.launch.dryrun --all [--mesh single|multi|both]
+    python -m repro.launch.dryrun --arch X --shape Y --tag blah \
+        --override seq_shard_residual=False    # hillclimb knobs
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from .. import configs
+from ..distributed.sharding import make_rules
+from ..train.steps import make_decode_step, make_prefill_step, make_train_step
+from . import specs
+from .hlo_stats import collective_stats, op_histogram
+from .mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results_dryrun")
+
+
+def _parse_override(s: str):
+    key, _, val = s.partition("=")
+    for cast in (int, float):
+        try:
+            return key, cast(val)
+        except ValueError:
+            pass
+    if val in ("True", "False"):
+        return key, val == "True"
+    return key, val
+
+
+def _lower_cell(cfg, shape, mesh, rules):
+    """Lower+compile one module for (cfg, shape). Returns (compiled, timings)."""
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            opt = specs.make_optimizer(cfg)
+            params, opt_state = specs.model_state_specs(cfg, mesh, rules, True)
+            batch = specs.batch_specs(cfg, shape, mesh, rules)
+            fn = make_train_step(cfg, rules, opt)
+            lowered = jax.jit(fn, donate_argnums=(0, 1)).lower(params, opt_state, batch)
+        elif shape.kind == "prefill":
+            params, _ = specs.model_state_specs(cfg, mesh, rules, False)
+            batch = specs.batch_specs(cfg, shape, mesh, rules)
+            fn = make_prefill_step(cfg, rules, cache_len=shape.seq_len)
+            lowered = jax.jit(fn).lower(params, batch)
+        else:  # decode
+            params, _ = specs.model_state_specs(cfg, mesh, rules, False)
+            caches, token, pos = specs.decode_specs(cfg, shape, mesh, rules)
+            fn = make_decode_step(cfg, rules)
+            lowered = jax.jit(fn, donate_argnums=(1,)).lower(params, caches, token, pos)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return compiled, t_lower, t_compile
+
+
+def _cost_stats(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    colls = collective_stats(compiled.as_text())
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+        "coll": colls["total_bytes"],
+        "coll_by_type": colls["by_type"],
+        "coll_count": colls["count"],
+    }
+
+
+def _extrapolate(s1: dict, s2: dict, r: int) -> dict:
+    """Linear trip-count extrapolation: F(R) = F1 + (R-1)(F2-F1).
+
+    XLA's cost analysis (and the HLO text) count a while-loop body once, so
+    the scanned-layers module under-reports per-layer work. Lowering the
+    SAME step at 1 and 2 pattern-repeats gives the per-repeat increment
+    exactly; everything outside the loop (embedding, lm_head, optimizer,
+    gradient reductions) sits in the intercept."""
+    out = {}
+    for key in ("flops", "bytes", "coll"):
+        out[key] = s1[key] + (r - 1) * (s2[key] - s1[key])
+    by = {}
+    for k in set(s1["coll_by_type"]) | set(s2["coll_by_type"]):
+        a, b = s1["coll_by_type"].get(k, 0), s2["coll_by_type"].get(k, 0)
+        by[k] = a + (r - 1) * (b - a)
+    out["coll_by_type"] = by
+    out["coll_count"] = s1["coll_count"] + (r - 1) * (
+        s2["coll_count"] - s1["coll_count"]
+    )
+    return out
+
+
+def _recurrence_correction(cfg, shape) -> float:
+    """Analytic FLOPs for the *inner* sequential recurrences (RWKV6 chunked
+    WKV, Mamba selective scan) whose loop bodies XLA counts once. These are
+    elementwise/VPU terms, small next to the MXU matmul flops, but we add
+    them so SSM-family compute terms aren't understated. Documented in
+    EXPERIMENTS.md §Roofline."""
+    if shape.kind == "decode":
+        return 0.0  # single-step recurrences lower loop-free
+    B, S = shape.global_batch, shape.seq_len
+    H, Dh = cfg.n_heads, cfg.head_dim
+    Di, St = cfg.mamba_d_inner, cfg.mamba.d_state
+    L = 16  # RWKV_CHUNK
+    per_pattern = 0.0
+    for kind in cfg.pattern:
+        if kind.mixer == "rwkv6":
+            per_pattern += B * H * S * (4 * L * Dh + 4 * Dh * Dh)
+        elif kind.mixer == "mamba":
+            per_pattern += 6.0 * B * S * Di * St
+    fwd = per_pattern * cfg.n_repeats
+    return fwd * (3.0 if shape.kind == "train" else 1.0)  # bwd ~ 2x fwd
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None, keep_hlo: bool = False) -> dict:
+    shape = configs.SHAPES[shape_name]
+    cfg = configs.get(arch)
+    if overrides:
+        overrides = dict(overrides)
+        cap = overrides.pop("capacity_factor", None)
+        if cap is not None and cfg.moe is not None:
+            import dataclasses
+            cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=cap))
+        if overrides:
+            cfg = cfg.replace(**overrides)
+    runnable, reason = configs.cell_runnable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": 512 if multi_pod else 256,
+        "kind": shape.kind, "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "overrides": overrides or {},
+        "status": "skipped" if not runnable else "pending",
+        "skip_reason": reason,
+    }
+    if not runnable:
+        return cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh, seq_shard_residual=cfg.seq_shard_residual,
+                       kv_shard=cfg.decode_kv_shard,
+                       expert_axis=cfg.moe_expert_axis, fsdp=cfg.fsdp_params)
+
+    # 1) the REAL module: scanned layers — compile proof + memory analysis
+    compiled, t_lower, t_compile = _lower_cell(cfg, shape, mesh, rules)
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+
+    # 2) cost modules: 1- and 2-repeat depth, unrolled attention chunks ->
+    #    exact per-repeat cost increments, linearly extrapolated to full depth
+    p = len(cfg.pattern)
+    r = cfg.n_repeats
+    enc_per_rep = max(1, cfg.n_enc_layers // r) if cfg.enc_dec else 0
+    cost_cfg = cfg.replace(attn_unroll_chunks=True, scan_layers=False)
+    if r >= 2:
+        c1 = cost_cfg.replace(n_layers=p, n_enc_layers=enc_per_rep)
+        c2 = cost_cfg.replace(n_layers=2 * p, n_enc_layers=2 * enc_per_rep)
+        s1 = _cost_stats(_lower_cell(c1, shape, mesh, rules)[0])
+        s2 = _cost_stats(_lower_cell(c2, shape, mesh, rules)[0])
+        stats = _extrapolate(s1, s2, r)
+    else:
+        stats = _cost_stats(_lower_cell(cost_cfg, shape, mesh, rules)[0])
+    rec_fix = _recurrence_correction(cfg, shape) / cell["chips"]
+
+    n = cfg.param_counts()
+    cell.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        # per-device numbers (XLA reports the per-replica SPMD module)
+        flops_per_device=stats["flops"] + rec_fix,
+        bytes_per_device=stats["bytes"],
+        collective_bytes_per_device=stats["coll"],
+        collective_by_type=stats["coll_by_type"],
+        collective_count=stats["coll_count"],
+        recurrence_flops_correction=rec_fix,
+        memory={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        params_total=n["total"],
+        params_active=n["active"],
+        op_histogram=op_histogram(hlo),
+    )
+    if keep_hlo:
+        cell["hlo_path"] = os.path.join(
+            RESULTS_DIR, f"{arch}.{shape_name}.{mesh_name}.hlo.txt"
+        )
+        with open(cell["hlo_path"], "w") as f:
+            f.write(hlo)
+    return cell
+
+
+def cell_path(arch, shape_name, mesh_name, tag=""):
+    suffix = f".{tag}" if tag else ""
+    return os.path.join(RESULTS_DIR, f"{arch}.{shape_name}.{mesh_name}{suffix}.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_IDS)
+    ap.add_argument("--shape", choices=list(configs.SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for result files (hillclimb runs)")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field overrides, e.g. seq_shard_residual=False")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    args = ap.parse_args()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    overrides = dict(_parse_override(s) for s in args.override) or None
+
+    cells = []
+    archs = configs.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(configs.SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                cells.append((arch, shape, multi))
+
+    failures = 0
+    for arch, shape, multi in cells:
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        out = cell_path(arch, shape, mesh_name, args.tag)
+        if os.path.exists(out) and not args.force:
+            print(f"[cached] {arch} x {shape} x {mesh_name}")
+            continue
+        print(f"[dryrun] {arch} x {shape} x {mesh_name} ...", flush=True)
+        try:
+            cell = run_cell(arch, shape, multi, overrides, args.keep_hlo)
+        except Exception as e:  # a failure here is a bug in the system
+            failures += 1
+            cell = {
+                "arch": arch, "shape": shape, "mesh": mesh_name,
+                "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:],
+            }
+            print(f"  FAILED: {e}")
+        with open(out, "w") as f:
+            json.dump(cell, f, indent=1, sort_keys=True)
+        if cell["status"] == "ok":
+            print(
+                f"  ok: compile={cell['compile_s']}s "
+                f"flops/dev={cell['flops_per_device']:.3e} "
+                f"coll/dev={cell['collective_bytes_per_device']:.3e}B "
+                f"temp={cell['memory']['temp_bytes']/2**30:.2f}GiB"
+            )
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

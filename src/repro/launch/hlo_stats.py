@@ -1,0 +1,107 @@
+"""Collective-traffic extraction from compiled HLO text.
+
+``cost_analysis`` has no collective term, so we parse the (post-SPMD,
+per-device) HLO: for every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op we sum the *operand* sizes — the bytes a
+device injects into the interconnect for that op. Compiled HLO references
+operands by name, so we first build a name -> output-shape-bytes map over
+all instructions, then resolve the collective operands. Start/done pairs
+(async collectives) are counted once via the start op.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*(.+)$")
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)\[([0-9,]*)\]"
+)
+_CALL_RE = re.compile(
+    r"(all-gather-start|all-gather-done|all-gather|"
+    r"all-reduce-start|all-reduce-done|all-reduce|"
+    r"reduce-scatter|all-to-all|"
+    r"collective-permute-start|collective-permute-done|collective-permute)"
+    r"\(([^)]*)\)"
+)
+_OPERAND_RE = re.compile(r"%?([\w.-]+)")
+
+
+def _shape_bytes_of(type_str: str) -> int:
+    """Sum byte sizes of every array shape appearing in a type string
+    (handles tuples like (f32[8,128], f32[8,128]))."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        n = 1
+        dims = m.group(2)
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Returns {'total_bytes': int, 'by_type': {op: bytes}, 'count': int}.
+
+    Operand bytes per collective, summed over the whole module (loop bodies
+    appear once — see dryrun.py's trip-count extrapolation).
+    """
+    # pass 1: name -> output type string
+    shapes: dict[str, str] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m:
+            name, rhs = m.group(1), m.group(2)
+            # output type is the prefix of rhs up to the op name
+            shapes[name] = rhs.split(" ")[0] if "[" in rhs.split(" ")[0] else rhs[:200]
+
+    by_type: dict[str, int] = defaultdict(int)
+    count = 0
+    for line in lines:
+        cm = _CALL_RE.search(line)
+        if cm is None:
+            continue
+        op, operand_str = cm.group(1), cm.group(2)
+        if op.endswith("-done"):
+            continue
+        base = op.replace("-start", "")
+        nbytes = 0
+        # operand shapes may be inline (typed form) or by-name (compiled form)
+        inline = _shape_bytes_of(operand_str)
+        if inline:
+            nbytes = inline
+        else:
+            for om in _OPERAND_RE.finditer(operand_str):
+                ref = shapes.get(om.group(1))
+                if ref:
+                    nbytes += _shape_bytes_of(ref)
+        by_type[base] += nbytes
+        count += 1
+    return {
+        "total_bytes": int(sum(by_type.values())),
+        "by_type": {k: int(v) for k, v in by_type.items()},
+        "count": count,
+    }
+
+
+def op_histogram(hlo_text: str, top: int = 15) -> dict:
+    """Rough per-op-kind instruction counts (duplicate-op remat diagnostics)."""
+    hist: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*[a-z0-9_\[\]{},. ]*?([a-z][a-z0-9-]*)\(", line)
+        if m:
+            hist[m.group(1)] += 1
+    return dict(sorted(hist.items(), key=lambda kv: -kv[1])[:top])

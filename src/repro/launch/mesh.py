@@ -1,0 +1,22 @@
+"""Production meshes (assignment-fixed).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state; callers (dryrun.py, real launchers) must have set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` (dry-run) or be on
+real hardware before the first call.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants for the roofline model (per chip).
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link

@@ -1,0 +1,146 @@
+"""Roofline analysis (deliverable g) from the dry-run artifacts.
+
+Per (arch x shape x mesh) cell, using TPU v5e constants and the per-device
+numbers from launch/dryrun.py (XLA reports the per-replica SPMD module, so
+per-device time IS step time — all devices run the same program):
+
+    compute_s    = flops_per_device / 197e12
+    memory_s     = bytes_per_device / 819e9
+    collective_s = collective_bytes_per_device / 50e9
+
+The dominant term is the bottleneck; roofline fraction = dominant /
+(compute+memory+collective) measures how balanced the cell is, and
+MODEL_FLOPS / HLO_FLOPS (6·N·D train, 2·N·D inference, N_active for MoE)
+measures how much compiled compute is "useful" (catches remat/dispatch
+overhead — and, for small-d_model archs, genuine attention-matmul work the
+parameter-count metric ignores).
+
+Usage: python -m repro.launch.roofline [--tag TAG] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results_dryrun")
+
+
+def model_flops(cell: dict) -> float:
+    """6·N·D (train) / 2·N·D (inference) with N = active params, D = global
+    tokens processed by the step."""
+    n_active = cell["params_active"]
+    if cell["kind"] == "train":
+        tokens = cell["global_batch"] * cell["seq_len"]
+        return 6.0 * n_active * tokens
+    if cell["kind"] == "prefill":
+        tokens = cell["global_batch"] * cell["seq_len"]
+        return 2.0 * n_active * tokens
+    tokens = cell["global_batch"]  # decode: one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def analyze(cell: dict) -> dict:
+    chips = cell["chips"]
+    compute_s = cell["flops_per_device"] / PEAK_FLOPS_BF16
+    memory_s = cell["bytes_per_device"] / HBM_BW
+    coll_s = cell["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    total_hlo_flops = cell["flops_per_device"] * chips
+    mf = model_flops(cell)
+    hbm_gib = (cell["memory"]["argument_bytes"] + cell["memory"]["temp_bytes"]
+               + cell["memory"]["output_bytes"]) / 2**30
+    return {
+        **{k: cell.get(k) for k in ("arch", "shape", "mesh", "kind", "chips")},
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "bound_step_s": terms[dominant],
+        "roofline_fraction": terms[dominant] / (compute_s + memory_s + coll_s),
+        "model_flops": mf,
+        "useful_compute_ratio": mf / total_hlo_flops if total_hlo_flops else 0.0,
+        "hbm_gib_per_device": hbm_gib,
+        "fits_v5e_16g": hbm_gib < 16.0,
+        "collective_by_type": cell.get("collective_by_type", {}),
+    }
+
+
+def load_cells(tag: str = "") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split(".")
+        cell_tag = parts[3] if len(parts) > 3 else ""
+        if cell_tag != tag:
+            continue
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute | memory | collective | dominant | "
+           "MODEL/HLO | HBM GiB/dev | fits |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | **{r['dominant']}** | "
+            f"{r['useful_compute_ratio']:.2f} | {r['hbm_gib_per_device']:.2f} | "
+            f"{'yes' if r['fits_v5e_16g'] else 'NO'} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--json-out", default="")
+    args = ap.parse_args()
+    cells = load_cells(args.tag)
+    rows, skips, fails = [], [], []
+    for c in cells:
+        if c["status"] == "ok":
+            rows.append(analyze(c))
+        elif c["status"] == "skipped":
+            skips.append(c)
+        else:
+            fails.append(c)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    if args.markdown:
+        print(markdown_table(rows))
+        if skips:
+            print("\nSkipped cells (assignment rule):")
+            for s in skips:
+                print(f"- {s['arch']} x {s['shape']}: {s['skip_reason']}")
+        if fails:
+            print("\nFAILED cells:")
+            for s in fails:
+                print(f"- {s['arch']} x {s['shape']} x {s['mesh']}: {s.get('error')}")
+    else:
+        for r in rows:
+            print(json.dumps(r))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Serving launcher: batched prefill+decode for any architecture, optionally
+restoring weights from a version-store checkpoint commit.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6_1_6b \\
+        --batch 8 --prompt-len 64 --gen 32 [--repo PATH [--commit OID]]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..core.repo import Repository
+from ..models import transformer as T
+from ..models.params import init_params
+from ..train.checkpoint import CheckpointManager
+from ..train.steps import make_decode_step, make_prefill_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_IDS, required=True)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--repo", default="", help="restore weights from this repo")
+    ap.add_argument("--commit", default=None)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch) if args.full else configs.get_smoke(args.arch)
+    if args.repo:
+        state, manifest = CheckpointManager(Repository(args.repo)).restore(args.commit)
+        params = state["params"]
+        print(f"restored checkpoint step {manifest['step']} from {args.repo}")
+    else:
+        params = init_params(T.param_defs(cfg), seed=0)
+
+    cache_len = args.prompt_len + args.gen
+    prefill = jax.jit(make_prefill_step(cfg, None, cache_len=cache_len))
+    step = jax.jit(make_decode_step(cfg, None), donate_argnums=(1,))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)}
+
+    t0 = time.perf_counter()
+    caches, logits = jax.block_until_ready(prefill(params, batch))
+    print(f"prefill: {(time.perf_counter()-t0)*1e3:.1f} ms (incl. compile)")
+    tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)[:, None]
+    lat = []
+    for i in range(args.gen - 1):
+        t0 = time.perf_counter()
+        logits, caches = step(params, caches, tok,
+                              jnp.asarray(args.prompt_len + i, jnp.int32))
+        jax.block_until_ready(logits)
+        lat.append(time.perf_counter() - t0)
+        tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)[:, None]
+    ms = np.array(lat[1:]) * 1e3
+    print(f"decode: p50={np.percentile(ms,50):.2f} ms  p95={np.percentile(ms,95):.2f} ms  "
+          f"throughput={args.batch*1e3/ms.mean():.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

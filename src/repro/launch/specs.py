@@ -1,0 +1,124 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run inputs).
+
+Weak-type-correct, shardable, no device allocation. The modality frontends
+are stubs per the assignment: ``[audio]`` provides precomputed frame
+embeddings (S/4 encoder positions), ``[vlm]`` precomputed patch embeddings
+(first S/8 positions) plus the 3-stream M-RoPE position ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import Shape
+from ..configs.base import ModelConfig
+from ..distributed.sharding import ShardingRules
+from ..models import transformer as T
+from ..models.params import abstract_params
+from ..optim.adamw import AdamW
+
+
+def _sds(shape, dtype, mesh, spec):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _dp_axes(rules: ShardingRules | None, batch: int):
+    if rules is None:
+        return None
+    total_dp = 1
+    for a in rules.dp:
+        total_dp *= rules.mesh.shape[a]
+    if batch % total_dp != 0 or batch < total_dp:
+        return None  # tiny batch (long_500k): replicate batch dim
+    return rules._dp()
+
+
+def batch_specs(cfg: ModelConfig, shape: Shape, mesh, rules) -> dict:
+    """Inputs for train/prefill entry points."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = _dp_axes(rules, B)
+    out = {"tokens": _sds((B, S), jnp.int32, mesh, P(dp, None))}
+    if cfg.enc_dec:
+        out["encoder_embeds"] = _sds(
+            (B, S // cfg.enc_len_ratio, cfg.d_model), jnp.bfloat16, mesh,
+            P(dp, None, None),
+        )
+    if cfg.vision_len_ratio:
+        out["vision_embeds"] = _sds(
+            (B, S // cfg.vision_len_ratio, cfg.d_model), jnp.bfloat16, mesh,
+            P(dp, None, None),
+        )
+        out["positions3"] = _sds((3, B, S), jnp.int32, mesh, P(None, dp, None))
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: Shape, mesh, rules) -> tuple:
+    """(caches, token, pos) for the decode entry point. The KV cache /
+    SSM-state stand-ins represent a context of ``shape.seq_len`` tokens."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = _dp_axes(rules, B)
+    enc_len = S // cfg.enc_len_ratio if cfg.enc_dec else 0
+    caches = T.abstract_cache(
+        cfg, rules, batch=B, cache_len=S, enc_len=enc_len, mesh=mesh
+    )
+    token = _sds((B, 1), jnp.int32, mesh, P(dp, None))
+    pos = _sds((), jnp.int32, mesh, P())
+    return caches, token, pos
+
+
+def _zero1_defs(defs, rules):
+    """ZeRO-1: Adam moments additionally sharded over 'data' on their first
+    replicated, divisible dim. Params stay as laid out (no weight regather;
+    only the optimizer update communicates). See EXPERIMENTS.md §Perf."""
+    from ..models.params import ParamDef
+
+    data_size = rules.mesh.shape.get("data", 1) if rules else 1
+
+    def one(d):
+        if not isinstance(d, ParamDef):
+            return {k: one(v) for k, v in d.items()}
+        spec = tuple(d.spec)
+        for i, s in enumerate(d.shape):
+            ax = spec[i] if i < len(spec) else None
+            if ax is None and s % data_size == 0 and s >= data_size:
+                new = list(spec) + [None] * (len(d.shape) - len(spec))
+                new[i] = "data"
+                return ParamDef(d.shape, P(*new), d.init, d.scale)
+        return d
+
+    return one(defs)
+
+
+def model_state_specs(cfg: ModelConfig, mesh, rules, with_opt: bool) -> tuple:
+    """(params, opt_state) ShapeDtypeStructs."""
+    defs = T.param_defs(cfg, rules)
+    params = abstract_params(defs, jnp.bfloat16, mesh)
+    if not with_opt:
+        return params, None
+    mdt = jnp.bfloat16 if cfg.opt_moment_dtype == "bfloat16" else jnp.float32
+    mdefs = defs
+    if getattr(cfg, "zero1_moments", False) and rules is not None:
+        mdefs = _zero1_defs(defs, rules)
+    opt_state = {
+        "m": abstract_params(mdefs, mdt, mesh),
+        "v": abstract_params(mdefs, mdt, mesh),
+        "step": _sds((), jnp.int32, mesh, P()),
+    }
+    return params, opt_state
+
+
+def make_optimizer(cfg: ModelConfig) -> AdamW:
+    return AdamW(lr=3e-4, moment_dtype=cfg.opt_moment_dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: Shape, mesh=None, rules=None):
+    """ShapeDtypeStruct stand-ins for every model input of a cell — the
+    assignment's ``input_specs()`` entry point. Returns a dict for
+    train/prefill steps, or the (caches, token, pos) tuple for decode."""
+    if shape.kind in ("train", "prefill"):
+        return batch_specs(cfg, shape, mesh, rules)
+    return decode_specs(cfg, shape, mesh, rules)

@@ -1,0 +1,7 @@
+from . import attention, layers, moe, params, ssm, transformer
+from .transformer import decode_step, forward_train, param_defs, prefill
+
+__all__ = [
+    "attention", "layers", "moe", "params", "ssm", "transformer",
+    "decode_step", "forward_train", "param_defs", "prefill",
+]

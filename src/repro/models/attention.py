@@ -1,0 +1,131 @@
+"""Attention: blockwise (flash-style) GQA with causal/sliding-window masking,
+plus single-token decode attention against a KV cache.
+
+The training/prefill path chunks queries and recomputes per-chunk under
+``jax.checkpoint`` — O(S·chunk) live score memory instead of O(S²), which is
+the flash-attention memory behaviour expressed in pure JAX (the Pallas TPU
+kernel in ``repro.kernels.flash_attention`` implements the same math with
+explicit VMEM tiling; ``use_pallas`` selects it on TPU backends).
+
+GQA is computed in grouped form [B, KV, G, ...] so repeated K/V heads are
+never materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _grouped(q: jax.Array, n_kv: int) -> jax.Array:
+    """[B, S, H, Dh] -> [B, S, KV, G, Dh]."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def _attn_chunk(
+    q: jax.Array,  # [B, qc, KV, G, Dh]
+    k: jax.Array,  # [B, Sk, KV, Dh]
+    v: jax.Array,  # [B, Sk, KV, Dh]
+    q_pos: jax.Array | None,  # [qc] global query positions (None = no mask)
+    k_pos: jax.Array | None,  # [Sk]
+    window: int | None,
+) -> jax.Array:
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    if q_pos is not None:
+        valid = k_pos[None, :] <= q_pos[:, None]  # causal
+        if window is not None:
+            valid &= k_pos[None, :] > (q_pos[:, None] - window)
+        scores = jnp.where(valid[None, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+
+
+def attention(
+    q: jax.Array,  # [B, Sq, H, Dh]
+    k: jax.Array,  # [B, Sk, KV, Dh]
+    v: jax.Array,  # [B, Sk, KV, Dh]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_chunk: int = 1024,
+    unroll_chunks: bool = False,
+) -> jax.Array:
+    """Full-sequence attention, query-chunked when Sq > q_chunk.
+
+    ``unroll_chunks`` replaces the chunk loop with a static python loop so
+    XLA's cost analysis sees every chunk (used by the dry-run cost modules;
+    the runtime default keeps the loop for O(1) HLO size)."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    qg = _grouped(q, kv)
+    q_pos = jnp.arange(sq, dtype=jnp.int32) if causal else None
+    k_pos = jnp.arange(k.shape[1], dtype=jnp.int32) if causal else None
+    if sq <= q_chunk or sq % q_chunk != 0:
+        out = _attn_chunk(qg, k, v, q_pos, k_pos, window)
+        return out.reshape(b, sq, h, d)
+
+    n_chunks = sq // q_chunk
+    qs = qg.reshape(b, n_chunks, q_chunk, kv, h // kv, d)
+    qs = jnp.moveaxis(qs, 1, 0)  # [n_chunks, B, qc, KV, G, Dh]
+    pos = (
+        q_pos.reshape(n_chunks, q_chunk)
+        if q_pos is not None
+        else jnp.zeros((n_chunks, q_chunk), jnp.int32)
+    )
+
+    @jax.checkpoint
+    def one_chunk(args):
+        q_c, pos_c = args
+        return _attn_chunk(q_c, k, v, pos_c if causal else None, k_pos, window)
+
+    if unroll_chunks:
+        outs = [one_chunk((qs[i], pos[i])) for i in range(n_chunks)]
+        out = jnp.stack(outs, axis=0)
+    else:
+        out = jax.lax.map(one_chunk, (qs, pos))  # [n_chunks, B, qc, KV, G, Dh]
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, h, d)
+    return out
+
+
+def decode_attention(
+    q: jax.Array,  # [B, 1, H, Dh]
+    k_cache: jax.Array,  # [B, S_cache, KV, Dh]
+    v_cache: jax.Array,  # [B, S_cache, KV, Dh]
+    pos: jax.Array,  # scalar int32: position of the new token
+    *,
+    ring: bool = False,
+) -> jax.Array:
+    """One-token attention against a cache. ``ring=True`` marks a sliding-
+    window ring buffer (every slot is valid once the buffer wrapped; RoPE was
+    applied at insert so slot order is irrelevant to the math)."""
+    b, _, h, d = q.shape
+    kv = k_cache.shape[2]
+    s = k_cache.shape[1]
+    qg = _grouped(q, kv)  # [B, 1, KV, G, Dh]
+    scale = d**-0.5
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    idx = jnp.arange(s, dtype=jnp.int32)
+    n_valid = jnp.minimum(pos + 1, s) if ring else pos + 1
+    valid = idx[None, :] < n_valid
+    scores = jnp.where(valid[None, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_cache)
+    return out.reshape(b, 1, h, d)
+
+
+def cache_insert(
+    k_cache: jax.Array, v_cache: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Write one token's K/V at ``pos`` (mod cache length = ring semantics)."""
+    slot = jnp.mod(pos, k_cache.shape[1])
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+    return k_cache, v_cache

@@ -1,0 +1,75 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based einsum dispatch.
+
+The dispatch/combine-tensor formulation (Mesh-TensorFlow / flaxformer style)
+is the GSPMD-friendly reference: it lowers to dense einsums whose sharding
+follows the expert-weight annotations (experts over "data", ff over "model";
+see distributed/sharding.py). Tokens beyond an expert's capacity are dropped
+(standard top-k MoE semantics); the auxiliary load-balancing loss keeps the
+router spread out.
+
+Arctic's "dense residual" variant (128-expert MoE in parallel with a dense
+FFN) is handled at the transformer level by running both and summing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MoEConfig
+
+
+def router_topk(
+    x: jax.Array, w_router: jax.Array, cfg: MoEConfig
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (gates [B,S,k], expert_idx [B,S,k], aux_loss scalar)."""
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), w_router.astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # load-balancing loss (Switch-style): E * sum_e f_e * p_e
+    e = w_router.shape[-1]
+    assign = jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32)  # top-1 assignment
+    f = jnp.mean(assign, axis=(0, 1))
+    p = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(f * p)
+    return gates, idx, aux
+
+
+def moe_ffn(
+    x: jax.Array,  # [B, S, D]
+    w_router: jax.Array,  # [D, E]
+    w1: jax.Array,  # [E, D, F]
+    w3: jax.Array,  # [E, D, F]
+    w2: jax.Array,  # [E, F, D]
+    cfg: MoEConfig,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output [B,S,D], aux_loss)."""
+    b, s, d = x.shape
+    e, k = w1.shape[0], cfg.top_k
+    gates, idx, aux = router_topk(x, w_router, cfg)
+
+    capacity = max(1, int(cfg.capacity_factor * s * k / e))
+    # expert one-hot per (token, k-slot): [B, S, k, E]
+    mask = jax.nn.one_hot(idx, e, dtype=jnp.float32)
+    # position of each (token, slot) within its expert queue, counted over
+    # the flattened (S, k) order: [B, S*k, E]
+    mask_flat = mask.reshape(b, s * k, e)
+    pos_in_expert = jnp.cumsum(mask_flat, axis=1) * mask_flat - 1.0
+    within = (pos_in_expert < capacity) & (pos_in_expert >= 0)
+    # dispatch one-hot over capacity slots: [B, S*k, E, C]
+    dispatch_flat = jax.nn.one_hot(
+        jnp.where(within, pos_in_expert, -1).astype(jnp.int32), capacity, dtype=x.dtype
+    ) * within[..., None].astype(x.dtype)
+    dispatch = dispatch_flat.reshape(b, s, k, e, capacity)
+    combine = jnp.einsum("bskec,bsk->bsec", dispatch.astype(jnp.float32),
+                         gates).astype(x.dtype)
+    dispatch = jnp.sum(dispatch, axis=2)  # [B, S, E, C]
+
+    expert_in = jnp.einsum("bsec,bsd->ebcd", dispatch, x)  # [E, B, C, D]
+    gate_h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", expert_in, w1))
+    lin_h = jnp.einsum("ebcd,edf->ebcf", expert_in, w3)
+    y = jnp.einsum("ebcf,efd->ebcd", gate_h * lin_h, w2)  # [E, B, C, D]
+    out = jnp.einsum("bsec,ebcd->bsd", combine, y)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,49 @@
+"""Opt-in int8 gradient compression with error feedback.
+
+For cross-pod data-parallel all-reduces the pod axis rides DCI links an order
+of magnitude slower than intra-pod ICI; quantizing gradient blocks to int8
+with per-block scales cuts that traffic 2x vs bf16 (4x vs fp32) at the cost
+of quantization noise, which the error-feedback residual re-injects next
+step (Seide et al.-style EF).
+
+Usage: wrap the gradient tree before the optimizer when ``compress_grads``
+is enabled in the train loop; the residual state is carried like optimizer
+state. The compression is simulated faithfully (quantize -> dequantize) so
+numerics match what real compressed collectives would produce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor-row int8 quantization. Returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    flat = x32.reshape(x32.shape[0] if x32.ndim > 1 else 1, -1)
+    scale = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).reshape(shape)
+
+
+def ef_compress_tree(grads, residual):
+    """Error-feedback compression over a gradient tree.
+
+    Returns (dequantized grads as would arrive post-allreduce, new residual).
+    """
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, s = compress_int8(g32)
+        deq = decompress_int8(q, s, g32.shape)
+        return deq.astype(g.dtype), g32 - deq
+
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    out = jax.tree.map(one, grads, residual)
+    new_g = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_r = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_g, new_r

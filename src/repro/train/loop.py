@@ -1,0 +1,74 @@
+"""Resumable training loop: segments of steps as reproducible jobs.
+
+``train_segment`` is the unit the scheduler submits: initialize-or-resume
+from the version store, run N steps, checkpoint every K, commit. Killing the
+process anywhere and calling ``train_segment`` again continues from the last
+checkpoint and — because data, init, and optimizer are deterministic —
+reaches bitwise-identical state (tested in tests/test_train.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core.repo import Repository
+from ..models import transformer as T
+from ..models.params import init_params
+from ..optim.adamw import AdamW
+from .checkpoint import CheckpointManager
+from .steps import make_train_step
+
+
+@dataclass
+class SegmentResult:
+    start_step: int
+    end_step: int
+    final_loss: float
+    checkpoint_commit: str | None
+
+
+def train_segment(
+    repo: Repository,
+    cfg: ModelConfig,
+    dataset,
+    n_steps: int,
+    ckpt_every: int = 50,
+    optimizer: AdamW | None = None,
+    rules=None,
+    seed: int = 0,
+    async_ckpt: bool = False,
+) -> SegmentResult:
+    optimizer = optimizer or AdamW(lr=1e-3, moment_dtype=cfg.opt_moment_dtype)
+    ckpt = CheckpointManager(repo)
+    step_fn = jax.jit(make_train_step(cfg, rules, optimizer), donate_argnums=(0, 1))
+
+    state, manifest = ckpt.restore()
+    if state is not None:
+        params, opt_state = state["params"], state["opt_state"]
+        start = int(manifest["step"])
+    else:
+        params = init_params(T.param_defs(cfg, rules), seed=seed)
+        opt_state = optimizer.init(params)
+        start = 0
+
+    loss = float("nan")
+    commit = None
+    for step in range(start, n_steps):
+        batch = {"tokens": jnp.asarray(dataset.shard_batch_at(step, 0, 1))}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        if (step + 1) % ckpt_every == 0 or step + 1 == n_steps:
+            saver = ckpt.save_async if async_ckpt else ckpt.save
+            out = saver(
+                step + 1, params, opt_state, data_step=step + 1,
+                extra={"loss": loss, "config": cfg.name},
+            )
+            commit = out if isinstance(out, str) else commit
+    ckpt.wait()
+    if commit is None:
+        latest = ckpt.latest()
+        commit = latest[0] if latest else None
+    return SegmentResult(start, n_steps, loss, commit)

@@ -1,0 +1,132 @@
+"""Jittable training / prefill / decode step functions.
+
+``make_train_step`` builds the canonical next-token LM objective with
+vocab-padding masking, MoE auxiliary loss, grad clipping and AdamW update —
+the function the dry-run lowers for ``train_4k`` cells. ``make_prefill_step``
+and ``make_decode_step`` are the serving counterparts for ``prefill_32k`` /
+``decode_32k`` / ``long_500k``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import transformer as T
+from ..models.layers import cross_entropy
+from ..optim.adamw import AdamW
+from ..optim.compression import ef_compress_tree
+
+
+def masked_loss(logits: jax.Array, tokens: jax.Array, real_vocab: int) -> jax.Array:
+    """Shifted next-token CE; vocab-pad columns are masked out of the lse."""
+    vp = logits.shape[-1]
+    if vp != real_vocab:
+        col = jnp.arange(vp)
+        logits = jnp.where(col[None, None, :] < real_vocab, logits, -1e9)
+    return cross_entropy(logits[:, :-1], tokens[:, 1:])
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    """Reshape every input on its batch axis to [n, B/n, ...] for lax.scan.
+    ``positions3`` carries batch on axis 1; everything else on axis 0."""
+    out = {}
+    for k, v in batch.items():
+        ax = 1 if k == "positions3" else 0
+        b = v.shape[ax]
+        assert b % n == 0, (k, b, n)
+        new_shape = v.shape[:ax] + (n, b // n) + v.shape[ax + 1 :]
+        out[k] = jnp.moveaxis(v.reshape(new_shape), ax, 0)
+    return out
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    rules,
+    optimizer: AdamW,
+    compress_grads: bool = False,
+):
+    aux_w = cfg.moe.router_aux_weight if cfg.moe else 0.0
+    n_mb = max(1, cfg.microbatches)
+
+    def loss_fn(params, batch):
+        logits, aux = T.forward_train(cfg, rules, params, batch)
+        loss = masked_loss(logits, batch["tokens"], cfg.vocab_size)
+        return loss + aux_w * aux, (loss, aux)
+
+    def grads_of(params, batch):
+        if n_mb == 1:
+            (_, (loss, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            return loss, aux, grads
+
+        # gradient accumulation: scan over microbatches, fp32 accumulators —
+        # live activation memory is one microbatch's, at n_mb x the steps
+        mbs = _split_microbatches(batch, n_mb)
+
+        def mb_step(carry, mb):
+            loss_acc, aux_acc, gacc = carry
+            (_, (loss, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb
+            )
+            gacc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gacc, grads
+            )
+            return (loss_acc + loss, aux_acc + aux, gacc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, aux_sum, gsum), _ = jax.lax.scan(
+            mb_step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32), zeros),
+            mbs,
+        )
+        scale = 1.0 / n_mb
+        grads = jax.tree.map(lambda g: (g * scale).astype(jnp.bfloat16), gsum)
+        return loss_sum * scale, aux_sum * scale, grads
+
+    def train_step(params, opt_state, batch):
+        loss, aux, grads = grads_of(params, batch)
+        if compress_grads:
+            grads, new_resid = ef_compress_tree(grads, opt_state.get("ef_residual"))
+        new_params, new_opt, stats = optimizer.update(grads, opt_state, params)
+        if compress_grads:
+            new_opt["ef_residual"] = new_resid
+        metrics = {"loss": loss, "aux_loss": aux, **stats}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules, cache_len: int):
+    def prefill_step(params, batch):
+        return T.prefill(cfg, rules, params, batch, cache_len=cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, rules):
+    def decode_step(params, caches, token, pos):
+        return T.decode_step(cfg, rules, params, caches, token, pos)
+
+    return decode_step
+
+
+def greedy_decode(cfg: ModelConfig, rules, params, batch, n_tokens: int,
+                  cache_len: int):
+    """Simple batched greedy generation built on prefill + decode_step
+    (used by the serving example and tests; jitted per-step)."""
+    prefill_fn = jax.jit(make_prefill_step(cfg, rules, cache_len))
+    step_fn = jax.jit(make_decode_step(cfg, rules))
+    caches, logits = prefill_fn(params, batch)
+    prompt_len = batch["tokens"].shape[1]
+    out = []
+    tok = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)[:, None]
+    out.append(tok)
+    for i in range(n_tokens - 1):
+        pos = jnp.asarray(prompt_len + i, jnp.int32)
+        logits, caches = step_fn(params, caches, tok, pos)
+        tok = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,141 @@
+"""Tests for §5.5 protected names/prefixes conflict detection, including
+hypothesis property tests of the invariants."""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.core.conflicts import (
+    OutputConflict,
+    ProtectedOutputs,
+    WildcardOutputError,
+    normalize,
+    proper_prefixes,
+)
+
+
+def test_normalize():
+    assert normalize("./dira/dirb/dirc/") == "dira/dirb/dirc"
+    assert normalize("a/./b/../c") == "a/c"
+    with pytest.raises(ValueError):
+        normalize("../escape")
+    with pytest.raises(ValueError):
+        normalize(".")
+
+
+def test_proper_prefixes_matches_paper_example():
+    # paper §5.5: ./dira/dirb/dirc/ -> [./dira/dirb/, ./dira/]
+    assert proper_prefixes("dira/dirb/dirc") == ["dira/dirb", "dira"]
+    assert proper_prefixes("file.txt") == []
+
+
+def test_check_1_same_name_conflicts():
+    p = ProtectedOutputs()
+    p.check_and_add_all(["out/dir1"], job_id=1)
+    with pytest.raises(OutputConflict) as e:
+        p.check("out/dir1")
+    assert e.value.other_job == 1
+
+
+def test_check_2_superdirectory_of_other_job():
+    p = ProtectedOutputs()
+    p.check_and_add_all(["dira/dirb/dirc"], job_id=1)
+    # claiming dira/dirb would claim a super-directory of job 1's output
+    with pytest.raises(OutputConflict):
+        p.check("dira/dirb")
+    with pytest.raises(OutputConflict):
+        p.check("dira")
+
+
+def test_check_3_subdirectory_of_claimed_dir():
+    p = ProtectedOutputs()
+    p.check_and_add_all(["dira/dirb"], job_id=1)
+    # job 1 owns dira/dirb exclusively incl. everything inside (§5.5)
+    with pytest.raises(OutputConflict):
+        p.check("dira/dirb/deeper/file.txt")
+
+
+def test_disjoint_directories_coexist():
+    p = ProtectedOutputs()
+    p.check_and_add_all(["jobs/1/out"], job_id=1)
+    p.check_and_add_all(["jobs/2/out"], job_id=2)  # no conflict
+    p.check_and_add_all(["jobs/1b"], job_id=3)  # sibling with common prefix str
+    assert p.names["jobs/2/out"] == 2
+
+
+def test_release_unprotects():
+    p = ProtectedOutputs()
+    p.check_and_add_all(["a/b"], job_id=1)
+    p.release(1)
+    p.check_and_add_all(["a/b"], job_id=2)  # reusable after release (§5.2)
+
+
+def test_wildcards_rejected():
+    p = ProtectedOutputs()
+    for bad in ["out/*.csv", "results/?", "d[0-9]/x", "a{b,c}"]:
+        with pytest.raises(WildcardOutputError):
+            p.check(bad)
+
+
+def test_intra_job_nesting_rejected():
+    p = ProtectedOutputs()
+    with pytest.raises(OutputConflict):
+        p.check_and_add_all(["a/b", "a/b/c"], job_id=1)
+    # failed add must not leave partial protection behind
+    p2 = ProtectedOutputs()
+    with pytest.raises(OutputConflict):
+        p2.check_and_add_all(["x/y", "x/y"], job_id=1)
+
+
+if HAVE_HYPOTHESIS:
+    path_segments = st.lists(
+        st.text(alphabet="abcdefg", min_size=1, max_size=3), min_size=1, max_size=4
+    )
+
+    @st.composite
+    def path_sets(draw):
+        return [
+            "/".join(draw(path_segments))
+            for _ in range(draw(st.integers(min_value=1, max_value=8)))
+        ]
+
+    @given(path_sets())
+    @settings(max_examples=200, deadline=None)
+    def test_property_no_two_jobs_share_overlapping_outputs(paths):
+        """Invariant: after any sequence of schedules, no accepted output is
+        equal to, an ancestor of, or a descendant of an output owned by a
+        different job."""
+        p = ProtectedOutputs()
+        accepted: dict[str, int] = {}
+        for job_id, path in enumerate(paths):
+            try:
+                p.check_and_add_all([path], job_id)
+                accepted[normalize(path)] = job_id
+            except OutputConflict:
+                pass
+        names = list(accepted)
+        for i, a in enumerate(names):
+            for b in names[i + 1:]:
+                if accepted[a] == accepted[b]:
+                    continue
+                assert a != b
+                assert not a.startswith(b + "/"), (a, b)
+                assert not b.startswith(a + "/"), (a, b)
+
+    @given(path_sets())
+    @settings(max_examples=100, deadline=None)
+    def test_property_release_restores_schedulability(paths):
+        """Anything accepted then released must be acceptable again."""
+        p = ProtectedOutputs()
+        for job_id, path in enumerate(paths):
+            try:
+                p.check_and_add_all([path], job_id)
+            except OutputConflict:
+                continue
+            p.release(job_id)
+            p.check_and_add_all([path], job_id + 10_000)  # must not raise
+            p.release(job_id + 10_000)

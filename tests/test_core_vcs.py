@@ -1,0 +1,234 @@
+"""Unit tests for the version store: objects, trees, commits, annex, merges."""
+import os
+
+import pytest
+
+from repro.core.annex import AnnexStore, make_pointer, parse_pointer
+from repro.core.fsio import FS, GPFS, LOCAL_XFS, NULL_FS, SimClock
+from repro.core.hashing import (
+    annex_key_for_bytes,
+    parse_annex_key,
+    verify_annex_key,
+)
+from repro.core.objects import ObjectStore
+from repro.core.repo import ConflictError, Repository
+
+
+def write(root, rel, data):
+    p = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    mode = "wb" if isinstance(data, bytes) else "w"
+    with open(p, mode) as f:
+        f.write(data)
+
+
+# ---------------------------------------------------------------- hashing
+def test_annex_key_roundtrip():
+    data = b"hello world" * 100
+    key = annex_key_for_bytes(data)
+    size, hx = parse_annex_key(key)
+    assert size == len(data)
+    assert verify_annex_key(key, data)
+    assert not verify_annex_key(key, data + b"x")
+
+
+def test_pointer_roundtrip():
+    key = annex_key_for_bytes(b"payload")
+    ptr = make_pointer(key)
+    assert parse_pointer(ptr) == key
+    assert parse_pointer(b"not a pointer") is None
+    assert parse_pointer(b"x" * 10_000) is None
+
+
+# ---------------------------------------------------------------- objects
+def test_object_store_roundtrip(tmp_path):
+    store = ObjectStore(str(tmp_path / "objects"), FS(NULL_FS))
+    oid = store.put_blob(b"some data")
+    assert store.has(oid)
+    kind, payload = store.get(oid)
+    assert (kind, payload) == ("blob", b"some data")
+    # identical content -> identical oid (content addressing)
+    assert store.put_blob(b"some data") == oid
+
+
+def test_object_store_trees_and_commits(tmp_path):
+    store = ObjectStore(str(tmp_path / "objects"), FS(NULL_FS))
+    t = store.put_tree({"a.txt": {"t": "blob", "oid": "0" * 64}})
+    c = store.put_commit({"tree": t, "parents": [], "author": "x",
+                          "timestamp": 1.0, "message": "m"})
+    assert store.get_commit(c)["tree"] == t
+    with pytest.raises(TypeError):
+        store.get_blob(t)
+
+
+# ---------------------------------------------------------------- repository
+def test_save_checkout_roundtrip(tmp_path):
+    root = str(tmp_path / "repo")
+    repo = Repository.init(root, annex_threshold=100)
+    write(root, "small.txt", "small")
+    write(root, "dir/big.bin", b"\x01" * 1000)  # >= threshold -> annexed
+    c1 = repo.save(message="first")
+    tree = repo.tree_of(c1)
+    assert tree["small.txt"]["t"] == "blob"
+    assert tree["dir/big.bin"]["t"] == "annex"
+
+    # mutate, save, check history
+    write(root, "small.txt", "changed")
+    c2 = repo.save(paths=["small.txt"], message="second")
+    assert c2 != c1
+    assert repo.objects.get_commit(c2)["parents"] == [c1]
+
+    # checkout old version restores contents
+    repo.checkout(c1)
+    assert open(os.path.join(root, "small.txt")).read() == "small"
+    assert open(os.path.join(root, "dir/big.bin"), "rb").read() == b"\x01" * 1000
+
+
+def test_save_no_change_no_commit(tmp_path):
+    root = str(tmp_path / "repo")
+    repo = Repository.init(root)
+    write(root, "a.txt", "a")
+    c1 = repo.save(message="first")
+    c_again = repo.save(message="no-op")
+    assert c_again == c1
+
+
+def test_nested_trees_only_dirty_dirs(tmp_path):
+    """Hierarchical trees: sibling dirs keep the same subtree oid across
+    commits that don't touch them (this is what keeps local-FS finish flat)."""
+    root = str(tmp_path / "repo")
+    repo = Repository.init(root)
+    for j in range(3):
+        write(root, f"jobs/{j}/out.txt", f"result {j}")
+    c1 = repo.save(message="all")
+    write(root, "jobs/0/out.txt", "changed")
+    c2 = repo.save(paths=["jobs/0/out.txt"], message="update job0")
+
+    def subtree_oid(commit, name):
+        top = repo.objects.get_tree(repo.objects.get_commit(commit)["tree"])
+        jobs = repo.objects.get_tree(top["jobs"]["oid"])
+        return jobs[name]["oid"]
+
+    assert subtree_oid(c1, "1") == subtree_oid(c2, "1")
+    assert subtree_oid(c1, "0") != subtree_oid(c2, "0")
+
+
+def test_branches_and_octopus_merge(tmp_path):
+    root = str(tmp_path / "repo")
+    repo = Repository.init(root)
+    write(root, "base.txt", "base")
+    base = repo.save(message="base")
+    # three "job" branches with disjoint outputs
+    for j in range(3):
+        repo.create_branch(f"job/{j}", at=base)
+    for j in range(3):
+        repo.switch(f"job/{j}")
+        write(root, f"out/{j}.txt", f"output {j}")
+        repo.save(paths=[f"out/{j}.txt"], message=f"job {j}", branch=f"job/{j}")
+    repo.switch("main")
+    m = repo.merge_octopus([f"job/{j}" for j in range(3)], message="octopus")
+    commit = repo.objects.get_commit(m)
+    assert len(commit["parents"]) == 4  # HEAD + 3 branches
+    tree = repo.tree_of(m)
+    assert {f"out/{j}.txt" for j in range(3)} <= set(tree)
+    # worktree materialized
+    assert open(os.path.join(root, "out/2.txt")).read() == "output 2"
+
+
+def test_octopus_merge_conflict(tmp_path):
+    root = str(tmp_path / "repo")
+    repo = Repository.init(root)
+    write(root, "base.txt", "base")
+    base = repo.save(message="base")
+    for j in range(2):
+        repo.create_branch(f"job/{j}", at=base)
+        repo.switch(f"job/{j}")
+        write(root, "same.txt", f"conflicting {j}")
+        repo.save(paths=["same.txt"], message=f"job {j}", branch=f"job/{j}")
+    repo.switch("main")
+    with pytest.raises(ConflictError):
+        repo.merge_octopus(["job/0", "job/1"])
+
+
+def test_log_traverses_all_parents(tmp_path):
+    root = str(tmp_path / "repo")
+    repo = Repository.init(root)
+    write(root, "a.txt", "a")
+    repo.save(message="c1")
+    write(root, "a.txt", "b")
+    repo.save(message="c2")
+    msgs = [c["message"] for _, c in repo.log()]
+    assert msgs == ["c2", "c1"]
+
+
+# ---------------------------------------------------------------- annex
+def test_annex_get_drop_whereis(tmp_path):
+    root = str(tmp_path / "repo")
+    repo = Repository.init(root, annex_threshold=10)
+    write(root, "big.bin", b"\x02" * 100)
+    repo.save(message="add big")
+    key = repo.annex_key_at("big.bin")
+    assert repo.whereis(key) == ["local"]
+
+    # cannot drop the last copy
+    with pytest.raises(RuntimeError):
+        repo.annex_drop("big.bin")
+
+    # push to a remote store, then drop
+    remote = AnnexStore(str(tmp_path / "s3"), repo.fs, name="s3")
+    assert repo.annex_push(remote) == 1
+    repo.add_annex_remote(str(tmp_path / "s3"))
+    repo.annex_drop("big.bin")
+    data = open(os.path.join(root, "big.bin"), "rb").read()
+    assert parse_pointer(data) == key
+
+    # get fetches it back from the remote
+    assert repo.annex_get("big.bin")
+    assert open(os.path.join(root, "big.bin"), "rb").read() == b"\x02" * 100
+
+
+def test_clone_knows_annexed_files_without_content(tmp_path):
+    src_root = str(tmp_path / "src")
+    src = Repository.init(src_root, annex_threshold=10)
+    write(src_root, "data.bin", b"\x03" * 50)
+    write(src_root, "notes.txt", "tiny")
+    src.save(message="initial")
+
+    dst = Repository.clone(src, str(tmp_path / "dst"))
+    assert dst.dsid == src.dsid
+    # text file has content, annexed file is a pointer until get
+    assert open(os.path.join(dst.root, "notes.txt")).read() == "tiny"
+    ptr = open(os.path.join(dst.root, "data.bin"), "rb").read()
+    key = parse_pointer(ptr)
+    assert key is not None
+    assert dst.annex_get("data.bin")
+    assert open(os.path.join(dst.root, "data.bin"), "rb").read() == b"\x03" * 50
+
+
+# ---------------------------------------------------------------- fs model
+def test_fs_profiles_charge_virtual_time(tmp_path):
+    clock = SimClock()
+    fs = FS(GPFS, clock)
+    fs.write_bytes(str(tmp_path / "f.bin"), b"x" * 1_000_000)
+    t1 = clock.snapshot()
+    assert t1 > 0
+    fs.read_bytes(str(tmp_path / "f.bin"))
+    assert clock.snapshot() > t1
+
+
+def test_gpfs_degrades_with_file_count(tmp_path):
+    clock = SimClock()
+    fs = FS(GPFS, clock)
+    fs.n_files = GPFS.degrade_threshold + 100_000  # simulate a huge repo
+    before = clock.snapshot()
+    fs.exists(str(tmp_path / "x"))
+    degraded_cost = clock.snapshot() - before
+    fs2 = FS(GPFS, SimClock())
+    fs2.exists(str(tmp_path / "x"))
+    assert degraded_cost > fs2.clock.snapshot() * 5
+
+    # local FS never degrades
+    fs3 = FS(LOCAL_XFS, SimClock())
+    fs3.n_files = 10_000_000
+    fs3.exists(str(tmp_path / "x"))
+    assert fs3.clock.snapshot() == pytest.approx(LOCAL_XFS.meta_op_s)

@@ -1,0 +1,49 @@
+"""Dry-run smoke: lower+compile a representative cell subset in a subprocess
+(so the 512-device XLA_FLAGS never leaks into this test process — smoke tests
+must see 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys
+from repro.launch.dryrun import run_cell
+cell = run_cell(sys.argv[1], sys.argv[2], multi_pod=(sys.argv[3] == "multi"))
+print("CELL=" + json.dumps({k: cell[k] for k in ("status", "chips")}))
+"""
+
+
+@pytest.mark.parametrize(
+    "arch,shape,mesh",
+    [
+        ("qwen3_0_6b", "train_4k", "single"),
+        ("qwen3_0_6b", "decode_32k", "single"),
+        ("rwkv6_1_6b", "long_500k", "single"),
+        ("qwen3_0_6b", "train_4k", "multi"),
+    ],
+)
+def test_dryrun_cell_compiles(arch, shape, mesh, tmp_path):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT, arch, shape, mesh],
+        capture_output=True, text=True, timeout=1200, env=env,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("CELL=")][0]
+    cell = json.loads(line[5:])
+    assert cell["status"] == "ok"
+    assert cell["chips"] == (512 if mesh == "multi" else 256)
+
+
+def test_default_process_sees_one_device():
+    """XLA_FLAGS must NOT be set globally — smoke tests see 1 device."""
+    import jax
+
+    assert jax.device_count() == 1

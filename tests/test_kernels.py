@@ -1,0 +1,206 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles,
+executed with interpret=True (kernel bodies run on CPU)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.models import ssm as model_ssm
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+
+def rand(rng, shape, dtype):
+    return jnp.asarray(rng.normal(0, 1, shape), dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+# ---------------------------------------------------------- flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,sq,sk,h,kv,dh,causal,window",
+    [
+        (2, 128, 128, 4, 4, 64, True, None),
+        (1, 256, 256, 8, 2, 64, True, None),  # GQA 4:1
+        (2, 128, 128, 4, 1, 128, True, None),  # MQA
+        (1, 256, 256, 4, 4, 64, True, 64),  # sliding window
+        (1, 128, 128, 2, 2, 96, False, None),  # encoder (non-causal), Dh=96
+        (2, 64, 64, 4, 2, 32, True, 16),
+    ],
+)
+def test_flash_attention_vs_ref(b, sq, sk, h, kv, dh, causal, window, dtype):
+    rng = np.random.default_rng(hash((b, sq, h, kv, dh)) % 2**31)
+    q = rand(rng, (b, sq, h, dh), dtype)
+    k = rand(rng, (b, sk, kv, dh), dtype)
+    v = rand(rng, (b, sk, kv, dh), dtype)
+    got = ops.flash_attention(q, k, v, causal, window, True)
+    want = ref.attention_ref(q, k, v, causal, window)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL[dtype]
+    )
+
+
+def test_flash_attention_block_sweep():
+    """Block shape must not change the math."""
+    from repro.kernels.flash_attention import flash_attention_bhsd
+
+    rng = np.random.default_rng(0)
+    q = rand(rng, (1, 2, 256, 64), jnp.float32)
+    k = rand(rng, (1, 2, 256, 64), jnp.float32)
+    v = rand(rng, (1, 2, 256, 64), jnp.float32)
+    outs = []
+    for bq, bk in [(64, 64), (128, 256), (256, 64), (256, 256)]:
+        outs.append(
+            np.asarray(
+                flash_attention_bhsd(
+                    q, k, v, causal=True, window=None,
+                    block_q=bq, block_k=bk, interpret=True,
+                )
+            )
+        )
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_grad_matches_ref():
+    rng = np.random.default_rng(1)
+    q = rand(rng, (1, 64, 2, 32), jnp.float32)
+    k = rand(rng, (1, 64, 2, 32), jnp.float32)
+    v = rand(rng, (1, 64, 2, 32), jnp.float32)
+
+    def f_kernel(q, k, v):
+        return jnp.sum(jnp.square(ops.flash_attention(q, k, v, True, None, True)))
+
+    def f_ref(q, k, v):
+        return jnp.sum(jnp.square(ref.attention_ref(q, k, v, True, None)))
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------- rwkv6
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,dh,chunk", [(2, 64, 2, 32, 16), (1, 128, 4, 64, 16),
+                                            (1, 32, 1, 128, 16)])
+def test_rwkv6_kernel_vs_ref(b, s, h, dh, chunk, dtype):
+    rng = np.random.default_rng(42)
+    r = rand(rng, (b, s, h, dh), dtype)
+    k = rand(rng, (b, s, h, dh), dtype)
+    v = rand(rng, (b, s, h, dh), dtype)
+    logw = -jnp.abs(rand(rng, (b, s, h, dh), jnp.float32)) - 0.05
+    u = rand(rng, (h, dh), jnp.float32)
+    s0 = jnp.asarray(rng.normal(0, 0.3, (b, h, dh, dh)), jnp.float32)
+    got, gstate = ops.rwkv6(r, k, v, logw.astype(dtype), u, s0, True)
+    want, wstate = ref.rwkv6_ref(r, k, v, logw.astype(dtype), u, s0)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL[dtype]
+    )
+    np.testing.assert_allclose(np.asarray(gstate), np.asarray(wstate),
+                               rtol=3e-3 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=3e-3 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_rwkv6_model_chunked_vs_naive():
+    """The model's jnp chunked path == the naive oracle (independent of the
+    Pallas kernel)."""
+    rng = np.random.default_rng(7)
+    b, s, h, dh = 2, 48, 2, 16
+    r, k, v = (jnp.asarray(rng.normal(0, 1, (b, s, h, dh)), jnp.float32) for _ in range(3))
+    logw = -jnp.abs(jnp.asarray(rng.normal(0, 1, (b, s, h, dh)), jnp.float32)) - 0.02
+    u = jnp.asarray(rng.normal(0, 1, (h, dh)), jnp.float32)
+    o1, s1 = model_ssm.rwkv6_chunked(r, k, v, logw, u)
+    o2, s2 = model_ssm.rwkv6_naive(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------- mamba
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,di,st,chunk", [(2, 64, 64, 8, 64), (1, 128, 256, 16, 64)])
+def test_mamba_kernel_vs_ref(b, s, di, st, chunk, dtype):
+    rng = np.random.default_rng(3)
+    u = rand(rng, (b, s, di), dtype)
+    dt = jnp.abs(rand(rng, (b, s, di), dtype)) * 0.1
+    A = -jnp.abs(jnp.asarray(rng.normal(0, 1, (di, st)), jnp.float32))
+    B_ = rand(rng, (b, s, st), dtype)
+    C_ = rand(rng, (b, s, st), dtype)
+    h0 = jnp.asarray(rng.normal(0, 0.3, (b, di, st)), jnp.float32)
+    got_y, got_h = ops.mamba_scan(u, dt, A, B_, C_, h0, True)
+    want_y, want_h = ref.mamba_ref(u, dt, A, B_, C_, h0)
+    np.testing.assert_allclose(
+        np.asarray(got_y, np.float32), np.asarray(want_y, np.float32), **TOL[dtype]
+    )
+    np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_mamba_model_chunked_vs_naive():
+    rng = np.random.default_rng(5)
+    b, s, di, st = 1, 512, 32, 4
+    u = jnp.asarray(rng.normal(0, 1, (b, s, di)), jnp.float32)
+    dt = jnp.abs(jnp.asarray(rng.normal(0, 0.1, (b, s, di)), jnp.float32))
+    A = -jnp.abs(jnp.asarray(rng.normal(0, 1, (di, st)), jnp.float32))
+    B_ = jnp.asarray(rng.normal(0, 1, (b, s, st)), jnp.float32)
+    C_ = jnp.asarray(rng.normal(0, 1, (b, s, st)), jnp.float32)
+    y1, h1 = model_ssm.mamba_scan_chunked(u, dt, A, B_, C_, chunk=256)
+    y2, h2 = model_ssm.mamba_scan_naive(u, dt, A, B_, C_)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------- property-based sweeps
+if HAVE_HYP:
+
+    @given(
+        b=st.integers(1, 2),
+        nq=st.integers(1, 3),
+        heads=st.sampled_from([(2, 1), (2, 2), (4, 2)]),
+        dh=st.sampled_from([32, 64]),
+        causal=st.booleans(),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_property_flash_attention_random_shapes(b, nq, heads, dh, causal):
+        h, kv = heads
+        s = 64 * nq
+        rng = np.random.default_rng(b * 1000 + s + h + dh)
+        q = rand(rng, (b, s, h, dh), jnp.float32)
+        k = rand(rng, (b, s, kv, dh), jnp.float32)
+        v = rand(rng, (b, s, kv, dh), jnp.float32)
+        got = ops.flash_attention(q, k, v, causal, None, True)
+        want = ref.attention_ref(q, k, v, causal, None)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    @given(
+        s=st.sampled_from([16, 32, 64]),
+        dh=st.sampled_from([16, 32]),
+        strong_decay=st.booleans(),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_property_rwkv6_decay_regimes(s, dh, strong_decay):
+        """Weak and strong decays must both stay finite and match the oracle
+        (the fp32-range clamp argument in models/ssm.py)."""
+        rng = np.random.default_rng(s + dh)
+        b, h = 1, 2
+        scale = 3.5 if strong_decay else 0.05
+        r, k, v = (jnp.asarray(rng.normal(0, 1, (b, s, h, dh)), jnp.float32) for _ in range(3))
+        logw = -jnp.abs(jnp.asarray(rng.normal(0, scale, (b, s, h, dh)), jnp.float32)) - 1e-3
+        logw = jnp.maximum(logw, -model_ssm.MAX_DECAY)
+        u = jnp.asarray(rng.normal(0, 1, (h, dh)), jnp.float32)
+        s0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        got, _ = ops.rwkv6(r, k, v, logw, u, s0, True)
+        want, _ = ref.rwkv6_ref(r, k, v, logw, u, s0)
+        assert np.isfinite(np.asarray(got)).all()
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)

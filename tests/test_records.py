@@ -1,0 +1,131 @@
+"""Tests for machine-actionable reproducibility records (paper §3)."""
+import os
+
+import pytest
+
+from repro.core.records import (
+    BEGIN,
+    END,
+    RunFailed,
+    RunRecord,
+    rerun,
+    run,
+)
+from repro.core.repo import Repository
+
+
+def write(root, rel, data):
+    p = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    with open(p, "w") as f:
+        f.write(data)
+
+
+@pytest.fixture
+def repo(tmp_path):
+    return Repository.init(str(tmp_path / "repo"), annex_threshold=50)
+
+
+def test_record_message_roundtrip():
+    rec = RunRecord(
+        cmd="./scripts/run.sh 14", dsid="d5f31a22", inputs=["data/in.csv"],
+        outputs=["data/out.csv"], slurm_job_id=11452054,
+        slurm_outputs=["log.slurm-11452054.out"],
+    )
+    msg = rec.to_message("Solve N=14")
+    assert BEGIN in msg and END in msg
+    back = RunRecord.from_message(msg)
+    assert back.cmd == rec.cmd
+    assert back.inputs == rec.inputs
+    assert back.slurm_job_id == 11452054
+    assert RunRecord.from_message("no record here") is None
+
+
+def test_run_commits_outputs_with_record(repo):
+    write(repo.root, "input.txt", "5\n")
+    repo.save(message="add input")
+    oid = run(
+        repo,
+        cmd="python3 -c \"print(int(open('input.txt').read())**2, file=open('result.txt','w'))\"",
+        inputs=["input.txt"],
+        outputs=["result.txt"],
+        message="square the input",
+    )
+    assert open(os.path.join(repo.root, "result.txt")).read().strip() == "25"
+    commit = repo.objects.get_commit(oid)
+    rec = RunRecord.from_message(commit["message"])
+    assert rec.exit == 0
+    assert rec.outputs == ["result.txt"]
+    assert rec.dsid == repo.dsid
+
+
+def test_run_failure_does_not_commit(repo):
+    head_before = repo.head_commit()
+    with pytest.raises(RunFailed):
+        run(repo, cmd="exit 3", outputs=["whatever.txt"])
+    assert repo.head_commit() == head_before
+
+
+def test_rerun_bitwise_identical_no_new_commit(repo):
+    write(repo.root, "input.txt", "7\n")
+    repo.save(message="add input")
+    oid = run(
+        repo,
+        cmd="python3 -c \"print(int(open('input.txt').read())*2, file=open('out.txt','w'))\"",
+        inputs=["input.txt"],
+        outputs=["out.txt"],
+    )
+    head_before = repo.head_commit()
+    report = rerun(repo, oid)
+    assert report["bitwise"] is True
+    assert report["new_commit"] is None
+    assert repo.head_commit() == head_before
+
+
+def test_rerun_with_changed_input_new_commit_and_chain(repo):
+    write(repo.root, "input.txt", "7\n")
+    repo.save(message="add input")
+    oid = run(
+        repo,
+        cmd="python3 -c \"print(int(open('input.txt').read())*2, file=open('out.txt','w'))\"",
+        inputs=["input.txt"],
+        outputs=["out.txt"],
+    )
+    # change the input (paper §3 step 6: "the new ones will be used")
+    write(repo.root, "input.txt", "100\n")
+    repo.save(paths=["input.txt"], message="new input")
+    report = rerun(repo, oid)
+    assert report["bitwise"] is False
+    assert report["new_commit"] is not None
+    assert open(os.path.join(repo.root, "out.txt")).read().strip() == "200"
+    rec = RunRecord.from_message(repo.objects.get_commit(report["new_commit"])["message"])
+    assert rec.chain == [oid]
+
+
+def test_rerun_nondeterministic_detected(repo):
+    oid = run(
+        repo,
+        cmd="python3 -c \"import uuid; open('rand.txt','w').write(uuid.uuid4().hex)\"",
+        outputs=["rand.txt"],
+    )
+    report = rerun(repo, oid, report_only=True)
+    assert report["bitwise"] is False
+    assert report["outputs"]["rand.txt"] is False
+
+
+def test_rerun_fetches_annexed_inputs(tmp_path):
+    """Machine-actionability across clones: rerun works from a fresh clone
+    whose annexed inputs are pointers (the paper's idealized use case)."""
+    src = Repository.init(str(tmp_path / "src"), annex_threshold=10)
+    write(src.root, "data.csv", "1,2,3,4,5,6,7,8,9,10\n" * 10)  # annexed (big)
+    src.save(message="data")
+    oid = run(
+        src,
+        cmd="python3 -c \"rows=open('data.csv').readlines(); open('n.txt','w').write(str(len(rows)))\"",
+        inputs=["data.csv"],
+        outputs=["n.txt"],
+    )
+    clone = Repository.clone(src, str(tmp_path / "clone"))
+    report = rerun(clone, oid)
+    assert report["bitwise"] is True
+    assert open(os.path.join(clone.root, "n.txt")).read() == "10"

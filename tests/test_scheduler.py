@@ -1,0 +1,323 @@
+"""Integration tests: Slurm shim + job DB + scheduler protocol (paper §5)."""
+import json
+import os
+import time
+
+import pytest
+
+from repro.core.conflicts import OutputConflict, WildcardOutputError
+from repro.core.records import TITLE_SLURM, RunRecord
+from repro.core.repo import Repository
+from repro.core.scheduler import ScheduleError, SlurmScheduler
+from repro.core.slurm import COMPLETED, FAILED, LocalSlurmCluster
+
+
+def write(root, rel, data):
+    p = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    with open(p, "w") as f:
+        f.write(data)
+
+
+def make_job_script(root, rel, body):
+    write(root, rel, "#!/bin/bash\n" + body + "\n")
+
+
+@pytest.fixture
+def env(tmp_path):
+    repo = Repository.init(str(tmp_path / "repo"), annex_threshold=1 << 20)
+    cluster = LocalSlurmCluster(max_workers=4, sbatch_cost_s=0.0, sacct_cost_s=0.0)
+    sched = SlurmScheduler(repo, cluster)
+    yield repo, cluster, sched
+    cluster.shutdown()
+
+
+# --------------------------------------------------------------- slurm shim
+def test_local_cluster_runs_job_and_writes_slurm_files(tmp_path):
+    cluster = LocalSlurmCluster(max_workers=2)
+    wd = str(tmp_path)
+    write(wd, "job.sh", "#!/bin/bash\necho hello $SLURM_JOB_ID\n")
+    jid = cluster.sbatch("job.sh", workdir=wd)
+    cluster.wait([jid], timeout=30)
+    assert cluster.sacct(jid) == COMPLETED
+    log = open(os.path.join(wd, f"log.slurm-{jid}.out")).read()
+    assert f"hello {jid}" in log
+    meta = json.load(open(os.path.join(wd, f"slurm-job-{jid}.env.json")))
+    assert meta["SLURM_JOB_ID"] == jid
+    assert meta["State"] == COMPLETED
+    cluster.shutdown()
+
+
+def test_local_cluster_array_job_states(tmp_path):
+    cluster = LocalSlurmCluster(max_workers=4)
+    wd = str(tmp_path)
+    write(wd, "arr.sh", "#!/bin/bash\n[ \"$SLURM_ARRAY_TASK_ID\" = 2 ] && exit 1\nexit 0\n")
+    jid = cluster.sbatch("arr.sh", workdir=wd, array_n=4)
+    cluster.wait([jid], timeout=30)
+    states = cluster.sacct_tasks(jid)
+    assert states.count(COMPLETED) == 3 and states.count(FAILED) == 1
+    assert cluster.sacct(jid) == FAILED  # array COMPLETED only if all tasks are
+    cluster.shutdown()
+
+
+def test_local_cluster_timeout(tmp_path):
+    cluster = LocalSlurmCluster(max_workers=1)
+    wd = str(tmp_path)
+    write(wd, "slow.sh", "#!/bin/bash\nsleep 30\n")
+    jid = cluster.sbatch("slow.sh", workdir=wd, time_limit_s=0.3)
+    cluster.wait([jid], timeout=30)
+    assert cluster.sacct(jid) == "TIMEOUT"
+    cluster.shutdown()
+
+
+# --------------------------------------------------------------- schedule
+def test_schedule_requires_outputs(env):
+    repo, cluster, sched = env
+    make_job_script(repo.root, "job.sh", "true")
+    with pytest.raises(ScheduleError):
+        sched.schedule("job.sh", outputs=[])
+
+
+def test_schedule_rejects_wildcard_outputs(env):
+    repo, cluster, sched = env
+    make_job_script(repo.root, "job.sh", "true")
+    with pytest.raises(WildcardOutputError):
+        sched.schedule("job.sh", outputs=["results/*.csv"])
+
+
+def test_schedule_conflict_refused(env):
+    repo, cluster, sched = env
+    make_job_script(repo.root, "job.sh", "sleep 0.5; echo done > out/result.txt")
+    os.makedirs(os.path.join(repo.root, "out"))
+    sched.schedule("job.sh", outputs=["out"])
+    with pytest.raises(OutputConflict):
+        sched.schedule("job.sh", outputs=["out/result.txt"])  # inside claimed dir
+    with pytest.raises(OutputConflict):
+        sched.schedule("job.sh", outputs=["out"])  # same dir
+
+
+def test_full_schedule_finish_cycle_with_record(env):
+    repo, cluster, sched = env
+    write(repo.root, "input.txt", "21")
+    repo.save(message="input")
+    make_job_script(
+        repo.root, "job.sh",
+        'mkdir -p out && echo $(( $(cat input.txt) * 2 )) > out/answer.txt',
+    )
+    job_id = sched.schedule(
+        "job.sh", outputs=["out"], inputs=["input.txt"], message="double it"
+    )
+    job = sched.db.get(job_id)
+    cluster.wait([job["slurm_id"]], timeout=30)
+    results = sched.finish()
+    assert len(results) == 1 and results[0].state == COMPLETED
+    assert open(os.path.join(repo.root, "out/answer.txt")).read().strip() == "42"
+
+    # reproducibility record in the commit message, like paper Fig. 4
+    commit = repo.objects.get_commit(results[0].commit)
+    assert TITLE_SLURM in commit["message"]
+    rec = RunRecord.from_message(commit["message"])
+    assert rec.slurm_job_id == job["slurm_id"]
+    assert rec.cmd == "sbatch job.sh"
+    assert "out" in rec.outputs
+    assert any(f.startswith("log.slurm-") for f in rec.slurm_outputs)
+    # slurm log + env json are committed
+    tree = repo.tree_of(results[0].commit)
+    assert any(p.startswith("log.slurm-") for p in tree)
+    assert any(p.startswith("slurm-job-") and p.endswith(".env.json") for p in tree)
+
+    # protection released: same outputs schedulable again
+    sched.schedule("job.sh", outputs=["out"], inputs=["input.txt"])
+
+
+def test_many_concurrent_jobs_one_clone(env):
+    """§5.1 goal: many Slurm jobs running at the same time on ONE clone."""
+    repo, cluster, sched = env
+    n = 12
+    for j in range(n):
+        make_job_script(
+            repo.root, f"jobs/{j}/slurm.sh",
+            f'echo "result {j}" > result.txt',
+        )
+    repo.save(message="job scripts")
+    ids = [
+        sched.schedule(
+            "slurm.sh", outputs=[f"jobs/{j}/result.txt"], pwd=f"jobs/{j}"
+        )
+        for j in range(n)
+    ]
+    cluster.wait(timeout=60)
+    results = sched.finish()
+    assert len(results) == n
+    assert all(r.state == COMPLETED for r in results)
+    for j in range(n):
+        assert open(os.path.join(repo.root, f"jobs/{j}/result.txt")).read() == f"result {j}\n"
+    assert sched.db.open_jobs() == []
+    assert len(ids) == n
+
+
+def test_finish_ignores_running_jobs(env):
+    repo, cluster, sched = env
+    make_job_script(repo.root, "slow.sh", "sleep 2; echo done > slow_out.txt")
+    job_id = sched.schedule("slow.sh", outputs=["slow_out.txt"])
+    time.sleep(0.3)
+    assert sched.finish() == []  # running -> ignored for now (§5.2)
+    open_jobs = sched.list_open_jobs()
+    assert len(open_jobs) == 1
+    job = sched.db.get(job_id)
+    cluster.wait([job["slurm_id"]], timeout=30)
+    assert len(sched.finish()) == 1
+
+
+def test_failed_job_handling(env):
+    repo, cluster, sched = env
+    make_job_script(repo.root, "bad.sh", "echo partial > bad_out.txt; exit 7")
+    job_id = sched.schedule("bad.sh", outputs=["bad_out.txt"])
+    job = sched.db.get(job_id)
+    cluster.wait([job["slurm_id"]], timeout=30)
+
+    # without flags: stays in DB, outputs stay protected
+    res = sched.finish()
+    assert res[0].state == FAILED and res[0].commit is None
+    with pytest.raises(OutputConflict):
+        sched.schedule("bad.sh", outputs=["bad_out.txt"])
+
+    # --close-failed-jobs: removed, outputs released, nothing committed
+    sched.finish(close_failed_jobs=True)
+    assert sched.db.open_jobs() == []
+    job_id2 = sched.schedule("bad.sh", outputs=["bad_out.txt"])
+    job2 = sched.db.get(job_id2)
+    cluster.wait([job2["slurm_id"]], timeout=30)
+
+    # --commit-failed-jobs: handled like a success, with exit=1 recorded
+    res = sched.finish(commit_failed_jobs=True)
+    assert res[0].commit is not None
+    rec = RunRecord.from_message(repo.objects.get_commit(res[0].commit)["message"])
+    assert rec.exit == 1
+
+
+def test_array_job_single_record(env):
+    """§5.6: an array job is one job with many outputs and ONE record."""
+    repo, cluster, sched = env
+    make_job_script(
+        repo.root, "arr.sh",
+        'mkdir -p tasks/$SLURM_ARRAY_TASK_ID && echo $SLURM_ARRAY_TASK_ID > tasks/$SLURM_ARRAY_TASK_ID/r.txt',
+    )
+    job_id = sched.schedule(
+        "arr.sh", outputs=[f"tasks/{t}" for t in range(4)], array_n=4
+    )
+    job = sched.db.get(job_id)
+    cluster.wait([job["slurm_id"]], timeout=30)
+    results = sched.finish()
+    assert len(results) == 1  # one record for the entire array
+    rec = RunRecord.from_message(repo.objects.get_commit(results[0].commit)["message"])
+    assert rec.extras["array_n"] == 4
+    for t in range(4):
+        assert open(os.path.join(repo.root, f"tasks/{t}/r.txt")).read().strip() == str(t)
+
+
+def test_per_job_branches_and_octopus(env):
+    """§5.8: --octopus commits each job to its own branch + N-parent merge."""
+    repo, cluster, sched = env
+    write(repo.root, "base.txt", "base")
+    repo.save(message="base")
+    for j in range(3):
+        make_job_script(repo.root, f"j{j}.sh", f"echo {j} > out_{j}.txt")
+    for j in range(3):
+        sched.schedule(f"j{j}.sh", outputs=[f"out_{j}.txt"])
+    cluster.wait(timeout=60)
+    results = sched.finish(octopus=True)
+    assert all(r.branch and r.branch.startswith("job/") for r in results)
+    head = repo.head_commit()
+    merge = repo.objects.get_commit(head)
+    assert len(merge["parents"]) == 4  # base + 3 job branches
+    tree = repo.tree_of(head)
+    assert {"out_0.txt", "out_1.txt", "out_2.txt"} <= set(tree)
+
+
+def test_alt_dir_staging(env, tmp_path):
+    """§5.7: repo on 'local FS', job runs under alt_dir ('parallel FS')."""
+    repo, cluster, sched = env
+    alt = str(tmp_path / "pfs")
+    write(repo.root, "jobs/7/input.txt", "I")
+    make_job_script(repo.root, "jobs/7/slurm.sh", "tr I J < input.txt > output.txt")
+    repo.save(message="job setup")
+    job_id = sched.schedule(
+        "slurm.sh",
+        outputs=["jobs/7/output.txt"],
+        inputs=["jobs/7/input.txt"],
+        pwd="jobs/7",
+        alt_dir=alt,
+    )
+    job = sched.db.get(job_id)
+    # the job really ran under alt_dir
+    assert os.path.exists(os.path.join(alt, "jobs/7/input.txt"))
+    cluster.wait([job["slurm_id"]], timeout=30)
+    assert os.path.exists(os.path.join(alt, "jobs/7/output.txt"))
+    results = sched.finish()
+    assert results[0].state == COMPLETED
+    # outputs copied back into the repository and committed
+    assert open(os.path.join(repo.root, "jobs/7/output.txt")).read() == "J"
+    assert "jobs/7/output.txt" in repo.tree_of(results[0].commit)
+
+
+def test_reschedule_from_record(env):
+    """§5.2 slurm-reschedule: key argument is a commit hash from slurm-finish."""
+    repo, cluster, sched = env
+    write(repo.root, "in.txt", "5")
+    repo.save(message="in")
+    make_job_script(repo.root, "calc.sh", 'echo $(( $(cat in.txt) + 1 )) > res.txt')
+    sched.schedule("calc.sh", outputs=["res.txt"], inputs=["in.txt"])
+    cluster.wait(timeout=30)
+    (res,) = sched.finish()
+
+    # change the input; rerun via reschedule of that commit
+    write(repo.root, "in.txt", "100")
+    repo.save(paths=["in.txt"], message="new input")
+    new_ids = sched.reschedule(commitish=res.commit)
+    assert len(new_ids) == 1
+    cluster.wait(timeout=30)
+    (res2,) = sched.finish()
+    assert open(os.path.join(repo.root, "res.txt")).read().strip() == "101"
+    rec2 = RunRecord.from_message(repo.objects.get_commit(res2.commit)["message"])
+    assert rec2.cmd == "sbatch calc.sh"
+
+    # with no commit hash: reschedules the most recent slurm job
+    newest = sched.reschedule()
+    assert len(newest) == 1
+    cluster.wait(timeout=30)
+    sched.finish()
+
+
+def test_straggler_detection_and_reschedule(env):
+    repo, cluster, sched = env
+    for j in range(3):
+        make_job_script(repo.root, f"fast{j}.sh", f"sleep 0.1; echo ok > f{j}.txt")
+    make_job_script(repo.root, "strag.sh", "sleep 60; echo ok > s.txt")
+    for j in range(3):
+        sched.schedule(f"fast{j}.sh", outputs=[f"f{j}.txt"])
+    s_id = sched.schedule("strag.sh", outputs=["s.txt"])
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        fast_done = [
+            j for j, st in sched.list_open_jobs()
+            if st == COMPLETED and j["job_id"] != s_id
+        ]
+        if len(fast_done) == 3:
+            break
+        time.sleep(0.2)
+    time.sleep(0.5)  # let the straggler accumulate runtime > 3x median
+    stragglers = sched.find_stragglers(factor=3.0, min_samples=3)
+    assert [s["job_id"] for s in stragglers] == [s_id]
+    new_id = sched.reschedule_straggler(s_id)
+    assert new_id != s_id
+    assert sched.db.get(s_id)["status"] == "cancelled-straggler"
+    # cleanup: cancel the re-submitted straggler too
+    cluster.scancel(sched.db.get(new_id)["slurm_id"])
+
+
+def test_jobdb_hidden_from_versioning(env):
+    repo, cluster, sched = env
+    write(repo.root, "a.txt", "a")
+    c = repo.save(message="a")
+    assert not any("jobdb" in p or ".repro" in p for p in repo.tree_of(c))

@@ -1,0 +1,54 @@
+"""Sharding-rule unit tests (no devices needed beyond CPU default)."""
+import os
+import subprocess
+import sys
+
+from jax.sharding import PartitionSpec as P
+
+
+def _rules(**kw):
+    """Build rules against a fake mesh-shaped object (no devices)."""
+    from repro.distributed.sharding import ShardingRules
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    return ShardingRules(mesh=FakeMesh(), dp=("data",), tp="model", **kw)
+
+
+def test_baseline_specs():
+    r = _rules()
+    assert r.w_in == P(None, "model")
+    assert r.w_out == P("model", None)
+    assert r.residual == P("data", "model", None)
+    assert r.kv_cache(True) == P("data", None, None, "model")
+    assert r.kv_cache(False) == P(None, None, None, "model")
+
+
+def test_seq_kv_cache():
+    r = _rules(kv_shard="seq")
+    assert r.kv_cache(True) == P("data", "model", None, None)
+
+
+def test_fsdp_specs():
+    r = _rules(fsdp=True)
+    assert r.w_in == P("data", "model")
+    assert r.w_out == P("model", "data")
+    assert r.embed == P("data", "model")
+
+
+def test_expert_axis_modes():
+    r = _rules()
+    assert r.w_expert_in(128) == P("data", None, "model")  # ZeRO over data
+    assert r.w_expert_in(8) == P(None, "data", "model")  # 8 doesn't divide 16
+    r_ep = _rules(expert_axis="model")
+    assert r_ep.w_expert_in(128) == P("model", "data" , None)
+    assert r_ep.w_expert_out(128) == P("model", None, "data")
+    # 8 experts can't take the 16-wide model axis either -> fallback
+    assert r_ep.w_expert_in(8) == P(None, "data", "model")
+
+
+def test_no_seq_shard_residual():
+    r = _rules(seq_shard_residual=False)
+    assert r.residual == P("data", None, None)

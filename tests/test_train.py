@@ -1,0 +1,189 @@
+"""Training-substrate tests: optimizer, data determinism, checkpoint/restart
+(fault tolerance), preemption-resume bitwise identity, elastic re-sharding,
+gradient compression, async checkpointing."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core.repo import Repository
+from repro.data.tokens import SyntheticTokens
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.optim.adamw import AdamW, cosine_schedule, global_norm
+from repro.optim.compression import compress_int8, decompress_int8, ef_compress_tree
+from repro.train.checkpoint import CheckpointManager
+from repro.train.loop import train_segment
+from repro.train.steps import greedy_decode, make_train_step
+
+
+CFG = configs.get_smoke("qwen3_0_6b")
+
+
+def leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return all(np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+# ------------------------------------------------------------------ data
+def test_synthetic_tokens_deterministic_and_shardable():
+    ds = SyntheticTokens(vocab_size=1000, seq_len=16, global_batch=8, seed=3)
+    g1 = ds.global_batch_at(5)
+    g2 = ds.global_batch_at(5)
+    np.testing.assert_array_equal(g1, g2)
+    assert not np.array_equal(g1, ds.global_batch_at(6))
+    # shards partition the canonical global batch — elastic re-sharding safe
+    parts2 = [ds.shard_batch_at(5, i, 2) for i in range(2)]
+    parts4 = [ds.shard_batch_at(5, i, 4) for i in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts2), g1)
+    np.testing.assert_array_equal(np.concatenate(parts4), g1)
+
+
+# ------------------------------------------------------------------ optim
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1e-3) < 1e-9
+    assert float(lr(100)) < 1e-5
+    assert float(lr(50)) < 1e-3
+
+
+def test_int8_compression_roundtrip_and_ef():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (8, 32)), jnp.float32)
+    q, s = compress_int8(x)
+    assert q.dtype == jnp.int8
+    deq = decompress_int8(q, s, x.shape)
+    assert float(jnp.abs(deq - x).max()) < float(jnp.abs(x).max()) / 100
+    # error feedback: residual carries exactly the quantization error
+    grads = {"w": x}
+    g1, r1 = ef_compress_tree(grads, None)
+    np.testing.assert_allclose(
+        np.asarray(g1["w"] + r1["w"]), np.asarray(x), rtol=1e-6, atol=1e-6
+    )
+
+
+# ------------------------------------------------------- checkpoint/restart
+@pytest.fixture
+def repo(tmp_path):
+    return Repository.init(str(tmp_path / "repo"), annex_threshold=1024)
+
+
+def test_checkpoint_roundtrip(repo):
+    params = init_params(T.param_defs(CFG), seed=0)
+    opt = AdamW()
+    opt_state = opt.init(params)
+    ckpt = CheckpointManager(repo)
+    oid = ckpt.save(10, params, opt_state, data_step=10)
+    assert repo.resolve(oid)
+    state, manifest = ckpt.restore()
+    assert manifest["step"] == 10
+    assert leaves_equal(state["params"], params)
+    assert leaves_equal(state["opt_state"], opt_state)
+
+
+def test_checkpoint_dedup_across_steps(repo):
+    """Content-addressed annex: identical leaves across checkpoints share
+    storage keys (free dedup for unchanged weights)."""
+    params = init_params(T.param_defs(CFG), seed=0)
+    opt_state = AdamW().init(params)
+    ckpt = CheckpointManager(repo)
+    ckpt.save(1, params, opt_state)
+    n_keys_1 = len(repo.annex.keys())
+    ckpt.save(2, params, opt_state)  # identical content
+    n_keys_2 = len(repo.annex.keys())
+    # every weight leaf deduplicates; only the manifest (contains the step
+    # number) is new
+    assert n_keys_2 - n_keys_1 <= 1
+
+
+def test_async_checkpoint(repo):
+    params = init_params(T.param_defs(CFG), seed=0)
+    opt_state = AdamW().init(params)
+    ckpt = CheckpointManager(repo)
+    ckpt.save_async(5, params, opt_state)
+    ckpt.wait()
+    state, manifest = ckpt.restore()
+    assert manifest["step"] == 5
+    assert leaves_equal(state["params"], params)
+
+
+def test_preemption_resume_bitwise_identical(tmp_path):
+    """Kill-and-resume == uninterrupted run, bit for bit (deterministic data
+    + init + optimizer). This is the paper's reproducibility property applied
+    to training jobs."""
+    ds = SyntheticTokens(vocab_size=CFG.vocab_size, seq_len=16, global_batch=4, seed=1)
+
+    repo_a = Repository.init(str(tmp_path / "a"))
+    res_a = train_segment(repo_a, CFG, ds, n_steps=6, ckpt_every=2, seed=0)
+
+    repo_b = Repository.init(str(tmp_path / "b"))
+    train_segment(repo_b, CFG, ds, n_steps=3, ckpt_every=3, seed=0)  # "preempted"
+    res_b = train_segment(repo_b, CFG, ds, n_steps=6, ckpt_every=3, seed=0)  # resume
+
+    sa, _ = CheckpointManager(repo_a).restore()
+    sb, _ = CheckpointManager(repo_b).restore()
+    assert leaves_equal(sa["params"], sb["params"])
+    assert leaves_equal(sa["opt_state"]["m"], sb["opt_state"]["m"])
+    assert res_a.end_step == res_b.end_step == 6
+
+
+def test_elastic_restore_respects_shardings(repo):
+    """Restore under different 'mesh': leaves land with requested shardings
+    (simulated here with single-device shardings; the multi-device version is
+    exercised in the dry-run tests via subprocess)."""
+    params = init_params(T.param_defs(CFG), seed=0)
+    opt_state = AdamW().init(params)
+    ckpt = CheckpointManager(repo)
+    ckpt.save(1, params, opt_state)
+    dev = jax.devices()[0]
+    shardings = jax.tree.map(
+        lambda _: jax.sharding.SingleDeviceSharding(dev),
+        {"params": params, "opt_state": opt_state},
+    )
+    state, _ = ckpt.restore(shardings=shardings)
+    leaf = jax.tree.leaves(state["params"])[0]
+    assert leaf.sharding == jax.sharding.SingleDeviceSharding(dev)
+    assert leaves_equal(state["params"], params)
+
+
+def test_train_segment_loss_decreases(tmp_path):
+    repo = Repository.init(str(tmp_path / "r"))
+    ds = SyntheticTokens(vocab_size=CFG.vocab_size, seq_len=16, global_batch=4, seed=2)
+    res = train_segment(repo, CFG, ds, n_steps=10, ckpt_every=10, seed=0)
+    assert np.isfinite(res.final_loss)
+    assert res.checkpoint_commit is not None
+    # the checkpoint commit carries a machine-actionable record
+    from repro.core.records import RunRecord
+    rec = RunRecord.from_message(
+        repo.objects.get_commit(res.checkpoint_commit)["message"]
+    )
+    assert rec.extras["checkpoint_step"] == 10
+
+
+def test_greedy_decode_runs():
+    params = init_params(T.param_defs(CFG), seed=0)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, CFG.vocab_size, (2, 8)), jnp.int32)}
+    out = greedy_decode(CFG, None, params, batch, n_tokens=4, cache_len=16)
+    assert out.shape == (2, 4)
+    assert int(out.max()) < CFG.vocab_size
+
+
+def test_global_norm_matches_numpy():
+    tree = {"a": jnp.asarray([3.0]), "b": {"c": jnp.asarray([4.0])}}
+    assert abs(float(global_norm(tree)) - 5.0) < 1e-6
