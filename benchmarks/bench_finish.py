@@ -1,38 +1,57 @@
 """Paper Figures 9/10 (contribution C3): slurm-finish runtime vs repository
-size; the parallel-FS blowup and the --alt-dir fix.
+size; the parallel-FS blowup and the two ways out of it.
 
 The paper's finding: per-job finish cost grows superlinearly once the
-repository exceeds ~50 000 files ON A PARALLEL FS (>10 s/job), while a
-repository on a local FS (jobs staged via --alt-dir) stays ~flat
-(0.6-1.7 s/job). We sweep the repository's accumulated file count by
-pre-loading the FS model's file counter (the quantity GPFS metadata
-latency degrades with), then measure real finish batches at each size.
+repository exceeds ~50 000 files ON A PARALLEL FS (>10 s/job), because the
+commit path performs O(repo files) metadata ops against degraded
+directories. The paper's fix is operational (--alt-dir: keep the repo on a
+local FS); ours is also algorithmic (the incremental commit engine,
+DESIGN.md §4: O(changed paths) ops per commit).
+
+Cases:
+  finish_pfs         GPFS, incremental engine (default)  -> ~flat
+  finish_pfs_legacy  GPFS, full-rebuild engine + caches
+                     disabled (seed behavior)            -> superlinear
+  finish_altdir      local XFS + --alt-dir staging       -> ~flat
+
+Each case sweeps the repository's accumulated file count by seeding a
+synthetic base commit + the object-store shard entry counts the parallel-FS
+model degrades with (see ``common.seed_repo_files``), then measures real
+finish batches at each size.
 """
 from __future__ import annotations
+
+import os
 
 import numpy as np
 
 from repro.core.fsio import GPFS, LOCAL_XFS
 
-from .common import cleanup, make_env, timer, write_job_dir
+from .common import cleanup, make_env, seed_repo_files, timer, write_job_dir
+
+SIZES = (1_000, 10_000, 50_000, 100_000, 200_000)
 
 
-def run(jobs_per_size: int = 8, sizes=(1_000, 10_000, 50_000, 100_000, 200_000),
-        n_extra: int = 4) -> list[dict]:
+def run(jobs_per_size: int = 8, sizes=SIZES, n_extra: int = 4,
+        legacy_jobs_per_size: int = 3, cases=None) -> list[dict]:
     rows = []
-    for case, profile, alt in (
-        ("finish_pfs", GPFS, False),
-        ("finish_altdir", LOCAL_XFS, True),
-    ):
+    all_cases = (
+        ("finish_pfs", GPFS, False, "incremental"),
+        ("finish_pfs_legacy", GPFS, False, "full"),
+        ("finish_altdir", LOCAL_XFS, True, "incremental"),
+    )
+    for case, profile, alt, engine in all_cases:
+        if cases is not None and case not in cases:
+            continue
+        n_jobs = legacy_jobs_per_size if engine == "full" else jobs_per_size
         for n_files in sizes:
             root, repo, cluster, sched, clock = make_env(profile)
-            alt_dir = None
-            if alt:
-                import os
-                alt_dir = os.path.join(root, "pfs_stage")
-            repo.fs.n_files = n_files  # repository already holds n_files files
+            if engine == "full":
+                repo.objects.disable_caches()  # seed-era behavior end-to-end
+            alt_dir = os.path.join(root, "pfs_stage") if alt else None
+            seed_repo_files(repo, n_files)
             ids = []
-            for j in range(jobs_per_size):
+            for j in range(n_jobs):
                 write_job_dir(repo, j, n_extra)
                 ids.append(
                     sched.schedule("slurm.sh", outputs=[f"jobs/{j}"],
@@ -43,7 +62,7 @@ def run(jobs_per_size: int = 8, sizes=(1_000, 10_000, 50_000, 100_000, 200_000),
             for job_id in ids:
                 s0 = clock.snapshot()
                 with timer() as t:
-                    res = sched.finish(job_id=job_id)
+                    res = sched.finish(job_id=job_id, engine=engine)
                 assert res and res[0].commit, res
                 wall_t.append(t["s"])
                 sim_t.append(clock.snapshot() - s0)
@@ -51,6 +70,7 @@ def run(jobs_per_size: int = 8, sizes=(1_000, 10_000, 50_000, 100_000, 200_000),
             rows.append({
                 "bench": "finish",
                 "case": case,
+                "engine": engine,
                 "repo_files": n_files,
                 "outputs_per_job": 4 + n_extra,
                 "sim_s_per_job": float(np.mean(sim_t)),

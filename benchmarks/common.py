@@ -40,6 +40,45 @@ def make_env(profile: FSProfile, n_extra_outputs: int = 0, max_workers: int = 8)
     return root, repo, cluster, sched, clock
 
 
+def seed_repo_files(repo, n_files: int, files_per_dir: int = 50) -> None:
+    """Emulate a repository that has already accumulated ``n_files`` committed
+    files (the paper's independent variable).
+
+    Materializes the *tree objects* of a synthetic base commit for real —
+    ``data/d<i>/f<j>`` entries sharing one blob — so a full-rebuild save walks
+    a genuinely large tree, and seeds the modeled entry counts of the object
+    store's shard directories to ``n_files / 256`` (one entry per object the
+    repository would have accumulated), which is what parallel-FS metadata
+    latency degrades with. Charges accrued during seeding happen before the
+    benchmark snapshots the clock, so they never pollute per-job figures.
+    """
+    if n_files <= 0:
+        return
+    blob_oid = repo.objects.put_blob(b"seeded file payload\n")
+    flat = {}
+    for i in range(0, n_files, files_per_dir):
+        d = f"data/d{i // files_per_dir:05d}"
+        for j in range(min(files_per_dir, n_files - i)):
+            flat[f"{d}/f{j:03d}"] = {"t": "blob", "oid": blob_oid}
+    tree_oid = repo._write_nested(flat)
+    branch = repo.current_branch()
+    base = repo.branch_head(branch)
+    commit_oid = repo.objects.put_commit({
+        "tree": tree_oid,
+        "parents": [base] if base else [],
+        "author": "seed",
+        "timestamp": time.time(),
+        "message": f"synthetic base: {n_files} files",
+    })
+    repo.set_branch(branch, commit_oid)
+    per_shard = n_files // 256
+    for shard in range(256):
+        repo.fs.preload_dir_entries(
+            os.path.join(repo.objects.root, f"{shard:02x}"), per_shard
+        )
+    repo.fs.n_files += n_files
+
+
 def write_job_dir(repo, j: int, n_extra_outputs: int = 0) -> list[str]:
     """One sub-directory per job with the Slurm job script inside (paper's
     experiment setup). Returns the job's output paths."""

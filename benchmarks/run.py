@@ -1,13 +1,98 @@
 """Benchmark harness: one benchmark per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (one row per benchmark case) plus a
-summary of the paper-claim checks. Roofline terms (deliverable g) are
-produced by ``repro.launch.roofline`` from the dry-run artifacts; this file
-covers the paper's own evaluation (Figures 6-10).
+summary of the paper-claim checks, and writes ``BENCH_finish.json``
+(repo_files -> sim_s_per_job rows) so the finish-scaling trajectory is
+tracked across PRs. Roofline terms (deliverable g) are produced by
+``repro.launch.roofline`` from the dry-run artifacts; this file covers the
+paper's own evaluation (Figures 6-10).
+
+``python -m benchmarks.run --check-finish`` runs only a two-point finish
+sweep (1k and 100k repo files, incremental engine) as a fast perf-regression
+gate: it fails if the per-job finish cost at 100k files exceeds 3x the cost
+at 1k files.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
+
+BENCH_FINISH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_finish.json")
+
+
+def _write_finish_json(rows: list[dict], merge: bool = False) -> None:
+    finish_rows = [
+        {
+            "case": r["case"],
+            "engine": r.get("engine", "incremental"),
+            "repo_files": r["repo_files"],
+            "sim_s_per_job": r["sim_s_per_job"],
+            "wall_us_per_job": r["wall_us_per_job"],
+        }
+        for r in rows
+        if r["bench"] == "finish"
+    ]
+    path = os.path.normpath(BENCH_FINISH_JSON)
+    if merge and os.path.exists(path):
+        # partial sweeps (--check-finish) update their rows in place and
+        # keep the rest of the tracked trajectory
+        with open(path) as f:
+            old = {(r["case"], r["repo_files"]): r for r in json.load(f)}
+        old.update({(r["case"], r["repo_files"]): r for r in finish_rows})
+        finish_rows = [old[k] for k in sorted(old)]
+    with open(path, "w") as f:
+        json.dump(finish_rows, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path} ({len(finish_rows)} rows)", file=sys.stderr)
+
+
+def _finish_claims(fin: dict) -> list[tuple[str, bool, str]]:
+    claims = []
+    if ("finish_pfs_legacy", 200_000) in fin and ("finish_pfs_legacy", 1_000) in fin:
+        blow = fin[("finish_pfs_legacy", 200_000)]["sim_s_per_job"]
+        small = fin[("finish_pfs_legacy", 1_000)]["sim_s_per_job"]
+        claims.append((
+            "C3: full-rebuild finish blows up past 50k files on the parallel FS"
+            " (paper: >10s/job)",
+            blow > 10.0 and blow > 5 * small, f"{small:.2f}s -> {blow:.2f}s",
+        ))
+    if ("finish_altdir", 200_000) in fin:
+        alt_big = fin[("finish_altdir", 200_000)]["sim_s_per_job"]
+        claims.append(("C3: --alt-dir stays flat (paper: 0.6-1.7s/job)",
+                       alt_big < 3.0, f"{alt_big:.2f}s at 200k files"))
+    if ("finish_pfs", 200_000) in fin and ("finish_pfs", 1_000) in fin:
+        inc_big = fin[("finish_pfs", 200_000)]["sim_s_per_job"]
+        inc_small = fin[("finish_pfs", 1_000)]["sim_s_per_job"]
+        claims.append((
+            "incremental engine: finish ~flat on the parallel FS"
+            " (200k files within 2x of 1k)",
+            inc_big < 2.0 * inc_small, f"{inc_small:.2f}s -> {inc_big:.2f}s",
+        ))
+    if ("finish_pfs", 100_000) in fin and ("finish_pfs", 1_000) in fin:
+        mid = fin[("finish_pfs", 100_000)]["sim_s_per_job"]
+        inc_small = fin[("finish_pfs", 1_000)]["sim_s_per_job"]
+        claims.append((
+            "perf-regression gate: finish at 100k files <= 3x the 1k cost",
+            mid <= 3.0 * inc_small, f"{inc_small:.2f}s -> {mid:.2f}s",
+        ))
+    return claims
+
+
+def check_finish() -> None:
+    """Fast regression gate on finish scaling (incremental engine only)."""
+    from . import bench_finish
+
+    # same jobs_per_size as the full sweep so merged rows share one methodology
+    rows = bench_finish.run(sizes=(1_000, 100_000), cases=("finish_pfs",))
+    _write_finish_json(rows, merge=True)
+    fin = {(r["case"], r["repo_files"]): r for r in rows}
+    ok = True
+    for name, passed, detail in _finish_claims(fin):
+        ok &= passed
+        print(f"# [{'PASS' if passed else 'FAIL'}] {name}: {detail}")
+    if not ok:
+        raise SystemExit(1)
 
 
 def main() -> None:
@@ -22,6 +107,8 @@ def main() -> None:
     rows += bench_conflicts.run()
     print("# running bench_octopus (Fig. 6 / A2) ...", file=sys.stderr)
     rows += bench_octopus.run()
+
+    _write_finish_json(rows)
 
     print("name,us_per_call,derived")
     claims = []
@@ -60,13 +147,7 @@ def main() -> None:
              f"offset={off_pfs:.2f}s alt={alt['sim_s_per_job'] - base['sim_s_per_job']:.2f}s")
         )
     fin = {(r["case"], r["repo_files"]): r for r in rows if r["bench"] == "finish"}
-    blow = fin[("finish_pfs", 200_000)]["sim_s_per_job"]
-    small = fin[("finish_pfs", 1_000)]["sim_s_per_job"]
-    alt_big = fin[("finish_altdir", 200_000)]["sim_s_per_job"]
-    claims.append(("C3: parallel-FS finish blowup past 50k files (paper: >10s/job)",
-                   blow > 10.0 and blow > 5 * small, f"{small:.2f}s -> {blow:.2f}s"))
-    claims.append(("C3: --alt-dir stays flat (paper: 0.6-1.7s/job)",
-                   alt_big < 3.0, f"{alt_big:.2f}s at 200k files"))
+    claims += _finish_claims(fin)
     conf = {r["scheduled_jobs"]: r for r in rows if r["bench"] == "conflict_check"}
     claims.append(("§5.5: conflict check ~O(1) in scheduled jobs",
                    conf[50_000]["wall_us_per_check"] < 20 * conf[100]["wall_us_per_check"],
@@ -84,4 +165,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    if "--check-finish" in sys.argv[1:]:
+        check_finish()
+    else:
+        main()

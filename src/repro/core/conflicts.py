@@ -64,6 +64,21 @@ def proper_prefixes(name: str) -> list[str]:
     return out
 
 
+def check_intra_job(normed: list[str]) -> None:
+    """Reject two outputs of the same job that are equal or nested (used by
+    both the in-memory N/P sets and the job database's indexed checks).
+    O(outputs x depth): each output's proper prefixes are probed against the
+    full set, which catches nesting in either listing order."""
+    seen = set(normed)
+    if len(seen) != len(normed):
+        dup = next(n for n in normed if normed.count(n) > 1)
+        raise OutputConflict(dup, "listed twice in the same job")
+    for n in normed:
+        for pre in proper_prefixes(n):
+            if pre in seen:
+                raise OutputConflict(n, f"nested under sibling output {pre!r}")
+
+
 class ProtectedOutputs:
     """In-memory N/P sets with the three §5.5 checks.
 
@@ -109,19 +124,7 @@ class ProtectedOutputs:
         normed = [normalize(n) for n in names]
         for n in normed:
             self.check(n)
-        # intra-job nesting check
-        seen = set()
-        for n in normed:
-            if n in seen:
-                raise OutputConflict(n, "listed twice in the same job")
-            for pre in proper_prefixes(n):
-                if pre in seen:
-                    raise OutputConflict(n, f"nested under sibling output {pre!r}")
-            seen.add(n)
-        for n in normed:
-            for other in normed:
-                if other != n and other in proper_prefixes(n):
-                    raise OutputConflict(n, f"nested under sibling output {other!r}")
+        check_intra_job(normed)
         for n in normed:
             self.add(n, job_id)
         return normed

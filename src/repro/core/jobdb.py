@@ -5,6 +5,11 @@ A sqlite database *hidden from the data repository* — it lives under
 version store. Its scope is the current clone; a single instance is shared by
 all branches. It tracks every scheduled-but-not-finished job and persists the
 protected-output sets N and P used by the §5.5 conflict checks.
+
+The checks run as indexed point lookups against the ``protected`` table —
+O(path depth) queries per output — never by loading the whole table into
+memory, so ``add_job``/``check_outputs`` stay O(1) in the number of
+scheduled jobs and protected paths.
 """
 from __future__ import annotations
 
@@ -14,7 +19,14 @@ import sqlite3
 import threading
 import time
 
-from .conflicts import OutputConflict, ProtectedOutputs
+from .conflicts import (
+    OutputConflict,
+    WildcardOutputError,
+    check_intra_job,
+    has_wildcard,
+    normalize,
+    proper_prefixes,
+)
 
 _SCHEMA = """
 CREATE TABLE IF NOT EXISTS jobs (
@@ -80,7 +92,6 @@ class JobDB:
         """
         conn = self._conn()
         with conn:  # single transaction: check + insert + protect
-            prot = self._load_protected(conn)
             cur = conn.execute(
                 "INSERT INTO jobs (script, script_args, pwd, inputs, outputs,"
                 " alt_dir, is_array, array_n, message, submitted_at)"
@@ -99,14 +110,17 @@ class JobDB:
                 ),
             )
             job_id = cur.lastrowid
-            normed = prot.check_and_add_all(outputs, job_id)  # raises on conflict
+            normed = [normalize(n) for n in outputs]
+            for n in normed:
+                self._check_one(conn, n)  # raises on conflict -> rollback
+            check_intra_job(normed)
             conn.executemany(
                 "INSERT OR IGNORE INTO protected (name, kind, job_id) VALUES (?,?,?)",
                 [(n, "name", job_id) for n in normed]
                 + [
                     (p, "prefix", job_id)
                     for n in normed
-                    for p in _prefixes(n)
+                    for p in proper_prefixes(n)
                 ],
             )
             conn.execute(
@@ -116,21 +130,43 @@ class JobDB:
         return job_id
 
     @staticmethod
-    def _load_protected(conn: sqlite3.Connection) -> ProtectedOutputs:
-        prot = ProtectedOutputs()
-        for row in conn.execute("SELECT name, kind, job_id FROM protected"):
-            if row["kind"] == "name":
-                prot.names[row["name"]] = row["job_id"]
-            else:
-                prot.prefixes.setdefault(row["name"], set()).add(row["job_id"])
-        return prot
+    def _check_one(conn: sqlite3.Connection, name: str) -> None:
+        """The three §5.5 checks as indexed point lookups against the
+        persisted N/P sets — O(path depth) queries, never a full table load.
+        ``name`` must already be normalized."""
+        if has_wildcard(name):
+            raise WildcardOutputError(name)
+        row = conn.execute(
+            "SELECT job_id FROM protected WHERE name=? AND kind='name' LIMIT 1",
+            (name,),
+        ).fetchone()
+        if row:  # check (1): name in N
+            raise OutputConflict(name, "already protected", row[0])
+        row = conn.execute(
+            "SELECT job_id FROM protected WHERE name=? AND kind='prefix' LIMIT 1",
+            (name,),
+        ).fetchone()
+        if row:  # check (2): name in P
+            raise OutputConflict(
+                name, "is a super-directory of another job's output", row[0]
+            )
+        for pre in proper_prefixes(name):  # check (3): a proper prefix in N
+            row = conn.execute(
+                "SELECT job_id FROM protected WHERE name=? AND kind='name' LIMIT 1",
+                (pre,),
+            ).fetchone()
+            if row:
+                raise OutputConflict(
+                    name,
+                    f"super-directory {pre!r} is claimed exclusively",
+                    row[0],
+                )
 
     def check_outputs(self, outputs: list[str]) -> None:
         """Non-mutating §5.5 check (used by reschedule previews)."""
         conn = self._conn()
-        prot = self._load_protected(conn)
         for o in outputs:
-            prot.check(o)
+            self._check_one(conn, normalize(o))
 
     # ------------------------------------------------------------------
     def set_slurm_id(self, job_id: int, slurm_id: int) -> None:
@@ -172,11 +208,6 @@ class JobDB:
         return self._conn().execute(
             "SELECT COUNT(*) FROM protected WHERE kind='name'"
         ).fetchone()[0]
-
-
-def _prefixes(name: str) -> list[str]:
-    parts = name.split("/")
-    return ["/".join(parts[:i]) for i in range(len(parts) - 1, 0, -1)]
 
 
 def _to_dict(row: sqlite3.Row) -> dict:

@@ -15,17 +15,33 @@ Commits:
      "timestamp": float, "message": str}
 
 Octopus merges are just commits with len(parents) > 2, exactly like git.
+
+Caching (DESIGN.md §4): content-addressed objects are immutable, so the store
+keeps (a) a *known-oid set* — once an oid has been written or observed on
+disk, later ``put``/``has`` calls for it are answered in memory with no
+``exists`` probe, and (b) LRU caches of tree/commit *payload bytes*, so
+walking the same (sub)tree twice never re-reads, decompresses, or charges
+filesystem ops. Hits are re-parsed from the cached bytes, so every caller
+gets a private dict it may mutate freely (the pre-cache contract).
+``disable_caches()`` restores the seed-era always-probe behavior for
+benchmarking the pre-incremental implementation.
 """
 from __future__ import annotations
 
 import json
 import os
+import threading
 import zlib
+from collections import OrderedDict
 
 from .fsio import FS
 from .hashing import sha256_bytes
 
 KINDS = ("blob", "tree", "commit")
+
+DEFAULT_TREE_CACHE = 8192
+DEFAULT_COMMIT_CACHE = 8192
+KNOWN_OID_CAP = 1 << 20  # bound the probe-skip set for long-lived processes
 
 
 def canonical_json(obj) -> bytes:
@@ -33,20 +49,79 @@ def canonical_json(obj) -> bytes:
 
 
 class ObjectStore:
-    def __init__(self, root: str, fs: FS):
+    def __init__(
+        self,
+        root: str,
+        fs: FS,
+        tree_cache_size: int = DEFAULT_TREE_CACHE,
+        commit_cache_size: int = DEFAULT_COMMIT_CACHE,
+    ):
         self.root = root
         self.fs = fs
+        self._lock = threading.Lock()
+        self._caches_enabled = True
+        self._known: set[str] = set()
+        # oid -> canonical payload bytes; parsed per hit so returned dicts
+        # are never shared (callers may mutate them, as before caching)
+        self._tree_cache: OrderedDict[str, bytes] = OrderedDict()
+        self._commit_cache: OrderedDict[str, bytes] = OrderedDict()
+        self._tree_cache_size = tree_cache_size
+        self._commit_cache_size = commit_cache_size
+
+    def disable_caches(self) -> None:
+        """Revert to uncached (seed-era) behavior: every ``put`` probes the
+        filesystem, every ``get_tree``/``get_commit`` re-reads and re-parses.
+        Used by benchmarks to measure the pre-incremental implementation."""
+        with self._lock:
+            self._caches_enabled = False
+            self._known.clear()
+            self._tree_cache.clear()
+            self._commit_cache.clear()
 
     def _path(self, oid: str) -> str:
         return os.path.join(self.root, oid[:2], oid[2:])
 
+    # -- cache plumbing --------------------------------------------------
+    def _mark_known(self, oid: str) -> None:
+        if self._caches_enabled:
+            with self._lock:
+                if len(self._known) >= KNOWN_OID_CAP:
+                    # reset rather than evict: the set only skips probes, so
+                    # dropping it costs one exists per oid, never correctness
+                    self._known.clear()
+                self._known.add(oid)
+
+    def _cache_get(self, cache: OrderedDict, oid: str) -> bytes | None:
+        if not self._caches_enabled:
+            return None
+        with self._lock:
+            payload = cache.get(oid)
+            if payload is not None:
+                cache.move_to_end(oid)
+            return payload
+
+    def _cache_put(self, cache: OrderedDict, size: int, oid: str, payload: bytes) -> None:
+        if not self._caches_enabled:
+            return
+        with self._lock:
+            cache[oid] = payload
+            cache.move_to_end(oid)
+            while len(cache) > size:
+                cache.popitem(last=False)
+
+    # -- core ------------------------------------------------------------
     def put(self, kind: str, payload: bytes) -> str:
         assert kind in KINDS, kind
         framed = kind.encode() + b" " + str(len(payload)).encode() + b"\0" + payload
         oid = sha256_bytes(framed)
+        if self._caches_enabled:
+            with self._lock:
+                if oid in self._known:
+                    return oid
         path = self._path(oid)
         if not self.fs.exists(path):
             self.fs.write_bytes(path, zlib.compress(framed, 1))
+        self._mark_known(oid)
         return oid
 
     def get(self, oid: str) -> tuple[str, bytes]:
@@ -55,20 +130,34 @@ class ObjectStore:
         kind, _, length = header.decode().partition(" ")
         if int(length) != len(payload):
             raise IOError(f"corrupt object {oid}")
+        self._mark_known(oid)
         return kind, payload
 
     def has(self, oid: str) -> bool:
-        return self.fs.exists(self._path(oid))
+        if self._caches_enabled:
+            with self._lock:
+                if oid in self._known:
+                    return True
+        if self.fs.exists(self._path(oid)):
+            self._mark_known(oid)
+            return True
+        return False
 
     # -- typed helpers ---------------------------------------------------
     def put_blob(self, data: bytes) -> str:
         return self.put("blob", data)
 
     def put_tree(self, entries: dict) -> str:
-        return self.put("tree", canonical_json(entries))
+        payload = canonical_json(entries)
+        oid = self.put("tree", payload)
+        self._cache_put(self._tree_cache, self._tree_cache_size, oid, payload)
+        return oid
 
     def put_commit(self, commit: dict) -> str:
-        return self.put("commit", canonical_json(commit))
+        payload = canonical_json(commit)
+        oid = self.put("commit", payload)
+        self._cache_put(self._commit_cache, self._commit_cache_size, oid, payload)
+        return oid
 
     def get_blob(self, oid: str) -> bytes:
         kind, payload = self.get(oid)
@@ -77,13 +166,21 @@ class ObjectStore:
         return payload
 
     def get_tree(self, oid: str) -> dict:
+        cached = self._cache_get(self._tree_cache, oid)
+        if cached is not None:
+            return json.loads(cached)
         kind, payload = self.get(oid)
         if kind != "tree":
             raise TypeError(f"{oid} is a {kind}, not a tree")
+        self._cache_put(self._tree_cache, self._tree_cache_size, oid, payload)
         return json.loads(payload)
 
     def get_commit(self, oid: str) -> dict:
+        cached = self._cache_get(self._commit_cache, oid)
+        if cached is not None:
+            return json.loads(cached)
         kind, payload = self.get(oid)
         if kind != "commit":
             raise TypeError(f"{oid} is a {kind}, not a commit")
+        self._cache_put(self._commit_cache, self._commit_cache_size, oid, payload)
         return json.loads(payload)

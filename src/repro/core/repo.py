@@ -5,6 +5,13 @@ This is git/git-annex/DataLad rebuilt as an in-process library (see DESIGN.md
 ``merge_octopus`` is the N-parent merge of paper §5.8, annex get/drop/whereis
 follow §2.3/§2.6. Every filesystem touch goes through :class:`FS` so the
 parallel-FS cost model applies to the entire stack.
+
+Committing is *incremental* (DESIGN.md §4): ``save`` diffs the staged paths
+against the base commit and rebuilds only the O(changed x depth) dirty spine
+of the tree, reusing unchanged subtree oids verbatim — no re-read, no
+re-hash, no ``exists`` probe for untouched subtrees. ``save(engine="full")``
+keeps the seed-era full rebuild for equivalence testing and benchmarking;
+both engines produce byte-identical tree oids for the same content.
 """
 from __future__ import annotations
 
@@ -15,6 +22,7 @@ import time
 import uuid
 
 from .annex import AnnexStore, make_pointer, parse_pointer
+from .conflicts import proper_prefixes
 from .fsio import FS, NULL_FS, FSProfile, SimClock
 from .hashing import annex_key_for_bytes
 from .objects import ObjectStore
@@ -180,11 +188,11 @@ class Repository:
             return self.branch_head(commitish)  # type: ignore[return-value]
         if self.objects.has(commitish):
             return commitish
-        # prefix search
+        # prefix search, charged like every other metadata op
         matches = []
-        obj_root = self.objects.root
-        if len(commitish) >= 4 and os.path.isdir(os.path.join(obj_root, commitish[:2])):
-            for f in os.listdir(os.path.join(obj_root, commitish[:2])):
+        shard = os.path.join(self.objects.root, commitish[:2])
+        if len(commitish) >= 4 and self.fs.isdir(shard):
+            for f in self.fs.listdir(shard):
                 if (commitish[:2] + f).startswith(commitish):
                     matches.append(commitish[:2] + f)
         if len(matches) == 1:
@@ -234,6 +242,86 @@ class Repository:
 
         return emit(root)
 
+    def _tree_oid_of(self, commit_oid: str | None) -> str | None:
+        if commit_oid is None:
+            return None
+        return self.objects.get_commit(commit_oid)["tree"] or None
+
+    def _update_tree(
+        self, base_tree_oid: str | None, changes: dict[str, dict | None]
+    ) -> str | None:
+        """Incrementally rebuild a tree: apply ``changes`` ({relpath: entry},
+        None = delete) on top of ``base_tree_oid``, re-emitting only the dirty
+        spine. Untouched sibling subtrees keep their oid verbatim — they are
+        never read, re-hashed, or existence-probed. Returns the new tree oid
+        (None for an empty tree). O(changed paths x depth)."""
+        if not changes:
+            return base_tree_oid
+        entries = self.objects.get_tree(base_tree_oid) if base_tree_oid else {}
+        direct: dict[str, dict | None] = {}
+        groups: dict[str, dict[str, dict | None]] = {}
+        for path, entry in changes.items():
+            name, sep, rest = path.partition("/")
+            if sep:
+                groups.setdefault(name, {})[rest] = entry
+            else:
+                direct[name] = entry
+        for name, sub in groups.items():
+            if direct.get(name) is not None:
+                if any(e is not None for e in sub.values()):
+                    raise ConflictError(f"file/directory conflict at {name!r}")
+                continue  # the direct file replaces the subtree; the group's
+                # deletions of its former contents are implied
+            existing = entries.get(name)
+            sub_base = (
+                existing["oid"] if existing and existing["t"] == "tree" else None
+            )
+            sub_oid = self._update_tree(sub_base, sub)
+            if sub_oid is None:
+                entries.pop(name, None)
+            else:
+                entries[name] = {"t": "tree", "oid": sub_oid}
+        for name, entry in direct.items():
+            if entry is None:
+                if name not in groups:  # a group rebuilding here supersedes it
+                    entries.pop(name, None)
+            else:
+                entries[name] = entry
+        if not entries:
+            return None
+        return self.objects.put_tree(entries)
+
+    def _diff_trees(
+        self, a_oid: str | None, b_oid: str | None, prefix: str = ""
+    ) -> dict[str, dict | None]:
+        """Flat changes turning tree ``a`` into tree ``b``: {path: entry} for
+        adds/modifications, {path: None} for deletions. Subtrees with equal
+        oids are skipped without reading them — O(changed), not O(tree)."""
+        if a_oid == b_oid:
+            return {}
+        a = self.objects.get_tree(a_oid) if a_oid else {}
+        b = self.objects.get_tree(b_oid) if b_oid else {}
+        out: dict[str, dict | None] = {}
+        for name, be in b.items():
+            ae = a.get(name)
+            if ae == be:
+                continue
+            p = prefix + name
+            a_sub = ae["oid"] if ae is not None and ae["t"] == "tree" else None
+            if be["t"] == "tree":
+                out.update(self._diff_trees(a_sub, be["oid"], p + "/"))
+            else:
+                out[p] = be
+        for name, ae in a.items():
+            if name in b:
+                continue
+            p = prefix + name
+            if ae["t"] == "tree":
+                out.update(self._diff_trees(ae["oid"], None, p + "/"))
+            else:
+                out[p] = None
+        return out
+
     # -- staging/saving ----------------------------------------------------
     def _is_ignored(self, relpath: str) -> bool:
         return relpath == REPRO_DIR or relpath.startswith(REPRO_DIR + "/")
@@ -278,6 +366,40 @@ class Repository:
                 raise FileNotFoundError(f"no such path: {p}")
         return out
 
+    def stage_paths(self, paths) -> dict[str, dict]:
+        """Hash ``paths`` (files or directories) into tree entries, writing
+        blob/annex content as needed. Returns {relpath: entry}."""
+        return {rel: self._hash_working_file(rel) for rel in self._expand_paths(paths)}
+
+    def commit_changes(
+        self,
+        changes: dict[str, dict | None],
+        message: str = "",
+        parents: list[str] | None = None,
+        author: str = "repro",
+        allow_empty: bool = False,
+        base_commit: str | None = None,
+        base_tree: str | None = None,
+    ) -> tuple[str, str | None]:
+        """Low-level incremental commit: apply ``changes`` on top of
+        ``base_tree`` and write a commit object. Does NOT move any ref —
+        callers (``save``, the scheduler's batched finish) do that. Returns
+        ``(commit_oid, tree_oid)``; if nothing changed and ``allow_empty`` is
+        false, returns the base commit unchanged."""
+        tree_oid = self._update_tree(base_tree, changes)
+        if tree_oid == base_tree and base_commit is not None and not allow_empty:
+            return base_commit, base_tree  # nothing changed (paper §3 step 8)
+        commit = {
+            "tree": tree_oid or "",
+            "parents": parents
+            if parents is not None
+            else ([base_commit] if base_commit else []),
+            "author": author,
+            "timestamp": time.time(),
+            "message": message,
+        }
+        return self.objects.put_commit(commit), tree_oid
+
     def save(
         self,
         paths=None,
@@ -286,19 +408,71 @@ class Repository:
         author: str = "repro",
         allow_empty: bool = False,
         branch: str | None = None,
+        engine: str = "incremental",
     ) -> str:
         """Stage ``paths`` (files or directories; None = whole worktree) on top
-        of the current tree and commit. Returns the commit oid."""
+        of the current tree and commit. Returns the commit oid.
+
+        ``engine="incremental"`` (default) rebuilds only the dirty spine of
+        the tree — O(changed paths x depth). ``engine="full"`` re-reads and
+        re-emits the entire tree (the seed-era behavior, kept for equivalence
+        testing and benchmarks); both emit identical oids for the same
+        content."""
+        if engine not in ("incremental", "full"):
+            raise ValueError(f"unknown save engine: {engine!r}")
         branch = branch or self.current_branch()
         base = self.branch_head(branch)
+        if engine == "full":
+            return self._save_full(paths, message, parents, author, allow_empty, branch, base)
+        base_tree = self._tree_oid_of(base)
+        changes: dict[str, dict | None] = {}
+        if paths is None:
+            # a worktree-wide save must see the full flat tree to notice
+            # tracked files that disappeared; it is inherently O(worktree).
+            flat = self.tree_of(base) if base else {}
+            top = [p for p in os.listdir(self.root) if not self._is_ignored(p)]
+            expanded = set(self._expand_paths(top))
+            for known in flat:
+                # isfile, not exists: a tracked file whose path is now a
+                # directory is gone (its contents show up in ``expanded``)
+                if known not in expanded and not os.path.isfile(
+                    os.path.join(self.root, known)
+                ):
+                    changes[known] = None
+            for rel in sorted(expanded):
+                entry = self._hash_working_file(rel)
+                if flat.get(rel) != entry:
+                    changes[rel] = entry
+        else:
+            changes = dict(self.stage_paths(paths))
+        oid, _ = self.commit_changes(
+            changes,
+            message=message,
+            parents=parents,
+            author=author,
+            allow_empty=allow_empty,
+            base_commit=base,
+            base_tree=base_tree,
+        )
+        if oid != base:
+            self.set_branch(branch, oid)
+        return oid
+
+    def _save_full(
+        self, paths, message, parents, author, allow_empty, branch, base
+    ) -> str:
+        """Seed-era full rebuild: read the whole base tree, re-serialize and
+        re-put every tree object. O(repo files) — kept as the reference
+        implementation the incremental engine is tested against."""
         flat = self.tree_of(base) if base else {}
         before = dict(flat)
         if paths is None:
             paths = [p for p in os.listdir(self.root) if not self._is_ignored(p)]
             # full save: drop tracked files that disappeared from the worktree
+            # (isfile: a path that is now a directory no longer holds the file)
             expanded = set(self._expand_paths(paths))
             for known in list(flat):
-                if known not in expanded and not os.path.exists(
+                if known not in expanded and not os.path.isfile(
                     os.path.join(self.root, known)
                 ):
                     del flat[known]
@@ -306,6 +480,14 @@ class Repository:
                 flat[rel] = self._hash_working_file(rel)
         else:
             for rel in self._expand_paths(paths):
+                # a staged path shadows stale base entries: an ancestor that
+                # was a file (now a directory on disk) and any descendants of
+                # a path that is a file now — mirrors the incremental engine
+                for pre in proper_prefixes(rel):
+                    flat.pop(pre, None)
+                prefix = rel + "/"
+                for stale in [k for k in flat if k.startswith(prefix)]:
+                    del flat[stale]
                 flat[rel] = self._hash_working_file(rel)
         if flat == before and base is not None and not allow_empty:
             return base  # nothing changed -> no commit (paper §3 step 8)
@@ -324,16 +506,46 @@ class Repository:
         return oid
 
     # -- checkout ----------------------------------------------------------
+    def _collect_tree_paths(
+        self, tree_oid: str, prefix: str, targets: list[str], out: dict[str, dict]
+    ) -> None:
+        """Pruned tree walk: collect {relpath: entry} for every non-tree entry
+        equal to or below one of ``targets``, descending only into directories
+        on a target's spine. Targets are grouped by leading path component at
+        each level (like ``_update_tree``), so the walk is O(entries visited +
+        targets), not O(entries x targets)."""
+        whole: set[str] = set()  # names whose entire subtree is targeted
+        groups: dict[str, list[str]] = {}  # name -> deeper targets within it
+        for t in targets:
+            name, sep, rest = t.partition("/")
+            if sep:
+                groups.setdefault(name, []).append(rest)
+            else:
+                whole.add(name)
+        collect_all = "" in whole  # sentinel: this whole subtree is targeted
+        for name, entry in self.objects.get_tree(tree_oid).items():
+            p = prefix + name
+            if entry["t"] == "tree":
+                if collect_all or name in whole:
+                    self._collect_tree_paths(entry["oid"], p + "/", [""], out)
+                elif name in groups:
+                    self._collect_tree_paths(entry["oid"], p + "/", groups[name], out)
+            elif collect_all or name in whole:
+                out[p] = entry
+
     def checkout(self, commitish: str, paths: list[str] | None = None) -> None:
         """Materialize files from a commit into the worktree. Annexed files are
         written as content when present in any store, else as pointer files."""
         oid = self.resolve(commitish)
-        flat = self.tree_of(oid)
-        targets = flat if paths is None else {
-            p: e
-            for p, e in flat.items()
-            if any(p == t or p.startswith(t.rstrip("/") + "/") for t in paths)
-        }
+        if paths is None:
+            targets = self.tree_of(oid)
+        else:
+            targets = {}
+            tree_oid = self._tree_oid_of(oid)
+            if tree_oid:
+                self._collect_tree_paths(
+                    tree_oid, "", [t.rstrip("/") for t in paths], targets
+                )
         for relpath, entry in targets.items():
             abspath = os.path.join(self.root, relpath)
             if entry["t"] == "blob":
@@ -375,26 +587,32 @@ class Repository:
         """N-parent merge (paper §5.8 / Fig. 6). Union of trees; a path changed
         to different contents by different parents is a conflict — concurrent
         jobs with overlapping outputs were already rejected at schedule time,
-        so this only fires on misuse."""
+        so this only fires on misuse.
+
+        Incremental: each branch is diffed against the base tree with subtree
+        oids compared first, so unchanged subtrees are never read, and the
+        merged tree rebuilds only the union of the branches' dirty spines —
+        O(total changes), not O(branches x repo files)."""
         branch = self.current_branch()
         base_oid = self.head_commit()
-        base = self.tree_of(base_oid) if base_oid else {}
-        merged = dict(base)
+        base_tree = self._tree_oid_of(base_oid)
+        merged: dict[str, dict] = {}
         provenance: dict[str, str] = {}
         parent_oids = [base_oid] if base_oid else []
         for b in branches:
             b_oid = self.resolve(b)
             parent_oids.append(b_oid)
-            for path, entry in self.tree_of(b_oid).items():
-                if path in base and base[path] == entry:
-                    continue
+            b_tree = self._tree_oid_of(b_oid)
+            for path, entry in self._diff_trees(base_tree, b_tree).items():
+                if entry is None:
+                    continue  # union semantics: a branch's deletions don't merge
                 if path in provenance and merged.get(path) != entry:
                     raise ConflictError(
                         f"octopus conflict on {path!r} between {provenance[path]} and {b}"
                     )
                 merged[path] = entry
                 provenance[path] = b
-        tree_oid = self._write_nested(merged)
+        tree_oid = self._update_tree(base_tree, merged)
         commit = {
             "tree": tree_oid or "",
             "parents": parent_oids,
@@ -404,7 +622,8 @@ class Repository:
         }
         oid = self.objects.put_commit(commit)
         self.set_branch(branch, oid)
-        self.checkout(oid)
+        if merged:
+            self.checkout(oid, paths=sorted(merged))
         return oid
 
     # -- annex ops -------------------------------------------------------------
@@ -417,11 +636,26 @@ class Repository:
     def whereis(self, key: str) -> list[str]:
         return [s.name for s in [self.annex, *self._remotes] if s.has(key)]
 
+    def entry_at(self, commit_oid: str, path: str) -> dict | None:
+        """Point lookup of one path's tree entry — O(depth), not O(repo)."""
+        tree_oid = self._tree_oid_of(commit_oid)
+        parts = path.split("/")
+        for part in parts[:-1]:
+            if tree_oid is None:
+                return None
+            e = self.objects.get_tree(tree_oid).get(part)
+            if e is None or e["t"] != "tree":
+                return None
+            tree_oid = e["oid"]
+        if tree_oid is None:
+            return None
+        return self.objects.get_tree(tree_oid).get(parts[-1])
+
     def annex_key_at(self, path: str, commitish: str | None = None) -> str:
         oid = self.resolve(commitish) if commitish else self.head_commit()
         if oid is None:
             raise KeyError("empty repository")
-        entry = self.tree_of(oid).get(path)
+        entry = self.entry_at(oid, path)
         if entry is None or entry["t"] != "annex":
             raise KeyError(f"{path} is not an annexed file")
         return entry["key"]

@@ -216,10 +216,13 @@ def test_fs_profiles_charge_virtual_time(tmp_path):
     assert clock.snapshot() > t1
 
 
-def test_gpfs_degrades_with_file_count(tmp_path):
+def test_gpfs_degrades_with_directory_pressure(tmp_path):
+    """Parallel-FS metadata ops degrade with the entry count of the touched
+    directory (the paper's repo-size effect: object-store shards accumulate
+    one entry per stored object)."""
     clock = SimClock()
     fs = FS(GPFS, clock)
-    fs.n_files = GPFS.degrade_threshold + 100_000  # simulate a huge repo
+    fs.preload_dir_entries(str(tmp_path), GPFS.degrade_threshold + 100_000)
     before = clock.snapshot()
     fs.exists(str(tmp_path / "x"))
     degraded_cost = clock.snapshot() - before
@@ -227,8 +230,45 @@ def test_gpfs_degrades_with_file_count(tmp_path):
     fs2.exists(str(tmp_path / "x"))
     assert degraded_cost > fs2.clock.snapshot() * 5
 
+    # an op in a *different, small* directory is not taxed by the big one
+    fs4 = FS(GPFS, SimClock())
+    fs4.preload_dir_entries(str(tmp_path / "big"), 10_000_000)
+    fs4.exists(str(tmp_path / "small" / "x"))
+    assert fs4.clock.snapshot() == pytest.approx(GPFS.meta_op_s)
+
     # local FS never degrades
     fs3 = FS(LOCAL_XFS, SimClock())
-    fs3.n_files = 10_000_000
+    fs3.preload_dir_entries(str(tmp_path), 10_000_000)
     fs3.exists(str(tmp_path / "x"))
     assert fs3.clock.snapshot() == pytest.approx(LOCAL_XFS.meta_op_s)
+
+
+def test_fs_tracks_directory_entries(tmp_path):
+    fs = FS(GPFS, SimClock())
+    d = str(tmp_path / "d")
+    fs.write_bytes(d + "/a.txt", b"a")
+    fs.write_bytes(d + "/b.txt", b"b")
+    fs.write_bytes(d + "/a.txt", b"a2")  # overwrite: no new entry
+    assert fs.dir_entry_count(d) == 2
+    assert fs.n_files == 2
+    fs.unlink(d + "/a.txt")
+    assert fs.dir_entry_count(d) == 1
+    assert fs.n_files == 1
+
+
+def test_object_store_caches_skip_fs_probes(tmp_path):
+    clock = SimClock()
+    store = ObjectStore(str(tmp_path / "objects"), FS(GPFS, clock))
+    oid = store.put_blob(b"cached payload")
+    ops_after_first = clock.meta_ops
+    assert store.put_blob(b"cached payload") == oid  # known oid: no fs ops
+    assert store.has(oid)
+    assert clock.meta_ops == ops_after_first
+    t = store.put_tree({"a": {"t": "blob", "oid": oid}})
+    ops = clock.meta_ops
+    assert store.get_tree(t) == {"a": {"t": "blob", "oid": oid}}  # cached parse
+    assert clock.meta_ops == ops
+
+    store.disable_caches()  # seed-era behavior: every put probes again
+    store.put_blob(b"cached payload")
+    assert clock.meta_ops > ops
