@@ -26,6 +26,7 @@ import os
 import numpy as np
 
 from repro.core.fsio import GPFS, LOCAL_XFS
+from repro.core.spec import RunSpec
 
 from .common import cleanup, make_env, seed_repo_files, timer, write_job_dir
 
@@ -50,13 +51,12 @@ def run(jobs_per_size: int = 8, sizes=SIZES, n_extra: int = 4,
                 repo.objects.disable_caches()  # seed-era behavior end-to-end
             alt_dir = os.path.join(root, "pfs_stage") if alt else None
             seed_repo_files(repo, n_files)
-            ids = []
+            specs = []
             for j in range(n_jobs):
                 write_job_dir(repo, j, n_extra)
-                ids.append(
-                    sched.schedule("slurm.sh", outputs=[f"jobs/{j}"],
-                                   pwd=f"jobs/{j}", alt_dir=alt_dir)
-                )
+                specs.append(RunSpec(script="slurm.sh", outputs=[f"jobs/{j}"],
+                                     pwd=f"jobs/{j}", alt_dir=alt_dir))
+            ids = sched.submit_many(specs)
             cluster.wait(timeout=600)
             sim_t, wall_t = [], []
             for job_id in ids:

@@ -3,6 +3,7 @@ with a single N-parent octopus merge after concurrent Slurm jobs."""
 from __future__ import annotations
 
 from repro.core.fsio import LOCAL_XFS
+from repro.core.spec import RunSpec
 
 from .common import cleanup, make_env, timer, write_job_dir
 
@@ -13,9 +14,12 @@ def run(n_jobs: int = 8) -> list[dict]:
     with open(os.path.join(repo.root, "README"), "w") as f:
         f.write("octopus demo\n")
     repo.save(message="base")
+    specs = []
     for j in range(n_jobs):
         write_job_dir(repo, j)
-        sched.schedule("slurm.sh", outputs=[f"jobs/{j}"], pwd=f"jobs/{j}")
+        specs.append(RunSpec(script="slurm.sh", outputs=[f"jobs/{j}"],
+                             pwd=f"jobs/{j}"))
+    sched.submit_many(specs)
     cluster.wait(timeout=600)
     with timer() as t:
         results = sched.finish(octopus=True)

@@ -1,4 +1,5 @@
-"""Paper Figures 7/8 (contribution C2): schedule overhead vs pure sbatch.
+"""Paper Figures 7/8 (contribution C2): schedule overhead vs pure sbatch,
+plus the spec-layer batching case (per-job ``submit`` vs ``submit_many``).
 
 Cases, exactly as in the paper's experiment setup (§6 + artifact A1):
   (1) schedule, repo on the parallel FS (GPFS profile)
@@ -9,12 +10,22 @@ x {4, 8, 12} outputs per job (base 4 = result + bz2 + slurm log + env json).
 Expected reproduction: (1)/(2) carry a roughly CONSTANT ~0.35-0.7 s/job
 offset over (3)'s ~0.05 s, independent of the number of already-scheduled
 jobs; more outputs => slightly slower.
+
+The batching benchmark (``run_batched``) submits the same N jobs once
+through N individual ``submit`` calls (N CLI-startup charges, N jobdb
+transactions) and once through a single ``submit_many`` (one charge, one
+transaction, one shared conflict pass); the gate in ``benchmarks/run.py
+--check-schedule`` asserts the batched path costs < 0.5x the per-job sum
+on the sim clock.
 """
 from __future__ import annotations
+
+import os
 
 import numpy as np
 
 from repro.core.fsio import GPFS, LOCAL_XFS
+from repro.core.spec import RunSpec
 
 from .common import cleanup, make_env, timer, write_job_dir
 
@@ -31,7 +42,6 @@ def run(n_jobs: int = 120, extra_outputs: tuple = (0, 4, 8)) -> list[dict]:
             root, repo, cluster, sched, clock = make_env(profile)
             alt_dir = None
             if alt:
-                import os
                 alt_dir = os.path.join(root, "pfs_stage")
             sim_t, wall_t = [], []
             for j in range(n_jobs):
@@ -41,12 +51,12 @@ def run(n_jobs: int = 120, extra_outputs: tuple = (0, 4, 8)) -> list[dict]:
                     if case == "pure_sbatch":
                         cluster.sbatch("slurm.sh", workdir=f"{repo.root}/jobs/{j}")
                     else:
-                        sched.schedule(
-                            "slurm.sh",
+                        sched.submit(RunSpec(
+                            script="slurm.sh",
                             outputs=[f"jobs/{j}"],
                             pwd=f"jobs/{j}",
                             alt_dir=alt_dir,
-                        )
+                        ))
                 wall_t.append(t["s"])
                 sim_t.append(clock.snapshot() - s0)
             cluster.wait(timeout=600)
@@ -67,6 +77,40 @@ def run(n_jobs: int = 120, extra_outputs: tuple = (0, 4, 8)) -> list[dict]:
     return rows
 
 
+def run_batched(n_jobs: int = 64) -> list[dict]:
+    """Per-job ``submit`` vs one ``submit_many`` for the same N jobs (GPFS
+    profile, paper-calibrated CLI-startup charge). Emitted into
+    BENCH_schedule.json and gated by ``--check-schedule``."""
+    rows = []
+    for case in ("submit_per_job", "submit_many"):
+        root, repo, cluster, sched, clock = make_env(GPFS)
+        specs = []
+        for j in range(n_jobs):
+            write_job_dir(repo, j, 0)
+            specs.append(RunSpec(script="slurm.sh", outputs=[f"jobs/{j}"],
+                                 pwd=f"jobs/{j}"))
+        s0 = clock.snapshot()
+        with timer() as t:
+            if case == "submit_many":
+                sched.submit_many(specs)
+            else:
+                for spec in specs:
+                    sched.submit(spec)
+        sim_total = clock.snapshot() - s0
+        cluster.wait(timeout=600)
+        cluster.shutdown()
+        rows.append({
+            "bench": "schedule_batch",
+            "case": case,
+            "n_jobs": n_jobs,
+            "sim_s_total": float(sim_total),
+            "sim_s_per_job": float(sim_total / n_jobs),
+            "wall_us_per_job": float(t["s"] * 1e6 / n_jobs),
+        })
+        cleanup(root)
+    return rows
+
+
 if __name__ == "__main__":
-    for r in run():
+    for r in run() + run_batched():
         print(r)

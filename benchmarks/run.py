@@ -11,6 +11,11 @@ paper's own evaluation (Figures 6-10).
 sweep (1k and 100k repo files, incremental engine) as a fast perf-regression
 gate: it fails if the per-job finish cost at 100k files exceeds 3x the cost
 at 1k files.
+
+``python -m benchmarks.run --check-schedule`` runs the spec-layer batching
+benchmark (per-job ``submit`` vs one ``submit_many`` for 64 jobs), writes
+``BENCH_schedule.json``, and fails unless the batched submission costs
+< 0.5x the sum of the individual submissions on the sim clock.
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ import os
 import sys
 
 BENCH_FINISH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_finish.json")
+BENCH_SCHEDULE_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_schedule.json")
 
 
 def _write_finish_json(rows: list[dict], merge: bool = False) -> None:
@@ -45,6 +51,40 @@ def _write_finish_json(rows: list[dict], merge: bool = False) -> None:
         json.dump(finish_rows, f, indent=1)
         f.write("\n")
     print(f"# wrote {path} ({len(finish_rows)} rows)", file=sys.stderr)
+
+
+def _write_schedule_json(rows: list[dict]) -> None:
+    batch_rows = [
+        {
+            "case": r["case"],
+            "n_jobs": r["n_jobs"],
+            "sim_s_total": r["sim_s_total"],
+            "sim_s_per_job": r["sim_s_per_job"],
+            "wall_us_per_job": r["wall_us_per_job"],
+        }
+        for r in rows
+        if r["bench"] == "schedule_batch"
+    ]
+    path = os.path.normpath(BENCH_SCHEDULE_JSON)
+    with open(path, "w") as f:
+        json.dump(batch_rows, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path} ({len(batch_rows)} rows)", file=sys.stderr)
+
+
+def _schedule_batch_claims(rows: list[dict]) -> list[tuple[str, bool, str]]:
+    batch = {r["case"]: r for r in rows if r["bench"] == "schedule_batch"}
+    if "submit_many" not in batch or "submit_per_job" not in batch:
+        return []
+    many = batch["submit_many"]["sim_s_total"]
+    single = batch["submit_per_job"]["sim_s_total"]
+    n = batch["submit_many"]["n_jobs"]
+    return [(
+        f"spec layer: submit_many({n}) < 0.5x the sum of per-job submits",
+        many < 0.5 * single,
+        f"batched={many:.2f}s vs per-job={single:.2f}s "
+        f"({many / single:.2f}x)",
+    )]
 
 
 def _finish_claims(fin: dict) -> list[tuple[str, bool, str]]:
@@ -95,12 +135,30 @@ def check_finish() -> None:
         raise SystemExit(1)
 
 
+def check_schedule() -> None:
+    """Fast regression gate on the spec layer's batched submission: 64 jobs
+    through one ``submit_many`` must cost < 0.5x the sum of 64 individual
+    submissions on the sim clock."""
+    from . import bench_schedule
+
+    rows = bench_schedule.run_batched(n_jobs=64)
+    _write_schedule_json(rows)
+    ok = True
+    for name, passed, detail in _schedule_batch_claims(rows):
+        ok &= passed
+        print(f"# [{'PASS' if passed else 'FAIL'}] {name}: {detail}")
+    if not ok:
+        raise SystemExit(1)
+
+
 def main() -> None:
     from . import bench_conflicts, bench_finish, bench_octopus, bench_schedule
 
     rows = []
     print("# running bench_schedule (paper Fig. 7/8) ...", file=sys.stderr)
     rows += bench_schedule.run()
+    print("# running bench_schedule batching (spec layer) ...", file=sys.stderr)
+    rows += bench_schedule.run_batched()
     print("# running bench_finish (paper Fig. 9/10) ...", file=sys.stderr)
     rows += bench_finish.run()
     print("# running bench_conflicts (§5.5) ...", file=sys.stderr)
@@ -109,6 +167,7 @@ def main() -> None:
     rows += bench_octopus.run()
 
     _write_finish_json(rows)
+    _write_schedule_json(rows)
 
     print("name,us_per_call,derived")
     claims = []
@@ -119,6 +178,10 @@ def main() -> None:
             us = r["wall_us_per_job"]
             derived = f"sim={r['sim_s_per_job']:.3f}s_per_job"
             sched[(r["case"], r["outputs_per_job"])] = r
+        elif r["bench"] == "schedule_batch":
+            name = f"schedule_batch/{r['case']}/{r['n_jobs']}jobs"
+            us = r["wall_us_per_job"]
+            derived = f"sim={r['sim_s_per_job']:.3f}s_per_job"
         elif r["bench"] == "finish":
             name = f"finish/{r['case']}/{r['repo_files']}files"
             us = r["wall_us_per_job"]
@@ -148,6 +211,7 @@ def main() -> None:
         )
     fin = {(r["case"], r["repo_files"]): r for r in rows if r["bench"] == "finish"}
     claims += _finish_claims(fin)
+    claims += _schedule_batch_claims(rows)
     conf = {r["scheduled_jobs"]: r for r in rows if r["bench"] == "conflict_check"}
     claims.append(("§5.5: conflict check ~O(1) in scheduled jobs",
                    conf[50_000]["wall_us_per_check"] < 20 * conf[100]["wall_us_per_check"],
@@ -165,7 +229,12 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    ran_gate = False
     if "--check-finish" in sys.argv[1:]:
         check_finish()
-    else:
+        ran_gate = True
+    if "--check-schedule" in sys.argv[1:]:
+        check_schedule()
+        ran_gate = True
+    if not ran_gate:
         main()

@@ -1,9 +1,16 @@
-"""Quickstart: the paper's workflow end-to-end in two minutes on a laptop.
+"""Quickstart: the paper's workflow end-to-end in two minutes on a laptop,
+through the Session API — every execution path is driven by a declarative
+RunSpec, the machine-actionable single source of truth.
 
-  1. init a repository; version code + (annexed) data
-  2. machine-actionable `run` + bitwise-verified `rerun`
-  3. schedule concurrent Slurm jobs on ONE clone with output-conflict
-     protection; finish with per-job provenance records + octopus merge
+  1. `repro.open(..., create=True)` a repository; version code + (annexed)
+     data with `Session.save`
+  2. machine-actionable `Session.run` + bitwise-verified `Session.rerun`
+     (the spec rides in the commit itself: `Session.spec_of` recovers it
+     verbatim, equal spec_id — no message parsing)
+  3. submit concurrent Slurm jobs on ONE clone as a single `submit_many`
+     batch (one CLI-startup charge, one jobdb transaction, one shared
+     output-conflict pass); finish with per-job provenance records +
+     octopus merge
   4. clone without annexed content; reproduce an output from its record
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -12,74 +19,71 @@ import os
 import sys
 import tempfile
 
-from repro.core import (
-    LocalSlurmCluster,
-    OutputConflict,
-    Repository,
-    RunRecord,
-    SlurmScheduler,
-    rerun,
-    run,
-)
-
+import repro
+from repro import RunSpec
+from repro.core import OutputConflict, Repository, Session
 
 def main() -> None:
     work = tempfile.mkdtemp(prefix="repro_quickstart_")
     root = os.path.join(work, "project")
-    repo = Repository.init(root, annex_threshold=1024)
-    print(f"== repository at {root} (dsid {repo.dsid[:8]}...)")
+    s = repro.open(root, create=True, annex_threshold=1024)
+    print(f"== repository at {root} (dsid {s.dsid[:8]}...)")
 
     # -- 1. version some input data (large file -> annexed automatically)
     with open(os.path.join(root, "params.txt"), "w") as f:
         f.write("14\n")
     with open(os.path.join(root, "table.bin"), "wb") as f:
         f.write(bytes(range(256)) * 64)  # 16 KiB -> annexed
-    c0 = repo.save(message="inputs")
+    c0 = s.save(message="inputs")
     print(f"== committed inputs: {c0[:12]}")
 
-    # -- 2. datalad-run equivalent: execute + record + commit
-    oid = run(
-        repo,
+    # -- 2. declarative run: the RunSpec is validated at construction and
+    #       embedded verbatim in the provenance record
+    spec = RunSpec(
         cmd="python3 -c \"n=int(open('params.txt').read()); "
         "open('result.txt','w').write(str(n*n))\"",
         inputs=["params.txt"],
         outputs=["result.txt"],
         message="Solve N=14",
     )
+    oid = s.run(spec)
     print(f"== ran + recorded: {oid[:12]} -> result.txt =",
           open(os.path.join(root, "result.txt")).read())
+    # rerun replays the exact spec (equal content address), hash-verified
+    assert s.spec_of(oid).spec_id == spec.spec_id
+    report = s.rerun(oid)
+    print(f"== rerun bitwise identical: {report['bitwise']} (no new commit), "
+          f"spec_id {report['spec_id'][:12]}...")
 
-    report = rerun(repo, oid)
-    print(f"== rerun bitwise identical: {report['bitwise']} (no new commit)")
-
-    # -- 3. concurrent Slurm jobs on one clone
-    cluster = LocalSlurmCluster(max_workers=4)
-    sched = SlurmScheduler(repo, cluster, cli_startup_s=0.0)
+    # -- 3. concurrent Slurm jobs on one clone, submitted as ONE batch
     for j in range(4):
         d = os.path.join(root, "jobs", str(j))
         os.makedirs(d, exist_ok=True)
         with open(os.path.join(d, "slurm.sh"), "w") as f:
             f.write(f"#!/bin/bash\necho computed-{j} > answer.txt\n")
-    repo.save(message="job scripts")
-    for j in range(4):
-        sched.schedule("slurm.sh", outputs=[f"jobs/{j}/answer.txt"], pwd=f"jobs/{j}")
+    s.save(message="job scripts")
+    s.submit_many([
+        RunSpec(script="slurm.sh", outputs=[f"jobs/{j}/answer.txt"], pwd=f"jobs/{j}")
+        for j in range(4)
+    ])
     try:  # overlapping outputs are refused at schedule time (§5.5)
-        sched.schedule("slurm.sh", outputs=["jobs/0"], pwd="jobs/0")
+        s.submit(RunSpec(script="slurm.sh", outputs=["jobs/0"], pwd="jobs/0"))
     except OutputConflict as e:
         print(f"== conflict correctly refused: {e}")
-    cluster.wait(timeout=60)
-    results = sched.finish(octopus=True)
+    s.wait(timeout=60)
+    results = s.finish(octopus=True)
     print(f"== finished {len(results)} jobs; octopus merge "
-          f"{repo.head_commit()[:12]} with "
-          f"{len(repo.objects.get_commit(repo.head_commit())['parents'])} parents")
+          f"{s.head()[:12]} with "
+          f"{len(s.repo.objects.get_commit(s.head())['parents'])} parents")
 
     # -- 4. clone (annex content stays behind), reproduce from the record
-    clone = Repository.clone(repo, os.path.join(work, "clone"))
-    rec = RunRecord.from_message(clone.objects.get_commit(oid)["message"])
-    print(f"== clone sees record: cmd={rec.cmd!r}")
-    report = rerun(clone, oid)
+    clone = Session(Repository.clone(s.repo, os.path.join(work, "clone")))
+    rec_spec = clone.spec_of(oid)
+    print(f"== clone sees spec: cmd={rec_spec.cmd!r} "
+          f"(spec_id {rec_spec.spec_id[:12]}...)")
+    report = clone.rerun(oid)
     print(f"== reproduced in clone, bitwise: {report['bitwise']}")
-    cluster.shutdown()
+    s.close()
     print("OK")
 
 

@@ -8,15 +8,17 @@ import os
 import sys
 import tempfile
 
-from repro.core import Repository, RunRecord, rerun, run
+import repro
+from repro.core import Repository, Session
 
 
 def main() -> int:
     work = tempfile.mkdtemp(prefix="repro_review_")
 
     # ---- the AUTHORS' side: produce results via recorded runs
-    authors = Repository.init(os.path.join(work, "paper_repo"),
-                              annex_threshold=512)
+    s = repro.open(os.path.join(work, "paper_repo"), create=True,
+                   annex_threshold=512)
+    authors = s.repo
     with open(os.path.join(authors.root, "generate.py"), "w") as f:
         f.write(
             "import numpy as np\n"
@@ -31,26 +33,26 @@ def main() -> int:
             "hist, _ = np.histogram(d, bins=16, range=(-4, 4))\n"
             "open('figure3.csv', 'w').write(','.join(map(str, hist)))\n"
         )
-    authors.save(message="analysis code")
-    c_data = run(authors, "python3 generate.py", outputs=["measurements.npy"],
-                 message="raw measurements")
-    c_fig = run(authors, "python3 analyze.py", inputs=["measurements.npy"],
-                outputs=["figure3.csv"], message="Figure 3 histogram")
+    s.save(message="analysis code")
+    c_data = s.run(cmd="python3 generate.py", outputs=["measurements.npy"],
+                   message="raw measurements")
+    c_fig = s.run(cmd="python3 analyze.py", inputs=["measurements.npy"],
+                  outputs=["figure3.csv"], message="Figure 3 histogram")
     print(f"== authors committed: data {c_data[:12]}, figure {c_fig[:12]}")
 
     # ---- the REVIEWER's side: clone has records but no annexed content
-    reviewer = Repository.clone(authors, os.path.join(work, "reviewer_clone"))
-    rec = RunRecord.from_message(reviewer.objects.get_commit(c_fig)["message"])
-    print(f"== reviewer sees record for Figure 3: cmd={rec.cmd!r}, "
-          f"inputs={rec.inputs}")
+    reviewer = Session(Repository.clone(authors, os.path.join(work, "reviewer_clone")))
+    spec = reviewer.spec_of(c_fig)  # the exact spec, no message parsing
+    print(f"== reviewer sees spec for Figure 3: cmd={spec.cmd!r}, "
+          f"inputs={list(spec.inputs)} (spec_id {spec.spec_id[:12]}...)")
 
     # the data file is a pointer until fetched/reproduced
-    head = open(os.path.join(reviewer.root, "measurements.npy"), "rb").read(20)
+    head = open(os.path.join(reviewer.repo.root, "measurements.npy"), "rb").read(20)
     print(f"== measurements.npy in clone starts with: {head[:15]!r} (pointer)")
 
     # reproduce the whole chain: first the data, then the figure
-    r1 = rerun(reviewer, c_data)
-    r2 = rerun(reviewer, c_fig)
+    r1 = reviewer.rerun(c_data)
+    r2 = reviewer.rerun(c_fig)
     print(f"== rerun data bitwise={r1['bitwise']}, figure bitwise={r2['bitwise']}")
     assert r1["bitwise"] and r2["bitwise"]
     print("== reviewer verified the paper's Figure 3 without ever downloading "

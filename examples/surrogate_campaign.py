@@ -28,8 +28,9 @@ import tempfile
 
 import numpy as np
 
+import repro
+from repro import RunSpec
 from repro.configs.base import ModelConfig
-from repro.core import LocalSlurmCluster, Repository, SlurmScheduler
 from repro.data.tokens import RepoTokenDataset
 from repro.optim.adamw import AdamW
 from repro.train.loop import train_segment
@@ -46,32 +47,35 @@ EOF
 """
 
 
-def run_simulation_batch(repo, sched, cluster, base: int, n_jobs: int) -> str:
-    """Schedule n_jobs 'simulations' as one array job; finish; return the
-    data commit hash."""
+def run_simulation_batch(s, base: int, n_jobs: int) -> str:
+    """Submit n_jobs 'simulations' as ONE submit_many batch (one CLI-startup
+    charge, one jobdb transaction, one shared conflict pass); finish; return
+    the data commit hash."""
+    repo = s.repo
     d = os.path.join(repo.root, "campaign", f"batch_{base}")
     os.makedirs(d, exist_ok=True)
     with open(os.path.join(d, "sim.sh"), "w") as f:
         f.write(SIM_JOB.format(base=base, vocab=4096))
-    repo.save(message=f"simulation scripts batch {base}")
-    # array tasks write into per-task dirs via pwd trick: use separate jobs
-    job_ids = []
+    s.save(message=f"simulation scripts batch {base}")
+    # per-task dirs, one declarative spec each, submitted as a single batch
+    specs = []
     for t in range(n_jobs):
         td = os.path.join(d, str(t))
         os.makedirs(td, exist_ok=True)
         with open(os.path.join(td, "slurm.sh"), "w") as f:
             f.write(SIM_JOB.format(base=base + t, vocab=4096).replace(
                 '["SLURM_ARRAY_TASK_ID"]', '.get("SLURM_ARRAY_TASK_ID","0")'))
-        job_ids.append(sched.schedule(
-            "slurm.sh",
+        specs.append(RunSpec(
+            script="slurm.sh",
             outputs=[f"campaign/batch_{base}/{t}/shard.npy"],
             pwd=f"campaign/batch_{base}/{t}",
             message=f"simulation {base}+{t}",
         ))
-    cluster.wait(timeout=300)
-    results = sched.finish(octopus=True)
+    s.submit_many(specs)
+    s.wait(timeout=300)
+    results = s.finish(octopus=True)
     assert all(r.state == "COMPLETED" for r in results), results
-    commit = repo.head_commit()
+    commit = s.head()
     print(f"  committed {len(results)} simulation jobs -> data commit {commit[:12]}")
     return commit
 
@@ -85,10 +89,9 @@ def main() -> int:
     args = ap.parse_args()
 
     work = tempfile.mkdtemp(prefix="repro_campaign_")
-    repo = Repository.init(os.path.join(work, "campaign_repo"),
-                           annex_threshold=4096)
-    cluster = LocalSlurmCluster(max_workers=4)
-    sched = SlurmScheduler(repo, cluster, cli_startup_s=0.0)
+    s = repro.open(os.path.join(work, "campaign_repo"), create=True,
+                   annex_threshold=4096, max_workers=4)
+    repo = s.repo
     print(f"== campaign repository {repo.root}")
 
     cfg = ModelConfig(
@@ -102,7 +105,7 @@ def main() -> int:
 
     # ---- phase 1: first simulation batch + training on its commit
     print("== phase 1: simulations")
-    data_commit = run_simulation_batch(repo, sched, cluster, 0, args.sim_jobs)
+    data_commit = run_simulation_batch(s, 0, args.sim_jobs)
     ds = RepoTokenDataset(repo, data_commit, prefix="campaign",
                           seq_len=256, global_batch=4)
     print(f"  dataset at {data_commit[:12]}: {len(ds.files)} shards")
@@ -114,7 +117,7 @@ def main() -> int:
 
     # ---- phase 2: more simulations land; resume on the bigger dataset
     print("== phase 2: more simulations + resumed training")
-    data_commit2 = run_simulation_batch(repo, sched, cluster, 100, args.sim_jobs)
+    data_commit2 = run_simulation_batch(s, 100, args.sim_jobs)
     ds2 = RepoTokenDataset(repo, data_commit2, prefix="campaign",
                            seq_len=256, global_batch=4)
     print(f"  dataset at {data_commit2[:12]}: {len(ds2.files)} shards")
@@ -134,7 +137,7 @@ def main() -> int:
         if shown > 12:
             print("  ...")
             break
-    cluster.shutdown()
+    s.close()
     print("OK")
     return 0
 

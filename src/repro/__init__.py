@@ -1,0 +1,17 @@
+"""repro — data version management and machine-actionable reproducibility.
+
+The documented entry point is the Session API:
+
+    import repro
+    s = repro.open("/path/to/project", create=True)
+    s.run(cmd="python analyze.py", inputs=["in.csv"], outputs=["fig.csv"])
+    s.submit_many([repro.RunSpec(script="job.sh", outputs=["out"]), ...])
+
+Only the lightweight core is imported here; the modeling subpackages
+(``repro.models``, ``repro.train``, ...) pull in jax and are imported
+explicitly by their users.
+"""
+from .core.session import Session, open  # noqa: A004 (module-level `open` is the API)
+from .core.spec import RunSpec, SpecError
+
+__all__ = ["Session", "open", "RunSpec", "SpecError"]

@@ -15,11 +15,13 @@ from .conflicts import (
 )
 from .fsio import FS, GPFS, LOCAL_XFS, NULL_FS, FSProfile, SimClock
 from .hashing import annex_key_for_bytes, annex_key_for_file, verify_annex_key
-from .jobdb import JobDB
-from .records import RunFailed, RunRecord, rerun, run
+from .jobdb import JobDB, job_spec
+from .records import RunFailed, RunRecord, rerun, run, run_spec, spec_of
 from .repo import ConflictError, Repository
 from .scheduler import FinishResult, ScheduleError, SlurmScheduler
+from .session import Session, open
 from .slurm import LocalSlurmCluster, SlurmCluster, SubprocessSlurmCluster
+from .spec import RunSpec, SpecError
 
 __all__ = [
     "AnnexStore", "make_pointer", "parse_pointer",
@@ -27,8 +29,13 @@ __all__ = [
     "normalize", "proper_prefixes",
     "FS", "GPFS", "LOCAL_XFS", "NULL_FS", "FSProfile", "SimClock",
     "annex_key_for_bytes", "annex_key_for_file", "verify_annex_key",
-    "JobDB", "RunFailed", "RunRecord", "rerun", "run",
+    "JobDB", "job_spec",
+    "RunFailed", "RunRecord", "rerun", "run", "run_spec", "spec_of",
     "ConflictError", "Repository",
     "FinishResult", "ScheduleError", "SlurmScheduler",
+    # "open" stays importable explicitly but is NOT star-exported: a
+    # wildcard import must not shadow the builtin. Prefer repro.open(...).
+    "Session",
     "LocalSlurmCluster", "SlurmCluster", "SubprocessSlurmCluster",
+    "RunSpec", "SpecError",
 ]

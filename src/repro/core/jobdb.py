@@ -6,10 +6,19 @@ version store. Its scope is the current clone; a single instance is shared by
 all branches. It tracks every scheduled-but-not-finished job and persists the
 protected-output sets N and P used by the §5.5 conflict checks.
 
+Every job row stores the canonical JSON of its originating
+:class:`~repro.core.spec.RunSpec`, so ``reschedule`` / straggler resubmission
+deserialize the exact spec instead of reassembling keyword arguments from
+the legacy columns (which are kept, populated from the spec, for
+introspection and pre-spec databases).
+
 The checks run as indexed point lookups against the ``protected`` table —
 O(path depth) queries per output — never by loading the whole table into
 memory, so ``add_job``/``check_outputs`` stay O(1) in the number of
-scheduled jobs and protected paths.
+scheduled jobs and protected paths. :meth:`add_jobs` amortizes a whole
+batch: N inserts + one shared conflict pass in ONE transaction (each output
+checked exactly once, cross-spec conflicts included because earlier specs'
+protection rows are visible to later checks inside the same transaction).
 """
 from __future__ import annotations
 
@@ -22,11 +31,11 @@ import time
 from .conflicts import (
     OutputConflict,
     WildcardOutputError,
-    check_intra_job,
     has_wildcard,
     normalize,
     proper_prefixes,
 )
+from .spec import RunSpec
 
 _SCHEMA = """
 CREATE TABLE IF NOT EXISTS jobs (
@@ -42,6 +51,7 @@ CREATE TABLE IF NOT EXISTS jobs (
     is_array    INTEGER NOT NULL DEFAULT 0,
     array_n     INTEGER NOT NULL DEFAULT 1,
     message     TEXT NOT NULL DEFAULT '',
+    spec        TEXT,
     submitted_at REAL NOT NULL,
     finished_at REAL,
     heartbeat   REAL
@@ -63,6 +73,10 @@ class JobDB:
         self._local = threading.local()
         with self._conn() as c:
             c.executescript(_SCHEMA)
+            # pre-spec databases: add the spec column in place
+            cols = {r[1] for r in c.execute("PRAGMA table_info(jobs)")}
+            if "spec" not in cols:
+                c.execute("ALTER TABLE jobs ADD COLUMN spec TEXT")
 
     def _conn(self) -> sqlite3.Connection:
         conn = getattr(self._local, "conn", None)
@@ -73,61 +87,61 @@ class JobDB:
         return conn
 
     # ------------------------------------------------------------------
-    def add_job(
-        self,
-        script: str,
-        outputs: list[str],
-        inputs: list[str] | None = None,
-        script_args: str = "",
-        pwd: str = ".",
-        alt_dir: str | None = None,
-        array_n: int = 1,
-        message: str = "",
-    ) -> int:
-        """Insert a job and protect its outputs atomically.
+    def add_jobs(self, specs: list[RunSpec]) -> list[int]:
+        """Insert a batch of specs and protect their outputs atomically.
 
-        Performs the §5.5 conflict checks against the persisted N/P sets
-        inside the same transaction, so two concurrent ``schedule`` calls
-        cannot both claim the same output.
+        ONE transaction for the whole batch: N row inserts plus one shared
+        §5.5 conflict pass (each output checked exactly once against the
+        persisted N/P sets; conflicts *between* specs in the batch are
+        caught because each spec's protection rows are inserted before the
+        next spec is checked). Any conflict rolls the entire batch back —
+        two concurrent ``submit_many`` calls cannot both claim an output,
+        and a failed batch leaves no partial protection behind.
         """
         conn = self._conn()
-        with conn:  # single transaction: check + insert + protect
-            cur = conn.execute(
-                "INSERT INTO jobs (script, script_args, pwd, inputs, outputs,"
-                " alt_dir, is_array, array_n, message, submitted_at)"
-                " VALUES (?,?,?,?,?,?,?,?,?,?)",
-                (
-                    script,
-                    script_args,
-                    pwd,
-                    json.dumps(inputs or []),
-                    json.dumps(outputs),
-                    alt_dir,
-                    int(array_n > 1),
-                    array_n,
-                    message,
-                    time.time(),
-                ),
-            )
-            job_id = cur.lastrowid
-            normed = [normalize(n) for n in outputs]
-            for n in normed:
-                self._check_one(conn, n)  # raises on conflict -> rollback
-            check_intra_job(normed)
-            conn.executemany(
-                "INSERT OR IGNORE INTO protected (name, kind, job_id) VALUES (?,?,?)",
-                [(n, "name", job_id) for n in normed]
-                + [
-                    (p, "prefix", job_id)
-                    for n in normed
-                    for p in proper_prefixes(n)
-                ],
-            )
-            conn.execute(
-                "UPDATE jobs SET outputs=? WHERE job_id=?",
-                (json.dumps(normed), job_id),
-            )
-        return job_id
+        job_ids: list[int] = []
+        with conn:  # single transaction: all checks + inserts + protection
+            for spec in specs:
+                cur = conn.execute(
+                    "INSERT INTO jobs (script, script_args, pwd, inputs, outputs,"
+                    " alt_dir, is_array, array_n, message, spec, submitted_at)"
+                    " VALUES (?,?,?,?,?,?,?,?,?,?,?)",
+                    (
+                        spec.script or spec.cmd or "",
+                        spec.script_args,
+                        spec.pwd,
+                        json.dumps(list(spec.inputs)),
+                        json.dumps(list(spec.outputs)),
+                        spec.alt_dir,
+                        int(spec.array_n > 1),
+                        spec.array_n,
+                        spec.message,
+                        spec.canonical_bytes().decode(),
+                        time.time(),
+                    ),
+                )
+                job_id = cur.lastrowid
+                job_ids.append(job_id)
+                # RunSpec construction already normalized the outputs and
+                # rejected intra-spec nesting; only cross-job checks remain
+                normed = list(spec.outputs)
+                for n in normed:
+                    self._check_one(conn, n)  # raises on conflict -> rollback
+                conn.executemany(
+                    "INSERT OR IGNORE INTO protected (name, kind, job_id)"
+                    " VALUES (?,?,?)",
+                    [(n, "name", job_id) for n in normed]
+                    + [
+                        (p, "prefix", job_id)
+                        for n in normed
+                        for p in proper_prefixes(n)
+                    ],
+                )
+        return job_ids
+
+    def add_job(self, spec: RunSpec) -> int:
+        """Single-spec convenience wrapper over :meth:`add_jobs`."""
+        return self.add_jobs([spec])[0]
 
     @staticmethod
     def _check_one(conn: sqlite3.Connection, name: str) -> None:
@@ -173,6 +187,17 @@ class JobDB:
         with self._conn() as c:
             c.execute("UPDATE jobs SET slurm_id=? WHERE job_id=?", (slurm_id, job_id))
 
+    def set_slurm_ids(self, pairs: list[tuple[int, int]]) -> None:
+        """Batched ``(job_id, slurm_id)`` update — one transaction for a
+        whole ``submit_many`` batch."""
+        if not pairs:
+            return
+        with self._conn() as c:
+            c.executemany(
+                "UPDATE jobs SET slurm_id=? WHERE job_id=?",
+                [(slurm_id, job_id) for job_id, slurm_id in pairs],
+            )
+
     def heartbeat(self, job_id: int) -> None:
         with self._conn() as c:
             c.execute("UPDATE jobs SET heartbeat=? WHERE job_id=?", (time.time(), job_id))
@@ -210,8 +235,26 @@ class JobDB:
         ).fetchone()[0]
 
 
+def job_spec(job: dict) -> RunSpec:
+    """The :class:`RunSpec` of a job row: the stored canonical spec when
+    present, else (pre-spec rows) one reassembled from the legacy columns."""
+    if job.get("spec"):
+        return RunSpec.from_json(job["spec"])
+    return RunSpec(
+        script=job["script"],
+        script_args=job["script_args"],
+        inputs=tuple(job["inputs"]),
+        outputs=tuple(job["outputs"]),
+        pwd=job["pwd"],
+        alt_dir=job["alt_dir"],
+        array_n=job["array_n"],
+        message=job["message"],
+    )
+
+
 def _to_dict(row: sqlite3.Row) -> dict:
     d = dict(row)
     d["inputs"] = json.loads(d["inputs"])
     d["outputs"] = json.loads(d["outputs"])
+    d["spec"] = json.loads(d["spec"]) if d.get("spec") else None
     return d

@@ -380,12 +380,15 @@ class Repository:
         allow_empty: bool = False,
         base_commit: str | None = None,
         base_tree: str | None = None,
+        spec: dict | None = None,
     ) -> tuple[str, str | None]:
         """Low-level incremental commit: apply ``changes`` on top of
         ``base_tree`` and write a commit object. Does NOT move any ref —
         callers (``save``, the scheduler's batched finish) do that. Returns
         ``(commit_oid, tree_oid)``; if nothing changed and ``allow_empty`` is
-        false, returns the base commit unchanged."""
+        false, returns the base commit unchanged. ``spec`` (a RunSpec JSON
+        dict) is embedded as a first-class field of the commit object, so
+        provenance replay needs no message parsing."""
         tree_oid = self._update_tree(base_tree, changes)
         if tree_oid == base_tree and base_commit is not None and not allow_empty:
             return base_commit, base_tree  # nothing changed (paper §3 step 8)
@@ -398,6 +401,8 @@ class Repository:
             "timestamp": time.time(),
             "message": message,
         }
+        if spec is not None:
+            commit["spec"] = spec
         return self.objects.put_commit(commit), tree_oid
 
     def save(
@@ -409,6 +414,7 @@ class Repository:
         allow_empty: bool = False,
         branch: str | None = None,
         engine: str = "incremental",
+        spec: dict | None = None,
     ) -> str:
         """Stage ``paths`` (files or directories; None = whole worktree) on top
         of the current tree and commit. Returns the commit oid.
@@ -417,13 +423,16 @@ class Repository:
         the tree — O(changed paths x depth). ``engine="full"`` re-reads and
         re-emits the entire tree (the seed-era behavior, kept for equivalence
         testing and benchmarks); both emit identical oids for the same
-        content."""
+        content. ``spec`` embeds a RunSpec JSON dict into the commit object
+        (see ``commit_changes``)."""
         if engine not in ("incremental", "full"):
             raise ValueError(f"unknown save engine: {engine!r}")
         branch = branch or self.current_branch()
         base = self.branch_head(branch)
         if engine == "full":
-            return self._save_full(paths, message, parents, author, allow_empty, branch, base)
+            return self._save_full(
+                paths, message, parents, author, allow_empty, branch, base, spec
+            )
         base_tree = self._tree_oid_of(base)
         changes: dict[str, dict | None] = {}
         if paths is None:
@@ -453,13 +462,15 @@ class Repository:
             allow_empty=allow_empty,
             base_commit=base,
             base_tree=base_tree,
+            spec=spec,
         )
         if oid != base:
             self.set_branch(branch, oid)
         return oid
 
     def _save_full(
-        self, paths, message, parents, author, allow_empty, branch, base
+        self, paths, message, parents, author, allow_empty, branch, base,
+        spec: dict | None = None,
     ) -> str:
         """Seed-era full rebuild: read the whole base tree, re-serialize and
         re-put every tree object. O(repo files) — kept as the reference
@@ -501,6 +512,8 @@ class Repository:
         }
         if parents is not None:
             commit["parents"] = parents
+        if spec is not None:
+            commit["spec"] = spec
         oid = self.objects.put_commit(commit)
         self.set_branch(branch, oid)
         return oid

@@ -12,24 +12,35 @@ Design goals, verbatim from §5.1:
 Plus §5.6 array jobs, §5.7 ``--alt-dir`` staging, §5.8 per-job branches and
 octopus merges, and straggler detection/rescheduling (our beyond-paper
 addition for 1000+-node operation).
+
+Since the spec layer, the submission surface is declarative:
+:meth:`SlurmScheduler.submit` takes a validated script
+:class:`~repro.core.spec.RunSpec`, and :meth:`submit_many` amortizes a whole
+batch — ONE CLI-startup charge, ONE job-database transaction, and ONE shared
+§5.5 conflict pass for N jobs. The stored spec rides through the job DB and
+the finish-time provenance record, so ``reschedule`` and straggler
+resubmission replay the *exact* original spec. The legacy keyword
+``schedule(...)`` signature remains as a thin shim that builds a spec and
+delegates.
 """
 from __future__ import annotations
 
 import os
-import shutil
 import statistics
-import time
 from dataclasses import dataclass
 
 from . import slurm as S
-from .conflicts import WildcardOutputError, has_wildcard, normalize
-from .jobdb import JobDB
-from .records import TITLE_SLURM, RunRecord
+from .jobdb import JobDB, job_spec
+from .records import TITLE_SLURM, RunRecord, spec_of
 from .repo import Repository
+from .spec import RunSpec, SpecError
 
-
-class ScheduleError(ValueError):
-    pass
+class ScheduleError(SpecError):
+    """Operational scheduling error (unknown job, no records to reschedule,
+    missing input, ...). Subclasses :class:`SpecError` so existing callers
+    that catch the scheduler's historical error type keep working; the
+    legacy ``schedule(...)`` shim also surfaces spec-construction failures
+    as this type."""
 
 
 @dataclass
@@ -48,7 +59,8 @@ class SlurmScheduler:
     an in-process library, so the real wall cost is ~20-50 µs (see
     benchmarks/run.py, the ``us_per_call`` column); the charge keeps the
     simulated figures 1:1 comparable with the paper's plots. Set to 0.0 to
-    benchmark the library itself."""
+    benchmark the library itself. ``submit_many`` charges it ONCE per batch —
+    the amortization a one-CLI-call-per-job workflow cannot have."""
 
     def __init__(self, repo: Repository, cluster: S.SlurmCluster,
                  cli_startup_s: float = 0.35):
@@ -61,7 +73,103 @@ class SlurmScheduler:
         if self.cli_startup_s:
             self.repo.fs.clock.charge(self.cli_startup_s)
 
-    # ------------------------------------------------------------- schedule
+    # ------------------------------------------------------------- submit
+    def submit(self, spec: RunSpec) -> int:
+        """Validate, conflict-check, stage, and submit one script spec.
+        Returns the job DB id."""
+        return self.submit_many([spec])[0]
+
+    def submit_many(self, specs: list[RunSpec]) -> list[int]:
+        """Batched submission: N specs, ONE CLI-startup charge, ONE job-DB
+        transaction, ONE shared §5.5 conflict pass (see ``JobDB.add_jobs``).
+
+        Specs are protected atomically before anything is handed to Slurm.
+        If ``sbatch`` (or alt-dir staging) fails mid-batch, the failed job
+        and every not-yet-submitted job are closed in the DB (releasing
+        their output protection) and the failed job's outputs are re-locked;
+        already-submitted jobs keep their slurm ids and stay scheduled.
+
+        Crash note: slurm ids are persisted once per batch (the one-
+        transaction contract), so a *hard* crash (kill -9, power loss) mid-
+        batch can leave rows with a NULL slurm id whose jobs ARE running.
+        ``finish`` reports such rows as ``"UNKNOWN"`` and only
+        ``close_failed_jobs=True`` closes them — before using it after a
+        crash, check the queue (``squeue``/``sacct``) for orphans, since
+        closing releases their output protection.
+        """
+        specs = list(specs)
+        for spec in specs:
+            if not isinstance(spec, RunSpec):
+                raise ScheduleError(f"submit expects RunSpec instances, got {type(spec).__name__}")
+            if spec.script is None:
+                raise ScheduleError(
+                    "batch submission requires a script spec (cmd specs are "
+                    "for blocking run/rerun)"
+                )
+        self._charge_cli()  # one startup charge for the whole batch
+        for spec in specs:  # cheap existence probe before any DB or fetch work
+            missing = spec.missing_inputs(self.repo.root)
+            if missing:
+                raise ScheduleError(f"input does not exist: {missing[0]}")
+
+        # conflict check + protection, atomic in the job DB (§5.3/§5.5):
+        # one transaction, each output checked exactly once — BEFORE the
+        # potentially expensive annex fetches, so a conflicting batch is
+        # refused without moving any data
+        job_ids = self.db.add_jobs(specs)
+
+        submitted: list[tuple[int, int]] = []
+        unlocked = False  # did the currently failing spec get its outputs unlocked?
+        try:
+            for idx, spec in enumerate(specs):
+                unlocked = False
+                inputs = self._fetch_inputs(spec)
+                # unlock outputs that already exist so the job may overwrite
+                unlocked = True
+                for o in spec.outputs:
+                    self.repo.unlock(o)
+                slurm_id = self._submit_one(spec, inputs)
+                submitted.append((job_ids[idx], slurm_id))
+        except BaseException:
+            # submission failed: persist what did get submitted, then close
+            # the failed + never-submitted jobs so their rows don't linger
+            # and their protected outputs are released (and re-locked, if
+            # the failure happened after the unlock)
+            self.db.set_slurm_ids(submitted)
+            failed_idx = len(submitted)
+            for idx in range(failed_idx, len(specs)):
+                self.db.close_job(job_ids[idx], status="submit-failed")
+            if unlocked:
+                for o in specs[failed_idx].outputs:
+                    self.repo.lock(o)
+            raise
+        self.db.set_slurm_ids(submitted)  # one transaction for the batch
+        return job_ids
+
+    def _fetch_inputs(self, spec: RunSpec) -> list[str]:
+        """Resolve + annex-fetch a spec's inputs (step (1) of datalad run,
+        §3). Wildcards glob-expand like ``datalad run``; a missing literal
+        input raises (``submit_many`` pre-checks existence before any DB
+        work, so this only fires on a race)."""
+        expanded = spec.expand_inputs(self.repo.root)
+        for i in expanded:
+            if os.path.isfile(os.path.join(self.repo.root, i)):
+                self.repo.annex_get(i)
+        return expanded
+
+    def _submit_one(self, spec: RunSpec, inputs: list[str]) -> int:
+        """Stage alt-dir and sbatch (outputs already unlocked by the caller).
+        Returns the slurm id."""
+        workdir = os.path.normpath(os.path.join(self.repo.root, spec.pwd))
+        if spec.alt_dir:
+            workdir = self._stage_alt_dir(spec.alt_dir, spec.pwd, spec.script, inputs)
+        return self.cluster.sbatch(
+            spec.script, workdir=workdir, args=spec.script_args,
+            array_n=spec.array_n, time_limit_s=spec.time_limit_s,
+            env=dict(spec.env) or None,
+        )
+
+    # ----------------------------------------------------------- schedule
     def schedule(
         self,
         script: str,
@@ -73,53 +181,31 @@ class SlurmScheduler:
         array_n: int = 1,
         message: str = "",
         time_limit_s: float | None = None,
+        env: dict | None = None,
     ) -> int:
-        """``datalad slurm-schedule``: validate, conflict-check, stage, submit.
-
-        Returns the job DB id. Output specification is mandatory (§5.2) and
-        wildcards are rejected (§5.4). Inputs are annex-fetched if needed.
-        """
-        self._charge_cli()
-        if not outputs:
-            raise ScheduleError("output specification is mandatory (paper §5.2)")
-        for o in outputs:
-            if has_wildcard(o):
-                raise WildcardOutputError(o)
-        inputs = list(inputs or [])
-        for i in inputs:
-            if not has_wildcard(i):  # inputs may be wildcards like datalad run
-                abspath = os.path.join(self.repo.root, i)
-                if not os.path.exists(abspath):
-                    raise ScheduleError(f"input does not exist: {i}")
-                if os.path.isfile(abspath):
-                    self.repo.annex_get(i)  # step (1) of datalad run, §3
-
-        # conflict check + protection, atomic in the job DB (§5.3/§5.5)
-        job_id = self.db.add_job(
-            script=script,
-            outputs=outputs,
-            inputs=inputs,
-            script_args=script_args,
-            pwd=pwd,
-            alt_dir=alt_dir,
-            array_n=array_n,
-            message=message,
-        )
-
-        # unlock outputs that already exist so the job may overwrite them
-        for o in outputs:
-            self.repo.unlock(normalize(o))
-
-        workdir = os.path.normpath(os.path.join(self.repo.root, pwd))
-        if alt_dir:
-            workdir = self._stage_alt_dir(alt_dir, pwd, script, inputs)
-
-        slurm_id = self.cluster.sbatch(
-            script, workdir=workdir, args=script_args, array_n=array_n,
-            time_limit_s=time_limit_s,
-        )
-        self.db.set_slurm_id(job_id, slurm_id)
-        return job_id
+        """``datalad slurm-schedule`` — legacy keyword shim over
+        :meth:`submit`. Builds a validated :class:`RunSpec` and delegates;
+        output mandatoriness (§5.2) and wildcard rejection (§5.4) are
+        enforced by spec construction."""
+        try:
+            spec = RunSpec(
+                script=script,
+                script_args=script_args,
+                inputs=tuple(inputs or ()),
+                outputs=tuple(outputs),
+                pwd=pwd,
+                alt_dir=alt_dir,
+                array_n=array_n,
+                message=message,
+                time_limit_s=time_limit_s,
+                env=tuple((env or {}).items()),
+            )
+        except ScheduleError:
+            raise
+        except SpecError as e:
+            # the shim's historical error type for an invalid submission
+            raise ScheduleError(str(e)) from e
+        return self.submit(spec)
 
     def _stage_alt_dir(
         self, alt_dir: str, pwd: str, script: str, inputs: list[str]
@@ -184,6 +270,14 @@ class SlurmScheduler:
         results: list[FinishResult] = []
         to_commit: list[tuple[dict, str]] = []
         for job in jobs:
+            if job["slurm_id"] is None:
+                # a crash between add_jobs and set_slurm_ids left this row
+                # without a submission id; it cannot be queried or committed.
+                # close_failed_jobs is the recovery path.
+                if close_failed_jobs:
+                    self.db.close_job(job["job_id"], status="closed-unsubmitted")
+                results.append(FinishResult(job["job_id"], -1, "UNKNOWN", None))
+                continue
             state = self.cluster.sacct(job["slurm_id"])
             if state not in S.TERMINAL:
                 continue  # still pending/running -> a future slurm-finish
@@ -224,7 +318,7 @@ class SlurmScheduler:
         results: list[FinishResult] = []
         new_branches: list[str] = []
         for job, state in to_commit:
-            message, save_paths = self._job_record(job, state)
+            message, save_paths, spec_json = self._job_record(job, state)
             if engine == "full":
                 # seed-era path, one full-tree rebuild per job (benchmarks)
                 branch_name = None
@@ -234,7 +328,7 @@ class SlurmScheduler:
                     new_branches.append(branch_name)
                 commit = repo.save(
                     paths=save_paths, message=message, branch=branch_name,
-                    engine="full",
+                    engine="full", spec=spec_json,
                 )
             else:
                 changes = repo.stage_paths(save_paths)
@@ -244,7 +338,8 @@ class SlurmScheduler:
                     branch_name = f"job/{job['slurm_id']}"
                     repo.create_branch(branch_name, at=base)
                     commit, _ = repo.commit_changes(
-                        changes, message=message, base_commit=base, base_tree=base_tree
+                        changes, message=message, base_commit=base,
+                        base_tree=base_tree, spec=spec_json,
                     )
                     repo.set_branch(branch_name, commit)
                     new_branches.append(branch_name)
@@ -252,6 +347,7 @@ class SlurmScheduler:
                     commit, tree = repo.commit_changes(
                         changes, message=message,
                         base_commit=head_commit, base_tree=head_tree,
+                        spec=spec_json,
                     )
                     head_commit, head_tree = commit, tree
                     # publish before closing the job: a closed job must always
@@ -267,63 +363,70 @@ class SlurmScheduler:
             )
         return results
 
-    def _job_record(self, job: dict, state: str) -> tuple[str, list[str]]:
-        """Reproducibility record message (§5.2) + the existing output paths
-        to stage for one finished job."""
+    def _job_record(self, job: dict, state: str) -> tuple[str, list[str], dict]:
+        """Reproducibility record message (§5.2), the existing output paths
+        to stage, and the originating spec JSON for one finished job."""
+        spec = job_spec(job)
         slurm_id = job["slurm_id"]
-        pwd = job["pwd"]
         slurm_outputs = [
-            os.path.normpath(os.path.join(pwd, f))
+            os.path.normpath(os.path.join(spec.pwd, f))
             for f in self.cluster.slurm_output_files(slurm_id)
         ]
-        if job["alt_dir"]:
-            self._copy_back_alt_dir(job, slurm_outputs)
+        if spec.alt_dir:
+            self._copy_back_alt_dir(spec, slurm_outputs)
+        spec_json = spec.to_json()
         record = RunRecord(
-            cmd=f"sbatch {job['script']}"
-            + (f" {job['script_args']}" if job["script_args"] else ""),
+            cmd=spec.record_cmd,
             dsid=self.repo.dsid,
-            inputs=job["inputs"],
-            outputs=job["outputs"] + slurm_outputs,
+            inputs=list(spec.inputs),
+            outputs=list(spec.outputs) + slurm_outputs,
             exit=0 if state == S.COMPLETED else 1,
-            pwd=pwd,
+            pwd=spec.pwd,
+            spec=spec_json,
             slurm_job_id=slurm_id,
             slurm_outputs=[os.path.basename(f) for f in slurm_outputs],
             extras={
-                "script": job["script"],
-                "script_args": job["script_args"],
-                "array_n": job["array_n"],
-                "alt_dir": job["alt_dir"],
+                "script": spec.script,
+                "script_args": spec.script_args,
+                "array_n": spec.array_n,
+                "alt_dir": spec.alt_dir,
             },
         )
         message = record.to_message(
             f"Slurm job {slurm_id}: {state.capitalize()}", kind=TITLE_SLURM
         )
         save_paths = [
-            p for p in job["outputs"] + slurm_outputs
+            p for p in list(spec.outputs) + slurm_outputs
             if os.path.exists(os.path.join(self.repo.root, p))
         ]
-        return message, save_paths
+        return message, save_paths, spec_json
 
-    def _copy_back_alt_dir(self, job: dict, slurm_outputs: list[str]) -> None:
+    def _copy_back_alt_dir(self, spec: RunSpec, slurm_outputs: list[str]) -> None:
         """§5.7 step (4): copy output files from the alternative directory
         back into the repository."""
         fs = self.repo.fs
-        for rel in job["outputs"] + slurm_outputs:
-            src = os.path.join(job["alt_dir"], rel)
+        for rel in list(spec.outputs) + slurm_outputs:
+            src = os.path.join(spec.alt_dir, rel)
             dst = os.path.join(self.repo.root, rel)
             if os.path.isdir(src):
                 for dirpath, _, files in os.walk(src):
                     for f in files:
                         s = os.path.join(dirpath, f)
-                        r = os.path.relpath(s, job["alt_dir"])
+                        r = os.path.relpath(s, spec.alt_dir)
                         fs.copy_file(s, os.path.join(self.repo.root, r))
             elif os.path.exists(src):
                 fs.copy_file(src, dst)
 
     # ----------------------------------------------------------- inspection
     def list_open_jobs(self) -> list[tuple[dict, str]]:
-        """``--list-open-jobs``: scheduled jobs + their current Slurm state."""
-        return [(j, self.cluster.sacct(j["slurm_id"])) for j in self.db.open_jobs()]
+        """``--list-open-jobs``: scheduled jobs + their current Slurm state.
+        A job whose slurm id was never persisted (crash mid-submission)
+        reports ``"UNKNOWN"``."""
+        return [
+            (j, self.cluster.sacct(j["slurm_id"]) if j["slurm_id"] is not None
+             else "UNKNOWN")
+            for j in self.db.open_jobs()
+        ]
 
     # ----------------------------------------------------------- reschedule
     def reschedule(
@@ -333,44 +436,34 @@ class SlurmScheduler:
         alt_dir: str | None = "__same__",
     ) -> list[int]:
         """``datalad slurm-reschedule``: schedule job(s) again from their
-        reproducibility records (§5.2). Uses the *current* version of the job
-        script, schedules from the recorded ``pwd``, and re-applies all
-        conflict checks. Defaults to the most recent slurm job; ``since``
+        provenance (§5.2). Deserializes the stored :class:`RunSpec` of each
+        commit (exact replay — no message reassembly; pre-spec records fall
+        back to field reconstruction), re-applies all conflict checks, and
+        resubmits the whole set as ONE batch. Uses the *current* version of
+        the job script. Defaults to the most recent slurm job; ``since``
         reschedules every slurm job after that commit."""
-        records = self._find_slurm_records(commitish, since)
-        if not records:
+        found = self._find_slurm_records(commitish, since)
+        if not found:
             raise ScheduleError("no slurm reproducibility records found")
-        new_ids = []
-        for rec in records:
-            outputs = [
-                o for o in rec.outputs
-                if o not in (rec.slurm_outputs or [])
-                and not os.path.basename(o).startswith(("log.slurm-", "slurm-job-"))
-            ]
-            ad = rec.extras.get("alt_dir") if alt_dir == "__same__" else alt_dir
-            new_ids.append(
-                self.schedule(
-                    script=rec.extras.get("script", rec.cmd.removeprefix("sbatch ").split()[0]),
-                    outputs=outputs,
-                    inputs=rec.inputs,
-                    script_args=rec.extras.get("script_args", ""),
-                    pwd=rec.pwd,
-                    alt_dir=ad,
-                    array_n=int(rec.extras.get("array_n", 1)),
-                    message=f"reschedule of slurm job {rec.slurm_job_id}",
-                )
-            )
-        return new_ids
+        specs = []
+        for oid, rec in found:
+            spec = spec_of(self.repo, oid)
+            changes: dict = {"message": f"reschedule of slurm job {rec.slurm_job_id}"}
+            if alt_dir != "__same__":
+                changes["alt_dir"] = alt_dir
+            specs.append(spec.replace(**changes))
+        return self.submit_many(specs)
 
     def _find_slurm_records(
         self, commitish: str | None, since: str | None
-    ) -> list[RunRecord]:
+    ) -> list[tuple[str, RunRecord]]:
         if commitish is not None:
-            commit = self.repo.objects.get_commit(self.repo.resolve(commitish))
+            oid = self.repo.resolve(commitish)
+            commit = self.repo.objects.get_commit(oid)
             rec = RunRecord.from_message(commit["message"])
             if rec is None or rec.slurm_job_id is None:
                 raise ScheduleError(f"{commitish} has no slurm reproducibility record")
-            return [rec]
+            return [(oid, rec)]
         stop = self.repo.resolve(since) if since else None
         found = []
         for oid, commit in self.repo.log():
@@ -378,7 +471,7 @@ class SlurmScheduler:
                 break
             rec = RunRecord.from_message(commit["message"])
             if rec is not None and rec.slurm_job_id is not None:
-                found.append(rec)
+                found.append((oid, rec))
                 if since is None:
                     break  # only the most recent
         return list(reversed(found))
@@ -388,7 +481,7 @@ class SlurmScheduler:
         """Beyond-paper: flag RUNNING jobs whose elapsed time exceeds
         ``factor`` x the median runtime of completed jobs."""
         runtimes = []
-        open_jobs = self.db.open_jobs()
+        open_jobs = [j for j in self.db.open_jobs() if j["slurm_id"] is not None]
         for job in open_jobs:
             if self.cluster.sacct(job["slurm_id"]) == S.COMPLETED:
                 rt = self.cluster.job_runtime(job["slurm_id"])
@@ -407,19 +500,13 @@ class SlurmScheduler:
 
     def reschedule_straggler(self, job_id: int) -> int:
         """Cancel a straggling job, release its outputs, and submit a fresh
-        copy with the same specification."""
+        copy of its exact stored spec."""
         job = self.db.get(job_id)
         if job is None:
             raise ScheduleError(f"unknown job {job_id}")
         self.cluster.scancel(job["slurm_id"])
         self.db.close_job(job_id, status="cancelled-straggler")
-        return self.schedule(
-            script=job["script"],
-            outputs=job["outputs"],
-            inputs=job["inputs"],
-            script_args=job["script_args"],
-            pwd=job["pwd"],
-            alt_dir=job["alt_dir"],
-            array_n=job["array_n"],
-            message=f"straggler reschedule of job {job_id}",
+        spec = job_spec(job).replace(
+            message=f"straggler reschedule of job {job_id}"
         )
+        return self.submit(spec)

@@ -1,0 +1,198 @@
+"""Session: the documented entry point of the library.
+
+``repro.open(root)`` returns a :class:`Session` — one object that drives
+every execution path of the paper's workflow through declarative
+:class:`~repro.core.spec.RunSpec` objects:
+
+    import repro
+    from repro import RunSpec
+
+    s = repro.open("/path/to/project", create=True)
+    s.save(message="inputs")                       # version the worktree
+    s.run(cmd="python analyze.py", inputs=["in.csv"], outputs=["fig.csv"])
+    s.rerun("HEAD")                                # bitwise-verified replay
+
+    job = s.submit(RunSpec(script="job.sh", outputs=["out"]))   # one job
+    ids = s.submit_many([RunSpec(script=f"j{i}.sh", outputs=[f"o{i}"])
+                         for i in range(64)])      # batched: 1 CLI charge,
+                                                   # 1 jobdb transaction,
+                                                   # 1 conflict pass
+    s.wait()
+    s.finish(octopus=True)
+    s.reschedule(commitish=...)                    # exact-spec resubmission
+
+The scheduler/cluster pair is constructed lazily, so a Session used only for
+``run``/``rerun`` never spins up a thread pool. The legacy free-function /
+keyword surfaces (``records.run``, ``SlurmScheduler.schedule``) remain as
+shims over the same spec layer.
+"""
+from __future__ import annotations
+
+import os
+
+from . import records as R
+from .fsio import NULL_FS, FSProfile, SimClock
+from .repo import REPRO_DIR, Repository
+from .scheduler import FinishResult, ScheduleError, SlurmScheduler
+from .slurm import LocalSlurmCluster, SlurmCluster
+from .spec import RunSpec
+
+
+class Session:
+    """A repository plus (lazily) a cluster + scheduler, driven by specs."""
+
+    def __init__(
+        self,
+        repo: Repository,
+        cluster: SlurmCluster | None = None,
+        cli_startup_s: float = 0.0,
+        max_workers: int = 8,
+    ):
+        self.repo = repo
+        self.cli_startup_s = cli_startup_s
+        self._max_workers = max_workers
+        self._cluster = cluster
+        self._scheduler: SlurmScheduler | None = None
+        self._owns_cluster = cluster is None
+
+    # ------------------------------------------------------------ plumbing
+    @property
+    def cluster(self) -> SlurmCluster:
+        if self._cluster is None:
+            self._cluster = LocalSlurmCluster(
+                max_workers=self._max_workers, clock=self.repo.fs.clock
+            )
+        return self._cluster
+
+    @property
+    def scheduler(self) -> SlurmScheduler:
+        if self._scheduler is None:
+            self._scheduler = SlurmScheduler(
+                self.repo, self.cluster, cli_startup_s=self.cli_startup_s
+            )
+        return self._scheduler
+
+    @property
+    def dsid(self) -> str:
+        return self.repo.dsid
+
+    def close(self) -> None:
+        """Shut down a lazily created local cluster (no-op otherwise)."""
+        if self._owns_cluster and self._cluster is not None:
+            shutdown = getattr(self._cluster, "shutdown", None)
+            if shutdown:
+                shutdown()
+            self._cluster = None
+            self._scheduler = None
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ----------------------------------------------------------- versioning
+    def save(self, paths=None, message: str = "", **kw) -> str:
+        return self.repo.save(paths=paths, message=message, **kw)
+
+    def head(self) -> str | None:
+        return self.repo.head_commit()
+
+    # ------------------------------------------------------------ execution
+    @staticmethod
+    def _coerce(spec: RunSpec | None, kwargs: dict) -> RunSpec:
+        if spec is not None and kwargs:
+            raise TypeError("pass either a RunSpec or keyword fields, not both")
+        if spec is None:
+            spec = RunSpec(**kwargs)
+        return spec
+
+    def run(self, spec: RunSpec | None = None, **kwargs) -> str:
+        """Execute a command spec blocking and commit outputs + record
+        (``datalad run``). Accepts a :class:`RunSpec` or its fields."""
+        return R.run_spec(self.repo, self._coerce(spec, kwargs))
+
+    def rerun(self, commitish: str, report_only: bool = False) -> dict:
+        """Replay a recorded commit's exact spec and hash-verify the outputs
+        (``datalad rerun``)."""
+        return R.rerun(self.repo, commitish, report_only=report_only)
+
+    def spec_of(self, commitish: str) -> RunSpec:
+        """The originating spec of a recorded commit."""
+        return R.spec_of(self.repo, commitish)
+
+    # ----------------------------------------------------------- scheduling
+    def submit(self, spec: RunSpec | None = None, **kwargs) -> int:
+        """Submit one script spec to the batch system (``slurm-schedule``)."""
+        return self.scheduler.submit(self._coerce(spec, kwargs))
+
+    def submit_many(self, specs: list[RunSpec]) -> list[int]:
+        """Submit a batch: one CLI-startup charge, one jobdb transaction,
+        one shared conflict pass for all specs."""
+        return self.scheduler.submit_many(specs)
+
+    def finish(self, **kw) -> list[FinishResult]:
+        """Commit results of finished jobs (``slurm-finish``)."""
+        return self.scheduler.finish(**kw)
+
+    def reschedule(self, commitish: str | None = None, **kw) -> list[int]:
+        """Resubmit from stored specs (``slurm-reschedule``)."""
+        return self.scheduler.reschedule(commitish=commitish, **kw)
+
+    def wait(self, job_ids: list[int] | None = None, timeout: float = 300.0) -> None:
+        """Block until the given (default: all) slurm jobs are terminal."""
+        slurm_ids = None
+        if job_ids is not None:
+            jobs = {j: self.scheduler.db.get(j) for j in job_ids}
+            unknown = [j for j, row in jobs.items() if row is None]
+            if unknown:
+                raise ScheduleError(f"unknown job(s): {unknown}")
+            # a NULL slurm id (crash between add_jobs and set_slurm_ids)
+            # would block forever — fail fast like finish reports "UNKNOWN"
+            unsubmitted = [j for j, row in jobs.items() if row["slurm_id"] is None]
+            if unsubmitted:
+                raise ScheduleError(
+                    f"job(s) {unsubmitted} have no slurm id (submission never "
+                    "completed); close them via finish(close_failed_jobs=True)"
+                )
+            slurm_ids = [row["slurm_id"] for row in jobs.values()]
+        self.cluster.wait(slurm_ids, timeout=timeout)
+
+    def status(self) -> list[dict]:
+        """Open jobs with their live Slurm state (``--list-open-jobs``)."""
+        return [
+            {**job, "slurm_state": state}
+            for job, state in self.scheduler.list_open_jobs()
+        ]
+
+
+def open(
+    root: str,
+    create: bool = False,
+    profile: FSProfile = NULL_FS,
+    clock: SimClock | None = None,
+    cluster: SlurmCluster | None = None,
+    cli_startup_s: float = 0.0,
+    max_workers: int = 8,
+    **init_kwargs,
+) -> Session:
+    """Open (or with ``create=True``, initialize) a repository at ``root``
+    and return a :class:`Session` over it — the documented entry point."""
+    if os.path.isdir(os.path.join(root, REPRO_DIR)):
+        if init_kwargs:
+            raise TypeError(
+                f"{sorted(init_kwargs)} only apply when initializing; "
+                f"{root} is already a repository (its stored config wins)"
+            )
+        from .fsio import FS
+
+        repo = Repository(root, fs=FS(profile, clock))
+    elif create:
+        repo = Repository.init(root, profile=profile, clock=clock, **init_kwargs)
+    else:
+        raise FileNotFoundError(
+            f"not a repro repository: {root} (pass create=True to initialize)"
+        )
+    return Session(
+        repo, cluster=cluster, cli_startup_s=cli_startup_s, max_workers=max_workers
+    )

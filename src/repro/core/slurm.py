@@ -59,6 +59,7 @@ class SlurmJob:
     workdir: str
     array_n: int = 1
     time_limit_s: float | None = None
+    env: dict | None = None  # extra job environment (RunSpec.env)
     submit_time: float = field(default_factory=time.time)
     tasks: list[TaskState] = field(default_factory=list)
     cancelled: bool = False
@@ -82,7 +83,7 @@ class SlurmCluster:
     """Executor interface (sbatch/sacct/scancel)."""
 
     def sbatch(self, script: str, workdir: str, args: str = "", array_n: int = 1,
-               time_limit_s: float | None = None) -> int:
+               time_limit_s: float | None = None, env: dict | None = None) -> int:
         raise NotImplementedError
 
     def sacct(self, job_id: int) -> str:
@@ -119,7 +120,7 @@ class LocalSlurmCluster(SlurmCluster):
 
     # -- submission ------------------------------------------------------
     def sbatch(self, script: str, workdir: str, args: str = "", array_n: int = 1,
-               time_limit_s: float | None = None) -> int:
+               time_limit_s: float | None = None, env: dict | None = None) -> int:
         self.clock.charge(self.sbatch_cost_s)
         if not os.path.exists(os.path.join(workdir, script)) and not os.path.isabs(script):
             raise FileNotFoundError(f"job script not found: {script} (cwd {workdir})")
@@ -128,7 +129,7 @@ class LocalSlurmCluster(SlurmCluster):
             self._next_id += 1
             job = SlurmJob(
                 job_id=job_id, script=script, args=args, workdir=workdir,
-                array_n=array_n, time_limit_s=time_limit_s,
+                array_n=array_n, time_limit_s=time_limit_s, env=env,
                 tasks=[TaskState() for _ in range(array_n)],
             )
             self._jobs[job_id] = job
@@ -152,6 +153,8 @@ class LocalSlurmCluster(SlurmCluster):
             task.state = RUNNING
             task.start_time = time.time()
         env = dict(os.environ)
+        if job.env:
+            env.update(job.env)  # spec env first; SLURM identity vars win
         env.update(
             SLURM_JOB_ID=str(job.job_id),
             SLURM_ARRAY_TASK_ID=str(task_id),
@@ -279,14 +282,21 @@ class SubprocessSlurmCluster(SlurmCluster):
     """
 
     def sbatch(self, script: str, workdir: str, args: str = "", array_n: int = 1,
-               time_limit_s: float | None = None) -> int:
+               time_limit_s: float | None = None, env: dict | None = None) -> int:
         cmd = ["sbatch", "--parsable"]
         if array_n > 1:
             cmd.append(f"--array=0-{array_n - 1}")
         if time_limit_s:
             cmd.append(f"--time={max(1, int(time_limit_s // 60))}")
         cmd += [script] + ([a for a in args.split() if a] if args else [])
-        out = subprocess.run(cmd, cwd=workdir, capture_output=True, text=True, check=True)
+        # spec env goes through the submission environment (sbatch defaults
+        # to --export=ALL), not the --export flag — values with commas or
+        # '=' would corrupt the flag's comma-separated list
+        proc_env = {**os.environ, **env} if env else None
+        out = subprocess.run(
+            cmd, cwd=workdir, env=proc_env, capture_output=True, text=True,
+            check=True,
+        )
         return int(out.stdout.strip().split(";")[0])
 
     def sacct(self, job_id: int) -> str:
