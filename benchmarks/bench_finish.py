@@ -1,18 +1,30 @@
 """Paper Figures 9/10 (contribution C3): slurm-finish runtime vs repository
-size; the parallel-FS blowup and the two ways out of it.
+size; the parallel-FS blowup and the three ways out of it.
 
 The paper's finding: per-job finish cost grows superlinearly once the
 repository exceeds ~50 000 files ON A PARALLEL FS (>10 s/job), because the
 commit path performs O(repo files) metadata ops against degraded
 directories. The paper's fix is operational (--alt-dir: keep the repo on a
-local FS); ours is also algorithmic (the incremental commit engine,
-DESIGN.md §4: O(changed paths) ops per commit).
+local FS); ours is algorithmic twice over — the incremental commit engine
+(DESIGN.md §4: O(changed paths) ops per commit) and the pack layer
+(DESIGN.md §8: bound the per-op *cost* by keeping shard entry counts below
+the degradation threshold).
 
 Cases:
-  finish_pfs         GPFS, incremental engine (default)  -> ~flat
+  finish_pfs         GPFS, incremental engine (default)  -> ~flat, residual
+                     slope from ever-growing loose shards (0.48 -> 0.51)
   finish_pfs_legacy  GPFS, full-rebuild engine + caches
                      disabled (seed behavior)            -> superlinear
   finish_altdir      local XFS + --alt-dir staging       -> ~flat
+  finish_packed      GPFS, incremental engine after repack()
+                     (+ threshold auto-repack armed)     -> flat, slope ~0
+
+``finish_packed`` is the long-horizon "repository aging" case: it sweeps
+beyond the paper's 200k ceiling (AGING_SIZES adds 500k) and reports the
+one-time amortized ``repack_sim_s`` alongside the steady-state per-job cost.
+Its rows are tagged ``bench="finish_pack"`` and land in ``BENCH_pack.json``
+(see benchmarks/run.py ``--check-pack``), keeping ``BENCH_finish.json``'s
+tracked trajectory untouched.
 
 Each case sweeps the repository's accumulated file count by seeding a
 synthetic base commit + the object-store shard entry counts the parallel-FS
@@ -31,26 +43,46 @@ from repro.core.spec import RunSpec
 from .common import cleanup, make_env, seed_repo_files, timer, write_job_dir
 
 SIZES = (1_000, 10_000, 50_000, 100_000, 200_000)
+AGING_SIZES = SIZES + (500_000,)  # the pack case holds flat past the paper
 
 
 def run(jobs_per_size: int = 8, sizes=SIZES, n_extra: int = 4,
-        legacy_jobs_per_size: int = 3, cases=None) -> list[dict]:
+        legacy_jobs_per_size: int = 3, cases=None, aging_sizes=None
+        ) -> list[dict]:
+    if aging_sizes is None:
+        # the packed case sweeps whatever was requested, plus the beyond-
+        # paper aging point when running the full default sweep
+        aging_sizes = AGING_SIZES if sizes == SIZES else sizes
     rows = []
     all_cases = (
-        ("finish_pfs", GPFS, False, "incremental"),
-        ("finish_pfs_legacy", GPFS, False, "full"),
-        ("finish_altdir", LOCAL_XFS, True, "incremental"),
+        ("finish_pfs", GPFS, False, "incremental", False),
+        ("finish_pfs_legacy", GPFS, False, "full", False),
+        ("finish_altdir", LOCAL_XFS, True, "incremental", False),
+        ("finish_packed", GPFS, False, "incremental", True),
     )
-    for case, profile, alt, engine in all_cases:
+    for case, profile, alt, engine, packed in all_cases:
         if cases is not None and case not in cases:
             continue
         n_jobs = legacy_jobs_per_size if engine == "full" else jobs_per_size
-        for n_files in sizes:
-            root, repo, cluster, sched, clock = make_env(profile)
+        for n_files in (aging_sizes if packed else sizes):
+            # packed case: threshold auto-repack armed (steady state); the
+            # aging cases keep it off so their pressure stays observable
+            root, repo, cluster, sched, clock = make_env(
+                profile,
+                auto_repack_threshold=profile.degrade_threshold if packed else None,
+            )
             if engine == "full":
                 repo.objects.disable_caches()  # seed-era behavior end-to-end
             alt_dir = os.path.join(root, "pfs_stage") if alt else None
             seed_repo_files(repo, n_files)
+            repack_sim_s = 0.0
+            if packed:
+                # one amortized compaction of the accumulated footprint,
+                # charged on the sim clock and reported; the measured jobs
+                # then run with threshold auto-repack armed (steady state)
+                r0 = clock.snapshot()
+                repo.objects.repack()
+                repack_sim_s = clock.snapshot() - r0
             specs = []
             for j in range(n_jobs):
                 write_job_dir(repo, j, n_extra)
@@ -67,15 +99,18 @@ def run(jobs_per_size: int = 8, sizes=SIZES, n_extra: int = 4,
                 wall_t.append(t["s"])
                 sim_t.append(clock.snapshot() - s0)
             cluster.shutdown()
-            rows.append({
-                "bench": "finish",
+            row = {
+                "bench": "finish_pack" if packed else "finish",
                 "case": case,
                 "engine": engine,
                 "repo_files": n_files,
                 "outputs_per_job": 4 + n_extra,
                 "sim_s_per_job": float(np.mean(sim_t)),
                 "wall_us_per_job": float(np.mean(wall_t) * 1e6),
-            })
+            }
+            if packed:
+                row["repack_sim_s"] = repack_sim_s
+            rows.append(row)
             cleanup(root)
     return rows
 

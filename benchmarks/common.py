@@ -27,8 +27,13 @@ bzip2 -kf out.txt
 """
 
 
-def make_env(profile: FSProfile, n_extra_outputs: int = 0, max_workers: int = 8):
-    """Repository + cluster + scheduler on the given FS profile."""
+def make_env(profile: FSProfile, n_extra_outputs: int = 0, max_workers: int = 8,
+             auto_repack_threshold: int | None = None):
+    """Repository + cluster + scheduler on the given FS profile.
+
+    ``auto_repack_threshold`` defaults to None (auto-repack OFF) so the
+    aging-trajectory cases keep the accumulated directory pressure they are
+    measuring; the packed cases enable it explicitly."""
     root = tempfile.mkdtemp(prefix=f"bench_{profile.name}_")
     clock = SimClock()
     repo = Repository.init(os.path.join(root, "repo"), profile=profile,
@@ -36,7 +41,8 @@ def make_env(profile: FSProfile, n_extra_outputs: int = 0, max_workers: int = 8)
     cluster = LocalSlurmCluster(
         max_workers=max_workers, clock=clock, sbatch_cost_s=0.05, sacct_cost_s=0.02
     )
-    sched = SlurmScheduler(repo, cluster)
+    sched = SlurmScheduler(repo, cluster,
+                           auto_repack_threshold=auto_repack_threshold)
     return root, repo, cluster, sched, clock
 
 

@@ -16,6 +16,12 @@ at 1k files.
 benchmark (per-job ``submit`` vs one ``submit_many`` for 64 jobs), writes
 ``BENCH_schedule.json``, and fails unless the batched submission costs
 < 0.5x the sum of the individual submissions on the sim clock.
+
+``python -m benchmarks.run --check-pack`` runs the pack-layer aging gate
+(``finish_packed`` at 1k and 200k repo files), writes ``BENCH_pack.json``,
+and fails if the packed per-job finish cost at 200k files exceeds 1.1x the
+1k-file cost — i.e. if compaction stops flattening the repository-aging
+slope the incremental engine still had.
 """
 from __future__ import annotations
 
@@ -25,32 +31,80 @@ import sys
 
 BENCH_FINISH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_finish.json")
 BENCH_SCHEDULE_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_schedule.json")
+BENCH_PACK_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_pack.json")
 
 
-def _write_finish_json(rows: list[dict], merge: bool = False) -> None:
-    finish_rows = [
+def _write_rows_json(
+    rows: list[dict], bench: str, json_path: str, fields: tuple[str, ...],
+    merge: bool = False,
+) -> None:
+    """Project ``rows`` tagged ``bench`` onto ``fields`` and write (or,
+    with ``merge``, update rows in place keyed by ``(case, repo_files)`` —
+    partial sweeps like the --check-* gates keep the rest of the tracked
+    trajectory)."""
+    out_rows = [
         {
             "case": r["case"],
             "engine": r.get("engine", "incremental"),
             "repo_files": r["repo_files"],
-            "sim_s_per_job": r["sim_s_per_job"],
-            "wall_us_per_job": r["wall_us_per_job"],
+            **{f: r.get(f, 0.0) for f in fields},
         }
         for r in rows
-        if r["bench"] == "finish"
+        if r["bench"] == bench
     ]
-    path = os.path.normpath(BENCH_FINISH_JSON)
+    path = os.path.normpath(json_path)
     if merge and os.path.exists(path):
-        # partial sweeps (--check-finish) update their rows in place and
-        # keep the rest of the tracked trajectory
         with open(path) as f:
             old = {(r["case"], r["repo_files"]): r for r in json.load(f)}
-        old.update({(r["case"], r["repo_files"]): r for r in finish_rows})
-        finish_rows = [old[k] for k in sorted(old)]
+        old.update({(r["case"], r["repo_files"]): r for r in out_rows})
+        out_rows = [old[k] for k in sorted(old)]
     with open(path, "w") as f:
-        json.dump(finish_rows, f, indent=1)
+        json.dump(out_rows, f, indent=1)
         f.write("\n")
-    print(f"# wrote {path} ({len(finish_rows)} rows)", file=sys.stderr)
+    print(f"# wrote {path} ({len(out_rows)} rows)", file=sys.stderr)
+
+
+def _write_finish_json(rows: list[dict], merge: bool = False) -> None:
+    _write_rows_json(
+        rows, "finish", BENCH_FINISH_JSON,
+        ("sim_s_per_job", "wall_us_per_job"), merge,
+    )
+
+
+def _write_pack_json(rows: list[dict], merge: bool = False) -> None:
+    _write_rows_json(
+        rows, "finish_pack", BENCH_PACK_JSON,
+        ("sim_s_per_job", "repack_sim_s", "wall_us_per_job"), merge,
+    )
+
+
+def _pack_claims(rows: list[dict]) -> list[tuple[str, bool, str]]:
+    pack = {
+        (r["case"], r["repo_files"]): r for r in rows
+        if r["bench"] == "finish_pack"
+    }
+    claims = []
+    if ("finish_packed", 200_000) in pack and ("finish_packed", 1_000) in pack:
+        big = pack[("finish_packed", 200_000)]
+        small = pack[("finish_packed", 1_000)]
+        claims.append((
+            "pack layer: aging slope ~0 (packed finish at 200k files"
+            " within 1.1x of 1k)",
+            big["sim_s_per_job"] <= 1.1 * small["sim_s_per_job"],
+            f"{small['sim_s_per_job']:.2f}s -> {big['sim_s_per_job']:.2f}s"
+            f" (repack amortized {big.get('repack_sim_s', 0.0):.0f}s once)",
+        ))
+    sizes = sorted(rf for c, rf in pack if c == "finish_packed")
+    if len(sizes) >= 3:
+        worst = max(pack[("finish_packed", rf)]["sim_s_per_job"] for rf in sizes)
+        base = pack[("finish_packed", sizes[0])]["sim_s_per_job"]
+        claims.append((
+            f"pack layer: flat out to {max(sizes)} files"
+            " (every point within 1.15x of the smallest)",
+            worst <= 1.15 * base,
+            f"{base:.2f}s .. {worst:.2f}s over {sizes}",
+        ))
+    return claims
 
 
 def _write_schedule_json(rows: list[dict]) -> None:
@@ -135,6 +189,23 @@ def check_finish() -> None:
         raise SystemExit(1)
 
 
+def check_pack() -> None:
+    """Fast regression gate on the pack layer's aging curve: packed finish
+    at 200k repo files must stay within 1.1x of the 1k cost."""
+    from . import bench_finish
+
+    rows = bench_finish.run(
+        cases=("finish_packed",), aging_sizes=(1_000, 200_000)
+    )
+    _write_pack_json(rows, merge=True)
+    ok = True
+    for name, passed, detail in _pack_claims(rows):
+        ok &= passed
+        print(f"# [{'PASS' if passed else 'FAIL'}] {name}: {detail}")
+    if not ok:
+        raise SystemExit(1)
+
+
 def check_schedule() -> None:
     """Fast regression gate on the spec layer's batched submission: 64 jobs
     through one ``submit_many`` must cost < 0.5x the sum of 64 individual
@@ -168,6 +239,7 @@ def main() -> None:
 
     _write_finish_json(rows)
     _write_schedule_json(rows)
+    _write_pack_json(rows)
 
     print("name,us_per_call,derived")
     claims = []
@@ -182,7 +254,7 @@ def main() -> None:
             name = f"schedule_batch/{r['case']}/{r['n_jobs']}jobs"
             us = r["wall_us_per_job"]
             derived = f"sim={r['sim_s_per_job']:.3f}s_per_job"
-        elif r["bench"] == "finish":
+        elif r["bench"] in ("finish", "finish_pack"):
             name = f"finish/{r['case']}/{r['repo_files']}files"
             us = r["wall_us_per_job"]
             derived = f"sim={r['sim_s_per_job']:.3f}s_per_job"
@@ -211,6 +283,7 @@ def main() -> None:
         )
     fin = {(r["case"], r["repo_files"]): r for r in rows if r["bench"] == "finish"}
     claims += _finish_claims(fin)
+    claims += _pack_claims(rows)
     claims += _schedule_batch_claims(rows)
     conf = {r["scheduled_jobs"]: r for r in rows if r["bench"] == "conflict_check"}
     claims.append(("§5.5: conflict check ~O(1) in scheduled jobs",
@@ -235,6 +308,9 @@ if __name__ == "__main__":
         ran_gate = True
     if "--check-schedule" in sys.argv[1:]:
         check_schedule()
+        ran_gate = True
+    if "--check-pack" in sys.argv[1:]:
+        check_pack()
         ran_gate = True
     if not ran_gate:
         main()

@@ -81,11 +81,14 @@ class AnnexStore:
         self.fs.unlink(self._path(key))
 
     def keys(self) -> list[str]:
+        # enumeration goes through FS like every other store op, so annex
+        # listing is charged under the same parallel-FS cost model (one
+        # listdir per shard, degraded with the shard's entry count)
         out = []
-        if not os.path.isdir(self.root):
+        if not self.fs.isdir(self.root):
             return out
-        for shard in sorted(os.listdir(self.root)):
+        for shard in self.fs.listdir(self.root):
             d = os.path.join(self.root, shard)
-            if os.path.isdir(d):
-                out.extend(sorted(os.listdir(d)))
+            if self.fs.isdir(d):
+                out.extend(self.fs.listdir(d))
         return out

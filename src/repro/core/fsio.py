@@ -153,6 +153,47 @@ class FS:
             n = self._dir_entries.get(dirpath, 0) + delta
             self._dir_entries[dirpath] = max(0, n)
 
+    def dir_entries_snapshot(self) -> dict[str, int]:
+        """Copy of the modeled per-directory entry counts (bookkeeping read,
+        charges nothing — used by repack-pressure checks)."""
+        with self._stats_lock:
+            return dict(self._dir_entries)
+
+    def purge_phantom_entries(self, dirpath: str) -> int:
+        """Unlink every *modeled* entry of ``dirpath`` that has no backing
+        file, charging the storm as if each phantom were really unlinked.
+
+        Benchmarks emulate a repository's accumulated object footprint by
+        seeding shard entry counts (:meth:`preload_dir_entries`) without
+        materializing the files. ``repack`` physically unlinks what exists
+        and calls this so the modeled count agrees with the now-compacted
+        directory — the i-th phantom unlink is charged at the entry count it
+        would have seen (closed form, so purging a 200k-object footprint
+        needs no 200k-iteration loop). Returns the number purged; a no-op
+        whenever modeled == real (i.e. outside benchmark emulation)."""
+        d = os.path.abspath(dirpath)
+        real = len(os.listdir(d)) if os.path.isdir(d) else 0
+        with self._stats_lock:
+            modeled = self._dir_entries.get(d, 0)
+            phantom = modeled - real
+            if phantom <= 0:
+                return 0
+            self._dir_entries[d] = real
+            self.n_files = max(0, self.n_files - phantom)
+        p = self.profile
+        total = phantom * p.meta_op_s
+        if p.dir_degrade:
+            # entry counts seen: modeled, modeled-1, ..., real+1
+            def tri(n: int) -> int:  # sum 1..n
+                return n * (n + 1) // 2 if n > 0 else 0
+
+            total += p.dir_degrade * (
+                tri(modeled - p.degrade_threshold)
+                - tri(real - p.degrade_threshold)
+            )
+        self.clock.charge_meta(phantom, total)
+        return phantom
+
     # -- cost charging -------------------------------------------------
     def _charge_meta(self, n: int, dirpath: str) -> None:
         p = self.profile
@@ -213,6 +254,10 @@ class FS:
         self._meta(1, path)
         return os.stat(path).st_size
 
+    def stat_mtime(self, path: str) -> float:
+        self._meta(1, path)
+        return os.stat(path).st_mtime
+
     def mkdir(self, path: str) -> None:
         self._meta(1, path)
         self._makedirs_counted(path)
@@ -223,19 +268,46 @@ class FS:
         return sorted(os.listdir(path))
 
     def write_bytes(self, path: str, data: bytes) -> None:
+        self.write_chunks(path, (data,))
+
+    def write_chunks(self, path: str, chunks) -> int:
+        """Streamed write: one open/close plus the total bytes, never
+        holding more than one chunk in memory — ``write_bytes`` is the
+        single-chunk special case, so the charging protocol (2 meta ops,
+        write-side transfer, new-file tracking) lives only here. Returns
+        the byte count written."""
         existed = os.path.exists(path)
         self._ensure_parent(path)
+        total = 0
         with open(path, "wb") as f:
-            f.write(data)
-        self._meta(2, path)  # open+close
-        self._xfer(len(data), write=True)
+            for c in chunks:
+                f.write(c)
+                total += len(c)
+        self._meta(2, path)
+        self._xfer(total, write=True)
         self._track_new_file(path, existed)
+        return total
 
     def read_bytes(self, path: str) -> bytes:
         with open(path, "rb") as f:
             data = f.read()
         self._meta(2, path)
         self._xfer(len(data), write=False)
+        return data
+
+    def read_range(self, path: str, offset: int, nbytes: int) -> bytes:
+        """Positioned read (the pack-file read path): open + seek + read of
+        ``nbytes``. Charged like :meth:`read_bytes` of the range — the seek
+        itself is free; only the bytes actually transferred cost time."""
+        with open(path, "rb") as f:
+            f.seek(offset)
+            data = f.read(nbytes)
+        if len(data) != nbytes:
+            raise IOError(
+                f"short read: wanted [{offset}:{offset + nbytes}) of {path}"
+            )
+        self._meta(2, path)
+        self._xfer(nbytes, write=False)
         return data
 
     def append_text(self, path: str, text: str) -> None:

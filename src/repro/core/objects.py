@@ -25,6 +25,13 @@ filesystem ops. Hits are re-parsed from the cached bytes, so every caller
 gets a private dict it may mutate freely (the pre-cache contract).
 ``disable_caches()`` restores the seed-era always-probe behavior for
 benchmarking the pre-incremental implementation.
+
+Storage has two tiers (DESIGN.md §8): *loose* files under
+``objects/<2-hex>/<62-hex>`` (where every ``put`` lands) and *packs* under
+``objects/pack/`` (where ``repack()`` consolidates them so shard directory
+entry counts — the parallel-FS degradation driver — stay bounded). The read
+path consults the in-memory pack index first; packs are storage, not a
+cache, so ``disable_caches()`` does not bypass them.
 """
 from __future__ import annotations
 
@@ -36,11 +43,13 @@ from collections import OrderedDict
 
 from .fsio import FS
 from .hashing import sha256_bytes
+from .packs import PACK_DIR, PackManager
 
 KINDS = ("blob", "tree", "commit")
 
 DEFAULT_TREE_CACHE = 8192
 DEFAULT_COMMIT_CACHE = 8192
+DEFAULT_BLOB_CACHE_BYTES = 32 << 20  # bound by payload bytes, not entry count
 KNOWN_OID_CAP = 1 << 20  # bound the probe-skip set for long-lived processes
 
 
@@ -55,10 +64,13 @@ class ObjectStore:
         fs: FS,
         tree_cache_size: int = DEFAULT_TREE_CACHE,
         commit_cache_size: int = DEFAULT_COMMIT_CACHE,
+        blob_cache_bytes: int = DEFAULT_BLOB_CACHE_BYTES,
     ):
         self.root = root
         self.fs = fs
+        self.packs = PackManager(os.path.join(root, PACK_DIR))
         self._lock = threading.Lock()
+        self._repack_lock = threading.Lock()  # one compaction at a time
         self._caches_enabled = True
         self._known: set[str] = set()
         # oid -> canonical payload bytes; parsed per hit so returned dicts
@@ -67,16 +79,23 @@ class ObjectStore:
         self._commit_cache: OrderedDict[str, bytes] = OrderedDict()
         self._tree_cache_size = tree_cache_size
         self._commit_cache_size = commit_cache_size
+        # oid -> blob payload; bytes are immutable so hits are shared safely
+        self._blob_cache: OrderedDict[str, bytes] = OrderedDict()
+        self._blob_cache_bytes = blob_cache_bytes
+        self._blob_cache_used = 0
 
     def disable_caches(self) -> None:
         """Revert to uncached (seed-era) behavior: every ``put`` probes the
-        filesystem, every ``get_tree``/``get_commit`` re-reads and re-parses.
-        Used by benchmarks to measure the pre-incremental implementation."""
+        filesystem, every ``get_tree``/``get_commit``/``get_blob`` re-reads
+        and re-parses. Used by benchmarks to measure the pre-incremental
+        implementation. Packs stay active — they are storage, not a cache."""
         with self._lock:
             self._caches_enabled = False
             self._known.clear()
             self._tree_cache.clear()
             self._commit_cache.clear()
+            self._blob_cache.clear()
+            self._blob_cache_used = 0
 
     def _path(self, oid: str) -> str:
         return os.path.join(self.root, oid[:2], oid[2:])
@@ -118,34 +137,115 @@ class ObjectStore:
             with self._lock:
                 if oid in self._known:
                     return oid
+        if self.packs.has(oid, self.fs):
+            # already packed: writing a loose duplicate would re-grow the
+            # shard pressure repack just removed
+            self._mark_known(oid)
+            return oid
         path = self._path(oid)
         if not self.fs.exists(path):
             self.fs.write_bytes(path, zlib.compress(framed, 1))
         self._mark_known(oid)
         return oid
 
-    def get(self, oid: str) -> tuple[str, bytes]:
-        framed = zlib.decompress(self.fs.read_bytes(self._path(oid)))
+    def _parse_frame(self, compressed: bytes, oid: str) -> tuple[str, bytes]:
+        framed = zlib.decompress(compressed)
         header, _, payload = framed.partition(b"\0")
         kind, _, length = header.decode().partition(" ")
         if int(length) != len(payload):
             raise IOError(f"corrupt object {oid}")
+        return kind, payload
+
+    def _read_compressed(self, oid: str) -> bytes:
+        """One object's compressed frame from either tier — the in-memory
+        pack index answers first (a loose duplicate from a crashed repack is
+        dead weight for the next repack to sweep). A reader racing another
+        process's repack — loose file unlinked, or an indexed pack
+        consolidated away — force-reloads the index and retries both tiers
+        before reporting the object missing."""
+        try:
+            if self.packs.has(oid, self.fs):
+                return self.packs.read(oid, self.fs)
+            return self.fs.read_bytes(self._path(oid))
+        except FileNotFoundError:
+            self.packs.load(self.fs, force=True)
+            try:
+                return self.packs.read(oid, self.fs)
+            except KeyError:
+                pass
+            try:
+                return self.fs.read_bytes(self._path(oid))
+            except FileNotFoundError:
+                raise FileNotFoundError(
+                    f"object {oid} is neither loose nor packed"
+                ) from None
+
+    def get(self, oid: str) -> tuple[str, bytes]:
+        kind, payload = self._parse_frame(self._read_compressed(oid), oid)
         self._mark_known(oid)
         return kind, payload
 
     def has(self, oid: str) -> bool:
+        """Note: a miss is answered from the current pack index + loose
+        probe without a forced index reload (that would charge a rescan on
+        every legitimate miss), so another process's concurrent repack can
+        make ``has`` transiently report False. The paths where that matters
+        self-heal: ``get`` retries through a reloaded index, and
+        ``find_prefix`` (hence ``resolve``) reloads before concluding
+        nothing matches; a stale-miss ``put`` merely re-writes a loose
+        duplicate the next repack sweeps."""
         if self._caches_enabled:
             with self._lock:
                 if oid in self._known:
                     return True
-        if self.fs.exists(self._path(oid)):
+        if self.packs.has(oid, self.fs) or self.fs.exists(self._path(oid)):
             self._mark_known(oid)
             return True
         return False
 
+    def find_prefix(self, prefix: str) -> list[str]:
+        """Every stored oid starting with ``prefix`` — packed (in-memory
+        index) and loose (one charged shard listdir). Needs at least the
+        2-hex shard to be determined. An empty result retries once behind a
+        did-the-pack-dir-change check (one charged stat), so resolution
+        survives another process's repack moving the object out of the
+        loose tier without a full rescan on every genuinely-absent probe."""
+        if len(prefix) < 2:
+            raise ValueError(f"oid prefix too short: {prefix!r}")
+        matches = self._find_prefix_once(prefix)
+        if not matches and self.packs.maybe_reload(self.fs):
+            matches = self._find_prefix_once(prefix)
+        return matches
+
+    def _find_prefix_once(self, prefix: str) -> list[str]:
+        matches = set(self.packs.oids_with_prefix(prefix, self.fs))
+        shard = os.path.join(self.root, prefix[:2])
+        if self.fs.isdir(shard):
+            for f in self.fs.listdir(shard):
+                if (prefix[:2] + f).startswith(prefix):
+                    matches.add(prefix[:2] + f)
+        return sorted(matches)
+
     # -- typed helpers ---------------------------------------------------
+    def _blob_cache_put(self, oid: str, data: bytes) -> None:
+        if not self._caches_enabled or len(data) > self._blob_cache_bytes:
+            return
+        with self._lock:
+            old = self._blob_cache.pop(oid, None)
+            if old is not None:
+                self._blob_cache_used -= len(old)
+            self._blob_cache[oid] = data
+            self._blob_cache_used += len(data)
+            while self._blob_cache_used > self._blob_cache_bytes:
+                _, evicted = self._blob_cache.popitem(last=False)
+                self._blob_cache_used -= len(evicted)
+
     def put_blob(self, data: bytes) -> str:
-        return self.put("blob", data)
+        # prime the read path symmetrically with put_tree/put_commit: a
+        # checkout right after a save must not re-read what it just wrote
+        oid = self.put("blob", data)
+        self._blob_cache_put(oid, data)
+        return oid
 
     def put_tree(self, entries: dict) -> str:
         payload = canonical_json(entries)
@@ -160,9 +260,16 @@ class ObjectStore:
         return oid
 
     def get_blob(self, oid: str) -> bytes:
+        if self._caches_enabled:
+            with self._lock:
+                cached = self._blob_cache.get(oid)
+                if cached is not None:
+                    self._blob_cache.move_to_end(oid)
+                    return cached  # bytes are immutable: sharing is safe
         kind, payload = self.get(oid)
         if kind != "blob":
             raise TypeError(f"{oid} is a {kind}, not a blob")
+        self._blob_cache_put(oid, payload)
         return payload
 
     def get_tree(self, oid: str) -> dict:
@@ -184,3 +291,109 @@ class ObjectStore:
             raise TypeError(f"{oid} is a {kind}, not a commit")
         self._cache_put(self._commit_cache, self._commit_cache_size, oid, payload)
         return json.loads(payload)
+
+    # -- compaction (DESIGN.md §8) ---------------------------------------
+    def _shard_dirs(self) -> list[str]:
+        """All 256 possible shard paths — including shards that exist only
+        as modeled entry counts (benchmark-seeded footprints)."""
+        return [os.path.join(self.root, f"{i:02x}") for i in range(256)]
+
+    def loose_pressure(self) -> int:
+        """Max modeled entry count over the 256 loose shards (free
+        bookkeeping reads, O(shards) regardless of how many directories
+        the FS has ever tracked — drives the auto-repack trigger)."""
+        return max(self.fs.dir_entry_count(d) for d in self._shard_dirs())
+
+    def repack(self, delete_loose: bool = True,
+               max_packs: int | None = 48) -> dict:
+        """Migrate every loose object into one new pack and unlink the loose
+        files, dropping shard entry counts back below the parallel-FS
+        ``degrade_threshold``.
+
+        Crash-safe ordering: the pack data and its index are written and
+        published (atomic rename) BEFORE any loose file is unlinked, so a
+        crash at any point leaves duplicates, never missing objects
+        (``delete_loose=False`` stops after publishing — the post-crash
+        state, used by equivalence tests). Also reconciles benchmark-seeded
+        phantom shard entries (charged as if really unlinked; see
+        ``FS.purge_phantom_entries``).
+
+        Once ``objects/pack/`` holds ``max_packs`` packs, they are folded
+        into the new pack and their files removed (index before data, after
+        the new pack is live) — so the pack directory's own entry count is
+        bounded at ~``2 x max_packs + 2`` forever and never re-crosses the
+        degradation threshold the packs exist to avoid (``max_packs=None``
+        disables consolidation). One compaction runs at a time
+        (``_repack_lock``); readers racing the unlink storm retry through
+        the pack index (see ``get``). Returns stats."""
+        with self._repack_lock:
+            return self._repack_locked(delete_loose, max_packs)
+
+    def _repack_locked(self, delete_loose: bool, max_packs: int | None) -> dict:
+        fs = self.fs
+        # crash leftovers (unindexed data, stray tmps) count against the
+        # pack dir's entry bound but serve nothing: sweep them first
+        swept = self.packs.sweep_garbage(fs)
+        to_pack: list[tuple[str, str]] = []  # (oid, loose path)
+        loose_paths: list[str] = []
+        real_shards = (
+            set(fs.listdir(self.root)) if os.path.isdir(self.root) else set()
+        )
+        for shard in self._shard_dirs():
+            if os.path.basename(shard) not in real_shards:
+                continue
+            for name in fs.listdir(shard):
+                oid = os.path.basename(shard) + name
+                path = os.path.join(shard, name)
+                if not self.packs.has(oid, fs):  # else: prior-crash duplicate
+                    to_pack.append((oid, path))
+                loose_paths.append(path)
+        consolidated: list[str] = []
+        if max_packs is not None:
+            ids = self.packs.pack_ids(fs)
+            if len(ids) >= max_packs:
+                # geometric-ish fold: rewrite only the smaller half each
+                # cycle (plus whatever more the count bound needs), so
+                # lifetime pack I/O stays ~O(N log N) — big, old packs are
+                # not re-copied on every 48th repack
+                n_fold = max(len(ids) + 1 - max_packs, (len(ids) + 1) // 2)
+
+                def size_of(pid: str) -> int:
+                    try:
+                        return self.packs.pack_data_size(pid, fs)
+                    except OSError:
+                        return 0  # raced a foreign drop: fold the ghost away
+                consolidated = sorted(ids, key=size_of)[:n_fold]
+
+        def frames():
+            # lazily: one loose file / one old pack resident at a time
+            for oid, path in to_pack:
+                yield oid, fs.read_bytes(path)
+            for pid in consolidated:
+                yield from self.packs.read_pack_objects(pid, fs)
+
+        pack_id = None
+        if to_pack or consolidated:
+            pack_id = self.packs.add_pack(frames(), fs)
+        # the pack (and index) is published: from here on every object is
+        # served from it, and losing the loose/old-pack copies can no
+        # longer lose data
+        unlinked = phantoms = 0
+        if delete_loose:
+            for path in loose_paths:
+                fs.unlink(path)
+                unlinked += 1
+            for shard in self._shard_dirs():
+                phantoms += fs.purge_phantom_entries(shard)
+            for pid in consolidated:
+                if pid != pack_id:  # identical content re-packed in place
+                    self.packs.drop_pack_files(pid, fs)
+        return {
+            "pack_id": pack_id,
+            "objects_packed": len(to_pack),
+            "packs_consolidated": len(consolidated),
+            "garbage_swept": swept,
+            "loose_unlinked": unlinked,
+            "phantom_entries_purged": phantoms,
+            "packed_total": self.packs.n_packed(fs),
+        }

@@ -1,0 +1,325 @@
+"""Pack layer: bound object-store directory pressure (DESIGN.md §8).
+
+The parallel-FS cost model (fsio.py) charges every metadata op an extra
+``dir_degrade * (entries - degrade_threshold)`` against the directory being
+touched. Loose objects accumulate one file per object *forever* in the 256
+``objects/<2-hex>/`` shards, so the degradation term on new writes grows
+with repository age even after the incremental commit engine made the *op
+count* O(changed paths). Packs remove the remaining slope: many immutable
+objects are consolidated into one append-only ``.pack`` file plus a JSON
+``.idx`` (oid -> offset/length), the shards are emptied, and every shard's
+entry count drops back below ``degrade_threshold`` — metadata ops return to
+base cost regardless of how many objects the repository has ever stored.
+
+Format
+------
+``objects/pack/pack-<id>.pack``   concatenation of the objects' *loose file
+                                  bytes* (zlib-compressed ``<kind> <len>\\0
+                                  <payload>`` frames), in index order.
+``objects/pack/pack-<id>.idx``    ``{"version": 1, "objects":
+                                  {oid: [offset, length], ...}}``.
+
+``<id>`` is the sha256 of the pack data, so re-packing identical content is
+idempotent. A pack holds the byte-identical compressed frame the loose file
+held, so reads are equivalence-testable byte for byte.
+
+Crash-safety invariant
+----------------------
+A pack *exists* only once its index does. ``ObjectStore.repack`` writes the
+data file, publishes the index atomically (write + rename), and only then
+unlinks the loose files it packed. A crash at any point therefore leaves
+either (a) no index — the stray data file is garbage, every object still
+loose — or (b) an index plus loose duplicates; never a missing object. The
+read path prefers the pack and treats a loose duplicate as dead weight for
+the next repack to sweep.
+
+:class:`PackManager` holds no :class:`~repro.core.fsio.FS` reference —
+callers pass their current ``fs`` so stores whose ``fs`` is swapped after
+``clone`` stay consistent. All on-disk probing is charged through that
+``fs``; index lookups after load are pure in-memory dict/bisect work.
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+import json
+import os
+import threading
+import time
+import uuid
+
+from .fsio import FS
+
+PACK_DIR = "pack"
+INDEX_VERSION = 1
+
+
+class PackError(IOError):
+    pass
+
+
+class PackManager:
+    """In-memory index over every published pack under ``objects/pack/``.
+
+    Lazily loads all ``.idx`` files on first use (one charged ``isdir`` +
+    ``listdir`` + one charged read per index); packs created in-process via
+    :meth:`add_pack` are registered directly without re-scanning.
+    """
+
+    def __init__(self, root: str):
+        self.root = root  # .../objects/pack
+        self._lock = threading.Lock()
+        self._load_lock = threading.Lock()  # serializes the one-time scan
+        self._loaded = False
+        # oid -> (pack data path, offset, length)
+        self._where: dict[str, tuple[str, int, int]] = {}
+        # every registered pack, INCLUDING ones whose oids are all shadowed
+        # by a newer pack (crash mid-consolidation) — consolidation must see
+        # those to sweep their files, so ids are tracked independently of
+        # which pack currently serves each oid
+        self._pack_ids: set[str] = set()
+        self._sorted_oids: list[str] | None = []  # None = dirty, rebuild
+        self._mtime_at_load: float | None = None
+
+    # -- loading ---------------------------------------------------------
+    def _data_path(self, pack_id: str) -> str:
+        return os.path.join(self.root, f"pack-{pack_id}.pack")
+
+    def _index_path(self, pack_id: str) -> str:
+        return os.path.join(self.root, f"pack-{pack_id}.idx")
+
+    def load(self, fs: FS, force: bool = False) -> None:
+        """Scan ``objects/pack/`` for published indexes (charged via ``fs``)
+        and REPLACE the in-memory state with what is on disk — a reload
+        therefore also prunes packs another process consolidated away.
+        The new state is built aside and swapped in under the lock, so a
+        concurrent reader never observes a half-populated index."""
+        if self._loaded and not force:
+            return
+        with self._load_lock:
+            if self._loaded and not force:
+                return
+            new_where: dict[str, tuple[str, int, int]] = {}
+            new_ids: set[str] = set()
+            # stamp BEFORE scanning: a foreign publish racing the scan then
+            # leaves the stamp stale, so maybe_reload rescans once instead
+            # of permanently masking the pack we half-missed
+            self._stamp_current()
+            if fs.isdir(self.root):
+                for name in fs.listdir(self.root):
+                    if not name.endswith(".idx"):
+                        continue
+                    pack_id = name[len("pack-"):-len(".idx")]
+                    index = json.loads(
+                        fs.read_bytes(os.path.join(self.root, name))
+                    )
+                    if index.get("version") != INDEX_VERSION:
+                        raise PackError(
+                            f"unsupported pack index version in pack-{pack_id}"
+                        )
+                    data = self._data_path(pack_id)
+                    new_ids.add(pack_id)
+                    for oid, (off, length) in index["objects"].items():
+                        new_where[oid] = (data, off, length)
+            with self._lock:
+                self._where = new_where
+                self._pack_ids = new_ids
+                self._sorted_oids = None
+            self._loaded = True
+
+    def maybe_reload(self, fs: FS) -> bool:
+        """Rescan only if ``objects/pack/`` changed since the last load
+        (one charged stat vs. a full ~2x-packs-op rescan) — the cheap gate
+        for the miss-retry paths. Returns True if a rescan happened.
+        Caveat: on filesystems with coarse mtime granularity a foreign
+        publish inside the same tick as our load can be missed here;
+        ``get``'s unconditional force-reload retry still self-heals reads."""
+        try:
+            current = fs.stat_mtime(self.root)
+        except OSError:
+            return False
+        if current == self._mtime_at_load:
+            return False
+        self.load(fs, force=True)
+        return True
+
+    def _register(self, pack_id: str, index: dict) -> None:
+        if index.get("version") != INDEX_VERSION:
+            raise PackError(f"unsupported pack index version in pack-{pack_id}")
+        data = self._data_path(pack_id)
+        with self._lock:
+            self._pack_ids.add(pack_id)
+            for oid, (off, length) in index["objects"].items():
+                self._where[oid] = (data, off, length)
+            self._sorted_oids = None  # rebuilt lazily on next prefix search
+        # deliberately NOT restamped: our own add_pack/drop also moves the
+        # dir mtime, so the next miss-retry rescans once — wasteful-looking,
+        # but stamping here would mask any FOREIGN pack published between
+        # our last load and this write, and resolve would then miss it
+
+    def _stamp_current(self) -> None:
+        """Record the pack dir mtime the in-memory state corresponds to
+        (only from ``load``, which mirrors disk exactly at that moment)."""
+        try:
+            self._mtime_at_load = os.path.getmtime(self.root)
+        except OSError:
+            pass
+
+    # -- queries ---------------------------------------------------------
+    def has(self, oid: str, fs: FS) -> bool:
+        self.load(fs)
+        with self._lock:
+            return oid in self._where
+
+    def read(self, oid: str, fs: FS) -> bytes:
+        """The packed object's compressed frame (loose-file-identical bytes)."""
+        self.load(fs)
+        with self._lock:
+            loc = self._where.get(oid)
+        if loc is None:
+            raise KeyError(f"object {oid} is not packed")
+        path, off, length = loc
+        return fs.read_range(path, off, length)
+
+    def oids_with_prefix(self, prefix: str, fs: FS) -> list[str]:
+        """All packed oids starting with ``prefix`` (in-memory bisect)."""
+        self.load(fs)
+        with self._lock:
+            if self._sorted_oids is None:
+                self._sorted_oids = sorted(self._where)
+            oids = self._sorted_oids
+            lo = bisect.bisect_left(oids, prefix)
+            out = []
+            for i in range(lo, len(oids)):
+                if not oids[i].startswith(prefix):
+                    break
+                out.append(oids[i])
+            return out
+
+    def n_packed(self, fs: FS) -> int:
+        self.load(fs)
+        with self._lock:
+            return len(self._where)
+
+    def pack_ids(self, fs: FS) -> list[str]:
+        self.load(fs)
+        with self._lock:
+            return sorted(self._pack_ids)
+
+    def pack_data_size(self, pack_id: str, fs: FS) -> int:
+        return fs.stat_size(self._data_path(pack_id))
+
+    def read_pack_objects(self, pack_id: str, fs: FS):
+        """Yield every ``(oid, frame)`` currently served from ``pack_id`` —
+        one whole-file read, sliced lazily so consolidation keeps at most
+        one pack plus one frame resident at a time."""
+        self.load(fs)
+        data_path = self._data_path(pack_id)
+        with self._lock:
+            spans = [
+                (oid, off, length)
+                for oid, (path, off, length) in self._where.items()
+                if path == data_path
+            ]
+        if not spans:
+            return
+        data = fs.read_bytes(data_path)
+        for oid, off, length in spans:
+            yield oid, data[off:off + length]
+
+    def sweep_garbage(self, fs: FS, min_age_s: float = 86400.0) -> int:
+        """Unlink crash leftovers in ``objects/pack/``: ``*.tmp`` files and
+        data files with no published index, but only once their mtime is
+        ``min_age_s`` stale. Unreferenced files can never be *served from*,
+        but a young one may be a concurrent foreign repack's in-flight work
+        — in particular its data file in the rename-to-``.pack``-before-
+        index-publish window, which WILL be referenced moments later. A
+        live repack's tmp keeps a fresh mtime while ``write_chunks``
+        streams into it, and the rename-to-publish gap is milliseconds, so
+        a day-stale mtime really means a crash; genuine garbage is
+        collected on the first repack after it ages out, keeping the pack
+        directory's entry bound honest. Returns the number removed."""
+        if not fs.isdir(self.root):
+            return 0
+        names = fs.listdir(self.root)
+        indexed = {
+            n[len("pack-"):-len(".idx")] for n in names if n.endswith(".idx")
+        }
+        swept = 0
+        for n in names:
+            orphan_data = (
+                n.endswith(".pack")
+                and n[len("pack-"):-len(".pack")] not in indexed
+            )
+            if not (n.endswith(".tmp") or orphan_data):
+                continue
+            path = os.path.join(self.root, n)
+            try:
+                if time.time() - fs.stat_mtime(path) < min_age_s:
+                    continue  # possibly someone's in-flight pack: leave it
+            except OSError:
+                continue  # vanished already (its owner finished or cleaned)
+            fs.unlink(path)
+            swept += 1
+        return swept
+
+    def drop_pack_files(self, pack_id: str, fs: FS) -> None:
+        """Unlink a superseded pack's files. The caller must already have
+        re-registered every one of its oids in a newer pack — in-memory
+        locations are untouched here. Index first, then data: a crash in
+        between leaves an unindexed (garbage) data file, never an index
+        pointing at missing data."""
+        fs.unlink(self._index_path(pack_id))
+        fs.unlink(self._data_path(pack_id))
+        with self._lock:
+            self._pack_ids.discard(pack_id)
+
+    # -- writing ---------------------------------------------------------
+    def add_pack(self, objects, fs: FS) -> str | None:
+        """Write + atomically publish one pack holding ``objects`` (an
+        iterable of ``(oid, compressed frame bytes)`` pairs — consumed
+        lazily, so a multi-GB repack holds at most one loose frame (or one
+        consolidated pack) plus the offset index in memory). Returns the
+        pack id, or None if the iterable was empty. The caller owns unlinking the loose copies —
+        and must do so only *after* this returns (the crash-safety
+        invariant)."""
+        self.load(fs)
+        index: dict[str, list[int]] = {}
+        digest = hashlib.sha256()
+        offset = 0
+
+        def stream():
+            nonlocal offset
+            for oid, frame in objects:
+                index[oid] = [offset, len(frame)]
+                offset += len(frame)
+                digest.update(frame)
+                yield frame
+
+        # stream to a collision-free temp name (the id isn't known until
+        # the data is hashed), then rename into place — still before the
+        # index publish
+        tmp_data = os.path.join(
+            self.root, f"incoming-{os.getpid()}-{uuid.uuid4().hex[:8]}.tmp"
+        )
+        try:
+            fs.write_chunks(tmp_data, stream())
+        except BaseException:
+            fs.unlink(tmp_data)  # no half-written tmp left behind
+            raise
+        if not index:
+            fs.unlink(tmp_data)
+            return None
+        pack_id = digest.hexdigest()[:16]
+        fs.rename(tmp_data, self._data_path(pack_id))
+        # publish: the index appears atomically or not at all
+        tmp = self._index_path(pack_id) + ".tmp"
+        fs.write_bytes(
+            tmp,
+            json.dumps(
+                {"version": INDEX_VERSION, "objects": index}, sort_keys=True
+            ).encode(),
+        )
+        fs.rename(tmp, self._index_path(pack_id))
+        self._register(pack_id, {"version": INDEX_VERSION, "objects": index})
+        return pack_id

@@ -188,13 +188,11 @@ class Repository:
             return self.branch_head(commitish)  # type: ignore[return-value]
         if self.objects.has(commitish):
             return commitish
-        # prefix search, charged like every other metadata op
+        # prefix search over BOTH tiers: the pack index (in-memory) and the
+        # loose shard (one charged listdir) — see ObjectStore.find_prefix
         matches = []
-        shard = os.path.join(self.objects.root, commitish[:2])
-        if len(commitish) >= 4 and self.fs.isdir(shard):
-            for f in self.fs.listdir(shard):
-                if (commitish[:2] + f).startswith(commitish):
-                    matches.append(commitish[:2] + f)
+        if len(commitish) >= 4:
+            matches = self.objects.find_prefix(commitish)
         if len(matches) == 1:
             return matches[0]
         raise ValueError(f"cannot resolve {commitish!r} ({len(matches)} matches)")

@@ -63,10 +63,15 @@ class SlurmScheduler:
     the amortization a one-CLI-call-per-job workflow cannot have."""
 
     def __init__(self, repo: Repository, cluster: S.SlurmCluster,
-                 cli_startup_s: float = 0.35):
+                 cli_startup_s: float = 0.35,
+                 auto_repack_threshold: int | None = None):
         self.repo = repo
         self.cluster = cluster
         self.cli_startup_s = cli_startup_s
+        # max loose-shard entry count tolerated before finish() compacts the
+        # object store after its commit batch (DESIGN.md §8). None disables
+        # auto-repack — measurement runs want the aging slope observable.
+        self.auto_repack_threshold = auto_repack_threshold
         self.db = JobDB(repo.repro_dir)
 
     def _charge_cli(self) -> None:
@@ -267,6 +272,10 @@ class SlurmScheduler:
             jobs = [j for j in jobs if j["job_id"] == job_id]
         if slurm_job_id is not None:
             jobs = [j for j in jobs if j["slurm_id"] == slurm_job_id]
+        # one batched accounting query for the whole candidate set
+        states = self.cluster.sacct_many(
+            [j["slurm_id"] for j in jobs if j["slurm_id"] is not None]
+        )
         results: list[FinishResult] = []
         to_commit: list[tuple[dict, str]] = []
         for job in jobs:
@@ -278,7 +287,7 @@ class SlurmScheduler:
                     self.db.close_job(job["job_id"], status="closed-unsubmitted")
                 results.append(FinishResult(job["job_id"], -1, "UNKNOWN", None))
                 continue
-            state = self.cluster.sacct(job["slurm_id"])
+            state = states[job["slurm_id"]]
             if state not in S.TERMINAL:
                 continue  # still pending/running -> a future slurm-finish
             if state != S.COMPLETED and not (close_failed_jobs or commit_failed_jobs):
@@ -293,7 +302,21 @@ class SlurmScheduler:
             to_commit, use_branch=branches or octopus, octopus=octopus,
             engine=engine,
         )
+        if to_commit:
+            self.maybe_repack()
         return results
+
+    def maybe_repack(self) -> dict | None:
+        """Threshold-based compaction (DESIGN.md §8), amortized over finish
+        batches: when any loose shard's entry count exceeds
+        ``auto_repack_threshold``, migrate loose objects into a pack so new
+        writes stop paying the directory-pressure degradation. Runs AFTER
+        the batch's refs are published; crash-safe by repack's
+        pack-before-unlink ordering. Returns repack stats, or None."""
+        thr = self.auto_repack_threshold
+        if thr is None or self.repo.objects.loose_pressure() <= thr:
+            return None
+        return self.repo.objects.repack()
 
     def _commit_jobs_batched(
         self,
@@ -419,13 +442,17 @@ class SlurmScheduler:
 
     # ----------------------------------------------------------- inspection
     def list_open_jobs(self) -> list[tuple[dict, str]]:
-        """``--list-open-jobs``: scheduled jobs + their current Slurm state.
-        A job whose slurm id was never persisted (crash mid-submission)
-        reports ``"UNKNOWN"``."""
+        """``--list-open-jobs``: scheduled jobs + their current Slurm state,
+        polled with ONE batched accounting query. A job whose slurm id was
+        never persisted (crash mid-submission) reports ``"UNKNOWN"``."""
+        jobs = self.db.open_jobs()
+        states = self.cluster.sacct_many(
+            [j["slurm_id"] for j in jobs if j["slurm_id"] is not None]
+        )
         return [
-            (j, self.cluster.sacct(j["slurm_id"]) if j["slurm_id"] is not None
+            (j, states[j["slurm_id"]] if j["slurm_id"] is not None
              else "UNKNOWN")
-            for j in self.db.open_jobs()
+            for j in jobs
         ]
 
     # ----------------------------------------------------------- reschedule
@@ -482,8 +509,10 @@ class SlurmScheduler:
         ``factor`` x the median runtime of completed jobs."""
         runtimes = []
         open_jobs = [j for j in self.db.open_jobs() if j["slurm_id"] is not None]
+        # one batched poll serves both the median scan and the straggler scan
+        states = self.cluster.sacct_many([j["slurm_id"] for j in open_jobs])
         for job in open_jobs:
-            if self.cluster.sacct(job["slurm_id"]) == S.COMPLETED:
+            if states[job["slurm_id"]] == S.COMPLETED:
                 rt = self.cluster.job_runtime(job["slurm_id"])
                 if rt:
                     runtimes.append(rt)
@@ -492,7 +521,7 @@ class SlurmScheduler:
         median = statistics.median(runtimes)
         stragglers = []
         for job in open_jobs:
-            if self.cluster.sacct(job["slurm_id"]) == S.RUNNING:
+            if states[job["slurm_id"]] == S.RUNNING:
                 rt = self.cluster.job_runtime(job["slurm_id"]) or 0.0
                 if rt > factor * median:
                     stragglers.append(job)

@@ -47,6 +47,7 @@ class Session:
         cluster: SlurmCluster | None = None,
         cli_startup_s: float = 0.0,
         max_workers: int = 8,
+        auto_repack_threshold: int | None | str = "auto",
     ):
         self.repo = repo
         self.cli_startup_s = cli_startup_s
@@ -54,6 +55,21 @@ class Session:
         self._cluster = cluster
         self._scheduler: SlurmScheduler | None = None
         self._owns_cluster = cluster is None
+        if isinstance(auto_repack_threshold, str) and auto_repack_threshold != "auto":
+            raise ValueError(
+                f"auto_repack_threshold must be an int, None, or 'auto'; "
+                f"got {auto_repack_threshold!r}"
+            )
+        if auto_repack_threshold == "auto":
+            # default: compact once a loose shard would start paying the
+            # parallel-FS degradation penalty; harmless (never derived) on
+            # profiles without one. None disables explicitly, exactly like
+            # SlurmScheduler's own parameter.
+            p = repo.fs.profile
+            auto_repack_threshold = (
+                p.degrade_threshold if p.dir_degrade > 0 else None
+            )
+        self.auto_repack_threshold = auto_repack_threshold
 
     # ------------------------------------------------------------ plumbing
     @property
@@ -68,7 +84,8 @@ class Session:
     def scheduler(self) -> SlurmScheduler:
         if self._scheduler is None:
             self._scheduler = SlurmScheduler(
-                self.repo, self.cluster, cli_startup_s=self.cli_startup_s
+                self.repo, self.cluster, cli_startup_s=self.cli_startup_s,
+                auto_repack_threshold=self.auto_repack_threshold,
             )
         return self._scheduler
 
@@ -97,6 +114,13 @@ class Session:
 
     def head(self) -> str | None:
         return self.repo.head_commit()
+
+    def gc(self, delete_loose: bool = True) -> dict:
+        """Compact the object store: migrate loose objects into a pack and
+        drop the shard entry counts that parallel-FS metadata latency
+        degrades with (DESIGN.md §8). Crash-safe — the pack is published
+        before any loose file is unlinked. Returns repack stats."""
+        return self.repo.objects.repack(delete_loose=delete_loose)
 
     # ------------------------------------------------------------ execution
     @staticmethod
@@ -174,6 +198,7 @@ def open(
     cluster: SlurmCluster | None = None,
     cli_startup_s: float = 0.0,
     max_workers: int = 8,
+    auto_repack_threshold: int | None | str = "auto",
     **init_kwargs,
 ) -> Session:
     """Open (or with ``create=True``, initialize) a repository at ``root``
@@ -194,5 +219,6 @@ def open(
             f"not a repro repository: {root} (pass create=True to initialize)"
         )
     return Session(
-        repo, cluster=cluster, cli_startup_s=cli_startup_s, max_workers=max_workers
+        repo, cluster=cluster, cli_startup_s=cli_startup_s,
+        max_workers=max_workers, auto_repack_threshold=auto_repack_threshold,
     )

@@ -43,6 +43,22 @@ TIMEOUT = "TIMEOUT"
 TERMINAL = {COMPLETED, FAILED, CANCELLED, TIMEOUT}
 
 
+def fold_states(states: list[str]) -> str:
+    """Collapse raw per-task sacct state strings into one job state with the
+    precedence both of SubprocessSlurmCluster's accounting paths (single and
+    batched) share — a job is only COMPLETED when nothing else applies to
+    any of its rows. NOTE: LocalSlurmCluster's ``aggregate_state`` orders
+    terminal states CANCELLED > TIMEOUT > FAILED instead; for mixed-terminal
+    array jobs the simulated and real backends can report different (but
+    equally terminal) states."""
+    if not states:
+        return PENDING
+    for precedence in (RUNNING, PENDING, FAILED, CANCELLED, TIMEOUT):
+        if any(s.startswith(precedence) for s in states):
+            return precedence
+    return COMPLETED
+
+
 @dataclass
 class TaskState:
     state: str = PENDING
@@ -88,6 +104,13 @@ class SlurmCluster:
 
     def sacct(self, job_id: int) -> str:
         raise NotImplementedError
+
+    def sacct_many(self, job_ids: list[int]) -> dict[int, str]:
+        """States for a whole set of jobs in ONE accounting query (one CLI
+        startup, not one per job). Backends override with a genuinely
+        batched call; this fallback preserves semantics for exotic
+        implementations that only provide ``sacct``."""
+        return {j: self.sacct(j) for j in job_ids}
 
     def sacct_tasks(self, job_id: int) -> list[str]:
         raise NotImplementedError
@@ -228,6 +251,19 @@ class LocalSlurmCluster(SlurmCluster):
             raise KeyError(f"unknown slurm job {job_id}")
         return job.aggregate_state()
 
+    def sacct_many(self, job_ids: list[int]) -> dict[int, str]:
+        if not job_ids:
+            return {}  # nothing to poll -> no CLI invocation, no charge
+        # one poll = one CLI-startup charge, however many jobs it covers
+        self.clock.charge(self.sacct_cost_s)
+        out = {}
+        for job_id in job_ids:
+            job = self._jobs.get(job_id)
+            if job is None:
+                raise KeyError(f"unknown slurm job {job_id}")
+            out[job_id] = job.aggregate_state()
+        return out
+
     def sacct_tasks(self, job_id: int) -> list[str]:
         self.clock.charge(self.sacct_cost_s)
         return [t.state for t in self._jobs[job_id].tasks]
@@ -305,12 +341,28 @@ class SubprocessSlurmCluster(SlurmCluster):
             capture_output=True, text=True, check=True,
         )
         states = [s.strip().rstrip("+") for s in out.stdout.splitlines() if s.strip()]
-        if not states:
-            return PENDING
-        for precedence in (RUNNING, PENDING, FAILED, CANCELLED, TIMEOUT):
-            if any(s.startswith(precedence) for s in states):
-                return precedence
-        return COMPLETED
+        return fold_states(states)
+
+    def sacct_many(self, job_ids: list[int]) -> dict[int, str]:
+        """One ``sacct -j id1,id2,...`` invocation for the whole set —
+        sacct accepts a comma-separated job list, so a 1000-job poll is one
+        CLI startup instead of 1000."""
+        if not job_ids:
+            return {}
+        out = subprocess.run(
+            ["sacct", "-j", ",".join(str(j) for j in job_ids), "-X", "-n",
+             "-o", "JobID%20,State%20"],
+            capture_output=True, text=True, check=True,
+        )
+        states: dict[int, list[str]] = {j: [] for j in job_ids}
+        for line in out.stdout.splitlines():
+            parts = line.split()
+            if len(parts) < 2:
+                continue
+            jid = parts[0].split("_")[0].split(".")[0]
+            if jid.isdigit() and int(jid) in states:
+                states[int(jid)].append(parts[1].rstrip("+"))
+        return {j: fold_states(sts) for j, sts in states.items()}
 
     def sacct_tasks(self, job_id: int) -> list[str]:
         out = subprocess.run(
@@ -326,7 +378,7 @@ class SubprocessSlurmCluster(SlurmCluster):
         deadline = time.time() + timeout
         ids = list(job_ids or [])
         while time.time() < deadline:
-            if all(self.sacct(j) in TERMINAL for j in ids):
+            if all(s in TERMINAL for s in self.sacct_many(ids).values()):
                 return
             time.sleep(5.0)
         raise TimeoutError(f"jobs {ids} still running after {timeout}s")

@@ -1,0 +1,469 @@
+"""Pack layer (DESIGN.md §8): loose/packed equivalence, crash safety through
+repack, auto-repack in finish, batched sacct polling, and the blob/annex
+cost-model satellites."""
+import os
+import random
+
+import pytest
+
+import repro
+from repro.core.annex import AnnexStore
+from repro.core.fsio import FS, GPFS, NULL_FS, SimClock
+from repro.core.objects import ObjectStore
+from repro.core.repo import Repository
+from repro.core.scheduler import SlurmScheduler
+from repro.core.slurm import COMPLETED, LocalSlurmCluster
+from repro.core.spec import RunSpec
+
+
+def write(root, rel, data):
+    p = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    mode = "wb" if isinstance(data, bytes) else "w"
+    with open(p, mode) as f:
+        f.write(data)
+
+
+def all_oids(repo):
+    """Every reachable object oid: commits, trees, blobs."""
+    oids = set()
+    for branch in repo.branches():
+        for commit_oid, commit in repo.log(repo.branch_head(branch)):
+            oids.add(commit_oid)
+
+            def walk(tree_oid):
+                oids.add(tree_oid)
+                for entry in repo.objects.get_tree(tree_oid).values():
+                    if entry["t"] == "tree":
+                        walk(entry["oid"])
+                    elif entry["t"] == "blob":
+                        oids.add(entry["oid"])
+
+            if commit["tree"]:
+                walk(commit["tree"])
+    return oids
+
+
+def loose_files(store):
+    out = []
+    for d in sorted(os.listdir(store.root)):
+        p = os.path.join(store.root, d)
+        if d != "pack" and os.path.isdir(p):
+            out += [os.path.join(p, f) for f in sorted(os.listdir(p))]
+    return out
+
+
+@pytest.fixture
+def repo(tmp_path):
+    repo = Repository.init(str(tmp_path / "repo"), annex_threshold=4096)
+    write(repo.root, "a.txt", "alpha")
+    write(repo.root, "dir/b.txt", "beta")
+    write(repo.root, "dir/sub/c.txt", "gamma")
+    write(repo.root, "big.bin", b"\x07" * 8192)  # annexed
+    repo.save(message="first")
+    write(repo.root, "dir/b.txt", "beta 2")
+    repo.save(message="second")
+    return repo
+
+
+# ------------------------------------------------------- equivalence property
+def test_repack_preserves_every_object_byte_identically(repo):
+    oids = all_oids(repo)
+    before = {oid: repo.objects.get(oid) for oid in oids}
+    stats = repo.objects.repack()
+    assert stats["objects_packed"] == len(oids)
+    assert loose_files(repo.objects) == []
+    # same store instance
+    for oid in oids:
+        assert repo.objects.has(oid)
+        assert repo.objects.get(oid) == before[oid]
+    # fresh instance (new process): only the pack index serves reads
+    repo2 = Repository(repo.root, fs=FS(NULL_FS))
+    for oid in oids:
+        assert repo2.objects.has(oid)
+        assert repo2.objects.get(oid) == before[oid]
+
+
+def test_repack_equivalence_property_randomized(tmp_path):
+    """Property test over random edit/save/repack interleavings: get/has/
+    resolve answers are identical before and after any repack()."""
+    rng = random.Random(1234)
+    repo = Repository.init(str(tmp_path / "repo"))
+    commits = []
+    for round_no in range(6):
+        for _ in range(rng.randint(1, 4)):
+            rel = f"d{rng.randint(0, 2)}/f{rng.randint(0, 5)}.txt"
+            write(repo.root, rel, f"payload {rng.random()}")
+        commits.append(repo.save(message=f"round {round_no}"))
+        snapshot = {oid: repo.objects.get(oid) for oid in all_oids(repo)}
+        if rng.random() < 0.5:
+            repo.objects.repack()
+        assert {oid: repo.objects.get(oid) for oid in all_oids(repo)} == snapshot
+        for c in commits:
+            assert repo.resolve(c[:10]) == c
+    # final full compaction, checked from a fresh instance
+    final = {oid: repo.objects.get(oid) for oid in all_oids(repo)}
+    repo.objects.repack()
+    repo2 = Repository(repo.root, fs=FS(NULL_FS))
+    assert {oid: repo2.objects.get(oid) for oid in all_oids(repo2)} == final
+    for c in commits:
+        assert repo2.resolve(c[:10]) == c
+
+
+def test_resolve_prefix_consults_pack_index(repo):
+    head = repo.head_commit()
+    assert repo.resolve(head[:8]) == head
+    repo.objects.repack()
+    # the shard file is gone; only the in-memory pack index can answer
+    assert not os.path.exists(repo.objects._path(head))
+    assert repo.resolve(head[:8]) == head
+    repo2 = Repository(repo.root, fs=FS(NULL_FS))
+    assert repo2.resolve(head[:8]) == head
+    with pytest.raises(ValueError):
+        repo2.resolve("ff")  # too short for a prefix search
+    with pytest.raises(ValueError):
+        repo2.resolve("0000")  # no match
+
+
+def test_checkout_from_pack(repo, tmp_path):
+    head = repo.head_commit()
+    repo.objects.repack()
+    for rel in ("a.txt", "dir/b.txt", "dir/sub/c.txt"):
+        os.unlink(os.path.join(repo.root, rel))
+    repo.checkout(head)
+    with open(os.path.join(repo.root, "dir/b.txt")) as f:
+        assert f.read() == "beta 2"
+
+
+def test_put_after_repack_writes_no_loose_duplicate(repo):
+    repo.objects.repack()
+    repo2 = Repository(repo.root, fs=FS(NULL_FS))  # cold known-oid set
+    oid = repo2.objects.put_blob(b"alpha")  # content already packed
+    assert repo2.objects.get_blob(oid) == b"alpha"
+    assert not os.path.exists(repo2.objects._path(oid))
+    assert loose_files(repo2.objects) == []
+
+
+def test_consolidation_bounds_the_pack_directory(tmp_path):
+    """Pack count (and so the pack dir's entry count) stays bounded across
+    arbitrarily many repacks — the flat-forever claim's second half."""
+    repo = Repository.init(str(tmp_path / "repo"))
+    commits = []
+    for i in range(8):
+        write(repo.root, f"f{i}.txt", f"round {i}")
+        commits.append(repo.save(message=f"round {i}"))
+        repo.objects.repack(max_packs=3)
+    pack_dir = os.path.join(repo.objects.root, "pack")
+    packs_on_disk = [f for f in os.listdir(pack_dir) if f.endswith(".pack")]
+    assert len(packs_on_disk) <= 3
+    assert loose_files(repo.objects) == []
+    # nothing lost through the folds: fresh instance reads all of history
+    repo2 = Repository(repo.root, fs=FS(NULL_FS))
+    for i, c in enumerate(commits):
+        assert repo2.resolve(c[:10]) == c
+        assert repo2.objects.get_blob(
+            repo2.tree_of(c)[f"f{i}.txt"]["oid"]
+        ) == f"round {i}".encode()
+
+
+# ------------------------------------------------------------- crash safety
+def test_crash_between_pack_publish_and_unlink_loses_nothing(repo):
+    oids = all_oids(repo)
+    before = {oid: repo.objects.get(oid) for oid in oids}
+    # the post-crash state: pack + index published, loose copies never removed
+    repo.objects.repack(delete_loose=False)
+    assert len(loose_files(repo.objects)) == len(oids)  # duplicates, not loss
+    repo2 = Repository(repo.root, fs=FS(NULL_FS))
+    assert {oid: repo2.objects.get(oid) for oid in oids} == before
+    # the next repack sweeps the duplicates without writing a second copy
+    stats = repo2.objects.repack()
+    assert stats["objects_packed"] == 0
+    assert stats["loose_unlinked"] == len(oids)
+    assert loose_files(repo2.objects) == []
+    repo3 = Repository(repo.root, fs=FS(NULL_FS))
+    assert {oid: repo3.objects.get(oid) for oid in oids} == before
+
+
+def test_crash_mid_unlink_storm_loses_nothing(repo, monkeypatch):
+    oids = all_oids(repo)
+    before = {oid: repo.objects.get(oid) for oid in oids}
+    real_unlink = FS.unlink
+    calls = {"n": 0}
+
+    def dying_unlink(self, path):
+        calls["n"] += 1
+        if calls["n"] > 3:
+            raise RuntimeError("simulated crash mid-repack")
+        real_unlink(self, path)
+
+    monkeypatch.setattr(FS, "unlink", dying_unlink)
+    with pytest.raises(RuntimeError):
+        repo.objects.repack()
+    monkeypatch.setattr(FS, "unlink", real_unlink)
+    # some loose files gone, some left — but the pack was published first,
+    # so a fresh process sees every object
+    repo2 = Repository(repo.root, fs=FS(NULL_FS))
+    assert {oid: repo2.objects.get(oid) for oid in oids} == before
+    repo2.objects.repack()
+    assert loose_files(repo2.objects) == []
+
+
+def test_crash_before_index_publish_leaves_loose_untouched(repo, monkeypatch):
+    oids = all_oids(repo)
+    before = {oid: repo.objects.get(oid) for oid in oids}
+    n_loose = len(loose_files(repo.objects))
+
+    def dying_rename(self, src, dst):
+        raise RuntimeError("simulated crash before index publish")
+
+    monkeypatch.setattr(FS, "rename", dying_rename)
+    with pytest.raises(RuntimeError):
+        repo.objects.repack()
+    monkeypatch.undo()
+    # no index published -> nothing was unlinked; the stray .pack is garbage
+    assert len(loose_files(repo.objects)) == n_loose
+    pack_dir = os.path.join(repo.objects.root, "pack")
+    assert not any(f.endswith(".idx") for f in os.listdir(pack_dir))
+    repo2 = Repository(repo.root, fs=FS(NULL_FS))
+    assert {oid: repo2.objects.get(oid) for oid in oids} == before
+    repo2.objects.repack()  # retry succeeds
+    assert loose_files(repo2.objects) == []
+    assert {oid: repo2.objects.get(oid) for oid in oids} == before
+
+
+def test_get_retries_through_pack_index_after_external_repack(repo):
+    """A reader whose pack index predates another process's repack must not
+    see FileNotFoundError for an object that moved into a pack."""
+    head = repo.head_commit()
+    reader = ObjectStore(repo.objects.root, FS(NULL_FS))
+    assert reader.has(head)  # loads the (still empty) pack index
+    repo.objects.repack()  # "another process" compacts + unlinks
+    assert reader.get(head) == repo.objects.get(head)  # stale index -> retry
+    with pytest.raises(FileNotFoundError):
+        reader.get("f" * 64)  # truly absent objects still raise
+
+
+def test_get_retries_after_external_consolidation(repo):
+    """A reader's stale index may point at a pack another process folded
+    away — the retry must land in the consolidated pack, not crash."""
+    repo.objects.repack()  # pack A
+    head = repo.head_commit()
+    reader = ObjectStore(repo.objects.root, FS(NULL_FS))
+    expected = reader.get(head)  # index now pins pack A
+    write(repo.root, "later.txt", "post-pack change")
+    repo.save(message="later")
+    repo.objects.repack(max_packs=1)  # folds A into a new pack, drops A
+    assert reader.get(head) == expected  # stale pack path -> reload -> hit
+
+
+def test_reload_prunes_packs_dropped_by_external_consolidation(repo):
+    """A force reload mirrors disk exactly — packs another process folded
+    away vanish from the index, so the next local repack can't stat or
+    fold ghosts."""
+    repo.objects.repack()  # pack A
+    head = repo.head_commit()
+    reader = ObjectStore(repo.objects.root, FS(NULL_FS))
+    reader.get(head)  # index now knows pack A
+    write(repo.root, "extra.txt", "more history")
+    repo.save(message="extra")
+    repo.objects.repack(max_packs=1)  # folds A into a new pack, drops A
+    reader.packs.load(reader.fs, force=True)
+    assert set(reader.packs.pack_ids(reader.fs)) == set(
+        repo.objects.packs.pack_ids(repo.fs)
+    )
+    reader.repack()  # must not crash on ghost pack sizes
+    assert reader.get(head) == repo.objects.get(head)
+
+
+def test_repack_sweeps_aged_crash_garbage_only(repo):
+    import time as _time
+
+    pack_dir = os.path.join(repo.objects.root, "pack")
+    os.makedirs(pack_dir, exist_ok=True)
+    write(repo.objects.root, "pack/incoming-999-dead.tmp", b"half a pack")
+    write(repo.objects.root, "pack/pack-deadbeef.pack", b"unindexed data")
+    old = _time.time() - 172800  # 2 days: well past the in-flight age gate
+    for n in ("incoming-999-dead.tmp", "pack-deadbeef.pack"):
+        os.utime(os.path.join(pack_dir, n), (old, old))
+    # a FRESH unindexed data file may be another process's in-flight pack
+    # in its rename-before-index-publish window: it must survive the sweep
+    write(repo.objects.root, "pack/pack-0fresh0.pack", b"in-flight data")
+    stats = repo.objects.repack()
+    assert stats["garbage_swept"] == 2
+    on_disk = os.listdir(pack_dir)
+    assert "incoming-999-dead.tmp" not in on_disk
+    assert "pack-deadbeef.pack" not in on_disk
+    assert "pack-0fresh0.pack" in on_disk
+    assert repo.objects.get_commit(repo.head_commit())  # store still intact
+
+
+# --------------------------------------------------- auto-repack + pressure
+def test_finish_triggers_threshold_auto_repack(tmp_path):
+    repo = Repository.init(str(tmp_path / "repo"))
+    cluster = LocalSlurmCluster(max_workers=2, sbatch_cost_s=0.0, sacct_cost_s=0.0)
+    sched = SlurmScheduler(repo, cluster, cli_startup_s=0.0,
+                           auto_repack_threshold=0)
+    write(repo.root, "job/run.sh", "echo out > r.txt\n")
+    repo.save(message="script")
+    sched.submit(RunSpec(script="run.sh", outputs=["job/r.txt"], pwd="job"))
+    cluster.wait(timeout=60)
+    res = sched.finish()
+    cluster.shutdown()
+    assert res and res[0].state == COMPLETED and res[0].commit
+    # the finish batch exceeded the (zero) threshold -> everything packed
+    assert loose_files(repo.objects) == []
+    assert repo.objects.packs.n_packed(repo.fs) > 0
+    repo2 = Repository(repo.root, fs=FS(NULL_FS))
+    assert repo2.tree_of(res[0].commit)["job/r.txt"]["t"] == "blob"
+
+
+def test_auto_repack_disabled_by_default(tmp_path):
+    repo = Repository.init(str(tmp_path / "repo"))
+    cluster = LocalSlurmCluster(max_workers=2, sbatch_cost_s=0.0, sacct_cost_s=0.0)
+    sched = SlurmScheduler(repo, cluster, cli_startup_s=0.0)
+    write(repo.root, "job/run.sh", "echo out > r.txt\n")
+    repo.save(message="script")
+    sched.submit(RunSpec(script="run.sh", outputs=["job/r.txt"], pwd="job"))
+    cluster.wait(timeout=60)
+    sched.finish()
+    cluster.shutdown()
+    assert loose_files(repo.objects) != []  # nothing was compacted
+
+
+def test_session_gc_and_default_threshold(tmp_path):
+    with repro.open(str(tmp_path / "repo"), create=True, profile=GPFS) as s:
+        # GPFS has a degradation threshold -> sessions arm auto-repack
+        assert s.auto_repack_threshold == GPFS.degrade_threshold
+        write(s.repo.root, "x.txt", "hello")
+        s.save(message="x")
+        stats = s.gc()
+        assert stats["objects_packed"] > 0
+        assert loose_files(s.repo.objects) == []
+    with repro.open(str(tmp_path / "repo2"), create=True) as s:
+        assert s.auto_repack_threshold is None  # NULL_FS never degrades
+
+
+def test_phantom_entry_purge_charges_the_storm(tmp_path):
+    fs = FS(GPFS, SimClock())
+    shard = str(tmp_path / "objects" / "aa")
+    fs.preload_dir_entries(shard, 500)
+    t0, ops0 = fs.clock.snapshot(), fs.clock.meta_ops
+    purged = fs.purge_phantom_entries(shard)
+    assert purged == 500
+    assert fs.clock.meta_ops - ops0 == 500
+    # 500 unlinks at base cost + the degradation sum for entries 193..500
+    expected = 500 * GPFS.meta_op_s + GPFS.dir_degrade * sum(
+        k - GPFS.degrade_threshold for k in range(GPFS.degrade_threshold + 1, 501)
+    )
+    assert fs.clock.snapshot() - t0 == pytest.approx(expected)
+    assert fs.dir_entry_count(shard) == 0
+    assert fs.purge_phantom_entries(shard) == 0  # idempotent
+
+
+def test_repack_drops_modeled_shard_pressure(tmp_path):
+    clock = SimClock()
+    repo = Repository.init(str(tmp_path / "repo"), profile=GPFS, clock=clock)
+    write(repo.root, "f.txt", "content")
+    repo.save(message="f")
+    shard = os.path.join(repo.objects.root, "00")
+    repo.fs.preload_dir_entries(shard, 1000)
+    assert repo.objects.loose_pressure() >= 1000
+    repo.objects.repack()
+    assert repo.objects.loose_pressure() <= GPFS.degrade_threshold
+
+
+# ------------------------------------------------------- satellite: sacct
+def test_sacct_many_charges_one_poll(tmp_path):
+    clock = SimClock()
+    cluster = LocalSlurmCluster(max_workers=2, clock=clock, sacct_cost_s=0.02)
+    write(str(tmp_path), "run.sh", "true\n")
+    ids = [cluster.sbatch("run.sh", workdir=str(tmp_path)) for _ in range(5)]
+    cluster.wait(timeout=60)
+    t0 = clock.snapshot()
+    states = cluster.sacct_many(ids)
+    assert clock.snapshot() - t0 == pytest.approx(0.02)  # ONE charge for 5 jobs
+    assert states == {j: COMPLETED for j in ids}
+    assert cluster.sacct_many([]) == {}
+    assert clock.snapshot() - t0 == pytest.approx(0.02)  # empty poll is free
+    t1 = clock.snapshot()
+    for j in ids:
+        assert cluster.sacct(j) == states[j]
+    assert clock.snapshot() - t1 == pytest.approx(5 * 0.02)  # per-job: 5 charges
+    cluster.shutdown()
+
+
+def test_scheduler_polls_are_batched(tmp_path, monkeypatch):
+    repo = Repository.init(str(tmp_path / "repo"))
+    cluster = LocalSlurmCluster(max_workers=2, sbatch_cost_s=0.0, sacct_cost_s=0.0)
+    sched = SlurmScheduler(repo, cluster, cli_startup_s=0.0)
+    specs = []
+    for j in range(3):
+        write(repo.root, f"job{j}/run.sh", "echo out > r.txt\n")
+        specs.append(RunSpec(script="run.sh", outputs=[f"job{j}/r.txt"],
+                             pwd=f"job{j}"))
+    repo.save(message="scripts")
+    sched.submit_many(specs)
+    cluster.wait(timeout=60)
+    per_job_calls = {"n": 0}
+    monkeypatch.setattr(
+        cluster, "sacct",
+        lambda jid: per_job_calls.__setitem__("n", per_job_calls["n"] + 1),
+    )
+    assert len(sched.list_open_jobs()) == 3
+    sched.find_stragglers()
+    res = sched.finish()
+    cluster.shutdown()
+    assert len(res) == 3 and all(r.commit for r in res)
+    assert per_job_calls["n"] == 0  # every poll went through sacct_many
+
+
+# ------------------------------------------------- satellite: blob cache
+def test_put_blob_primes_read_cache(tmp_path):
+    clock = SimClock()
+    store = ObjectStore(str(tmp_path / "objects"), FS(GPFS, clock))
+    oid = store.put_blob(b"fresh blob payload")
+    ops = clock.meta_ops
+    assert store.get_blob(oid) == b"fresh blob payload"
+    assert clock.meta_ops == ops  # served from the cache primed by put_blob
+    # a cold read populates the cache too
+    store2 = ObjectStore(str(tmp_path / "objects"), FS(GPFS, clock))
+    store2.get_blob(oid)
+    ops = clock.meta_ops
+    store2.get_blob(oid)
+    assert clock.meta_ops == ops
+
+
+def test_blob_cache_disabled_and_bounded(tmp_path):
+    clock = SimClock()
+    store = ObjectStore(str(tmp_path / "objects"), FS(GPFS, clock))
+    oid = store.put_blob(b"payload")
+    store.disable_caches()
+    ops = clock.meta_ops
+    assert store.get_blob(oid) == b"payload"
+    assert clock.meta_ops > ops  # escape hatch: every read hits the FS
+
+    small = ObjectStore(str(tmp_path / "objects2"), FS(NULL_FS),
+                        blob_cache_bytes=64)
+    oids = [small.put_blob(bytes([i]) * 32) for i in range(4)]
+    assert small._blob_cache_used <= 64
+    assert len(small._blob_cache) <= 2
+    for oid in oids:  # eviction never breaks reads
+        assert small.get_blob(oid) == small.get_blob(oid)
+
+
+# ------------------------------------------------- satellite: annex keys
+def test_annex_keys_goes_through_the_cost_model(tmp_path):
+    clock = SimClock()
+    fs = FS(GPFS, clock)
+    store = AnnexStore(str(tmp_path / "annex"), fs)
+    from repro.core.hashing import annex_key_for_bytes
+
+    keys = set()
+    for i in range(3):
+        data = bytes([i]) * 100
+        key = annex_key_for_bytes(data)
+        store.put_bytes(key, data)
+        keys.add(key)
+    ops = clock.meta_ops
+    assert set(store.keys()) == keys
+    assert clock.meta_ops > ops  # enumeration is charged, not free
