@@ -1,0 +1,113 @@
+"""Bytes-heavy finish: the data plane under the §9 concurrent-transfer model.
+
+Every benchmark so far was metadata-dominated; this one makes *bytes*
+dominate (checkpoints, simulation dumps — the workloads SciDataFlow-style
+tools target): each job leaves ``files_per_job`` outputs of ``mib_per_file``
+MiB in its --alt-dir staging tree, and one ``slurm-finish`` call commits the
+whole batch. Three cases, all on the ``GPFS_STRIPED`` profile (aggregate
+bandwidth = 8x one stream — parallelism is measurable, serial is honest):
+
+  ingest_seed       seed-era data plane (``data_plane="legacy"``): deep-copy
+                    every output back into the worktree (read + write), then
+                    stage it (read whole + annex write) — every byte read
+                    twice and written twice, strictly serially.
+  ingest_fused      single-pass pipeline: hash-while-write straight from the
+                    alt tree into the annex, worktree copy by rename — every
+                    byte read once and written once, still serial.
+  ingest_pipelined  same pipeline fanned across ``ingest_workers`` threads:
+                    overlapping §9 stream sessions split the profile's
+                    aggregate bandwidth, so the batch completes in ~an
+                    aggregate-saturated makespan instead of a sum of
+                    per-stream times.
+
+Rows land in ``BENCH_ingest.json``; ``python -m benchmarks.run
+--check-ingest`` gates (a) fused ``bytes_read`` ~2x below seed at equal
+output volume and (b) pipelined sim time < 0.5x the fused-serial time.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core.fsio import GPFS_STRIPED
+from repro.core.spec import RunSpec
+
+from .common import cleanup, make_env, timer
+
+TRIVIAL_JOB = "#!/bin/bash\ntrue\n"
+
+CASES = (
+    # (case, data_plane, ingest_workers)
+    ("ingest_seed", "legacy", 0),
+    ("ingest_fused", "fused", 0),
+    ("ingest_pipelined", "fused", 8),
+)
+
+
+def _write_output(path: str, header: bytes, size: int) -> None:
+    """One synthetic job output: unique header + a hole of zeros (sparse on
+    disk, but every modeled byte is really read/hashed/written by ingest)."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(header)
+        f.truncate(size)
+
+
+def run(n_jobs: int = 8, files_per_job: int = 8, mib_per_file: int = 64,
+        cases=None) -> list[dict]:
+    size = mib_per_file << 20
+    total_bytes = n_jobs * files_per_job * size
+    rows = []
+    for case, data_plane, workers in CASES:
+        if cases is not None and case not in cases:
+            continue
+        root, repo, cluster, sched, clock = make_env(
+            GPFS_STRIPED, max_workers=n_jobs, ingest_workers=workers
+        )
+        alt_root = os.path.join(root, "pfs_stage")
+        specs = []
+        for j in range(n_jobs):
+            d = os.path.join(repo.root, "jobs", str(j))
+            os.makedirs(d, exist_ok=True)
+            with open(os.path.join(d, "slurm.sh"), "w") as f:
+                f.write(TRIVIAL_JOB)
+            specs.append(RunSpec(script="slurm.sh", outputs=[f"jobs/{j}"],
+                                 pwd=f"jobs/{j}", alt_dir=alt_root))
+        ids = sched.submit_many(specs)
+        cluster.wait(timeout=600)
+        # the jobs' real outputs land in the alt staging tree (plain writes:
+        # producing them is the job's cost, not the data plane's)
+        for j in range(n_jobs):
+            for i in range(files_per_job):
+                _write_output(
+                    os.path.join(alt_root, "jobs", str(j), f"out_{i}.bin"),
+                    b"job %d file %d\n" % (j, i), size,
+                )
+        sim0, read0, written0 = clock.snapshot(), clock.bytes_read, clock.bytes_written
+        with timer() as t:
+            results = sched.finish(data_plane=data_plane)
+        committed = [r for r in results if r.commit]
+        assert len(committed) == n_jobs, results
+        sim_s = clock.snapshot() - sim0
+        rows.append({
+            "bench": "ingest",
+            "case": case,
+            "data_plane": data_plane,
+            "ingest_workers": workers,
+            "n_jobs": n_jobs,
+            "files_per_job": files_per_job,
+            "mib_per_file": mib_per_file,
+            "output_bytes": total_bytes,
+            "sim_s_total": sim_s,
+            "sim_s_per_job": sim_s / n_jobs,
+            "bytes_read": clock.bytes_read - read0,
+            "bytes_written": clock.bytes_written - written0,
+            "wall_s_total": t["s"],
+        })
+        cluster.shutdown()
+        cleanup(root)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -28,12 +28,14 @@ bzip2 -kf out.txt
 
 
 def make_env(profile: FSProfile, n_extra_outputs: int = 0, max_workers: int = 8,
-             auto_repack_threshold: int | None = None):
+             auto_repack_threshold: int | None = None,
+             ingest_workers: int = 0):
     """Repository + cluster + scheduler on the given FS profile.
 
     ``auto_repack_threshold`` defaults to None (auto-repack OFF) so the
     aging-trajectory cases keep the accumulated directory pressure they are
-    measuring; the packed cases enable it explicitly."""
+    measuring; the packed cases enable it explicitly. ``ingest_workers``
+    sets finish()'s data-plane fan-out width (0 = serial)."""
     root = tempfile.mkdtemp(prefix=f"bench_{profile.name}_")
     clock = SimClock()
     repo = Repository.init(os.path.join(root, "repo"), profile=profile,
@@ -42,7 +44,8 @@ def make_env(profile: FSProfile, n_extra_outputs: int = 0, max_workers: int = 8,
         max_workers=max_workers, clock=clock, sbatch_cost_s=0.05, sacct_cost_s=0.02
     )
     sched = SlurmScheduler(repo, cluster,
-                           auto_repack_threshold=auto_repack_threshold)
+                           auto_repack_threshold=auto_repack_threshold,
+                           ingest_workers=ingest_workers)
     return root, repo, cluster, sched, clock
 
 

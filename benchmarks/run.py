@@ -22,6 +22,15 @@ benchmark (per-job ``submit`` vs one ``submit_many`` for 64 jobs), writes
 and fails if the packed per-job finish cost at 200k files exceeds 1.1x the
 1k-file cost — i.e. if compaction stops flattening the repository-aging
 slope the incremental engine still had.
+
+``python -m benchmarks.run --check-ingest`` runs the bytes-heavy data-plane
+benchmark (8 jobs x 8x64 MiB --alt-dir outputs, one finish batch), writes
+``BENCH_ingest.json``, and fails unless (a) single-pass ingest charges
+<= 0.6x the seed path's ``bytes_read`` at equal output volume and (b) the
+pipelined concurrent finish completes in < 0.5x the fused-serial sim time.
+
+``python -m benchmarks.run --check-all`` runs all four gates in one
+invocation and exits non-zero if any failed.
 """
 from __future__ import annotations
 
@@ -32,6 +41,7 @@ import sys
 BENCH_FINISH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_finish.json")
 BENCH_SCHEDULE_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_schedule.json")
 BENCH_PACK_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_pack.json")
+BENCH_INGEST_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_ingest.json")
 
 
 def _write_rows_json(
@@ -105,6 +115,66 @@ def _pack_claims(rows: list[dict]) -> list[tuple[str, bool, str]]:
             f"{base:.2f}s .. {worst:.2f}s over {sizes}",
         ))
     return claims
+
+
+def _write_ingest_json(rows: list[dict]) -> None:
+    out_rows = [
+        {k: r[k] for k in (
+            "case", "data_plane", "ingest_workers", "n_jobs", "files_per_job",
+            "mib_per_file", "output_bytes", "sim_s_total", "sim_s_per_job",
+            "bytes_read", "bytes_written", "wall_s_total",
+        )}
+        for r in rows
+        if r["bench"] == "ingest"
+    ]
+    path = os.path.normpath(BENCH_INGEST_JSON)
+    with open(path, "w") as f:
+        json.dump(out_rows, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path} ({len(out_rows)} rows)", file=sys.stderr)
+
+
+def _ingest_claims(rows: list[dict]) -> list[tuple[str, bool, str]]:
+    ing = {r["case"]: r for r in rows if r["bench"] == "ingest"}
+    claims = []
+    if "ingest_seed" in ing and "ingest_fused" in ing:
+        seed, fused = ing["ingest_seed"], ing["ingest_fused"]
+        claims.append((
+            "data plane: single-pass ingest charges ~2x less bytes_read than"
+            " the seed path at equal output volume",
+            fused["bytes_read"] <= 0.6 * seed["bytes_read"],
+            f"seed={seed['bytes_read'] / 2**30:.2f}GiB"
+            f" fused={fused['bytes_read'] / 2**30:.2f}GiB"
+            f" ({fused['bytes_read'] / seed['bytes_read']:.2f}x),"
+            f" writes {seed['bytes_written'] / 2**30:.2f}->"
+            f"{fused['bytes_written'] / 2**30:.2f}GiB",
+        ))
+    if "ingest_fused" in ing and "ingest_pipelined" in ing:
+        ser, par = ing["ingest_fused"], ing["ingest_pipelined"]
+        claims.append((
+            f"data plane: pipelined finish ({par['ingest_workers']} streams)"
+            " < 0.5x the serial sim time at aggregate-bandwidth saturation",
+            par["sim_s_total"] < 0.5 * ser["sim_s_total"],
+            f"serial={ser['sim_s_total']:.2f}s"
+            f" pipelined={par['sim_s_total']:.2f}s"
+            f" ({par['sim_s_total'] / ser['sim_s_total']:.2f}x)",
+        ))
+    return claims
+
+
+def check_ingest() -> None:
+    """Bytes-heavy data-plane gate: single-pass ingest must ~halve charged
+    reads, and the pipelined concurrent finish must beat 0.5x serial."""
+    from . import bench_ingest
+
+    rows = bench_ingest.run()
+    _write_ingest_json(rows)
+    ok = True
+    for name, passed, detail in _ingest_claims(rows):
+        ok &= passed
+        print(f"# [{'PASS' if passed else 'FAIL'}] {name}: {detail}")
+    if not ok:
+        raise SystemExit(1)
 
 
 def _write_schedule_json(rows: list[dict]) -> None:
@@ -223,7 +293,10 @@ def check_schedule() -> None:
 
 
 def main() -> None:
-    from . import bench_conflicts, bench_finish, bench_octopus, bench_schedule
+    from . import (
+        bench_conflicts, bench_finish, bench_ingest, bench_octopus,
+        bench_schedule,
+    )
 
     rows = []
     print("# running bench_schedule (paper Fig. 7/8) ...", file=sys.stderr)
@@ -232,6 +305,8 @@ def main() -> None:
     rows += bench_schedule.run_batched()
     print("# running bench_finish (paper Fig. 9/10) ...", file=sys.stderr)
     rows += bench_finish.run()
+    print("# running bench_ingest (data plane, §9) ...", file=sys.stderr)
+    rows += bench_ingest.run()
     print("# running bench_conflicts (§5.5) ...", file=sys.stderr)
     rows += bench_conflicts.run()
     print("# running bench_octopus (Fig. 6 / A2) ...", file=sys.stderr)
@@ -240,6 +315,7 @@ def main() -> None:
     _write_finish_json(rows)
     _write_schedule_json(rows)
     _write_pack_json(rows)
+    _write_ingest_json(rows)
 
     print("name,us_per_call,derived")
     claims = []
@@ -258,6 +334,10 @@ def main() -> None:
             name = f"finish/{r['case']}/{r['repo_files']}files"
             us = r["wall_us_per_job"]
             derived = f"sim={r['sim_s_per_job']:.3f}s_per_job"
+        elif r["bench"] == "ingest":
+            name = f"ingest/{r['case']}/{r['n_jobs']}jobs"
+            us = r["wall_s_total"] * 1e6 / r["n_jobs"]
+            derived = f"sim={r['sim_s_total']:.3f}s_total"
         elif r["bench"] == "conflict_check":
             name = f"conflicts/{r['scheduled_jobs']}jobs"
             us = r["wall_us_per_check"]
@@ -285,6 +365,7 @@ def main() -> None:
     claims += _finish_claims(fin)
     claims += _pack_claims(rows)
     claims += _schedule_batch_claims(rows)
+    claims += _ingest_claims(rows)
     conf = {r["scheduled_jobs"]: r for r in rows if r["bench"] == "conflict_check"}
     claims.append(("§5.5: conflict check ~O(1) in scheduled jobs",
                    conf[50_000]["wall_us_per_check"] < 20 * conf[100]["wall_us_per_check"],
@@ -302,15 +383,36 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    args = sys.argv[1:]
+    if "--check-all" in args:
+        # all four gates in one invocation; report every failure, then exit
+        failed = []
+        for name, gate in (
+            ("finish", check_finish), ("schedule", check_schedule),
+            ("pack", check_pack), ("ingest", check_ingest),
+        ):
+            print(f"# --check-{name} ...", file=sys.stderr)
+            try:
+                gate()
+            except SystemExit as e:
+                if e.code:
+                    failed.append(name)
+        if failed:
+            print(f"# FAILED gates: {', '.join(failed)}", file=sys.stderr)
+            raise SystemExit(1)
+        raise SystemExit(0)
     ran_gate = False
-    if "--check-finish" in sys.argv[1:]:
+    if "--check-finish" in args:
         check_finish()
         ran_gate = True
-    if "--check-schedule" in sys.argv[1:]:
+    if "--check-schedule" in args:
         check_schedule()
         ran_gate = True
-    if "--check-pack" in sys.argv[1:]:
+    if "--check-pack" in args:
         check_pack()
+        ran_gate = True
+    if "--check-ingest" in args:
+        check_ingest()
         ran_gate = True
     if not ran_gate:
         main()

@@ -9,16 +9,38 @@ but not *present* — ``annex_get`` fetches them from any store that has them,
 
 Pointer files are what a checkout writes when content is absent:
     #%REPRO-ANNEX%# SHA256-s<size>--<hex>\n
+
+Data plane (DESIGN.md §9)
+-------------------------
+``ingest_file`` is the bytes-heavy write path: it hashes the source *while*
+writing the annex object through ``FS`` — one charged read pass + one charged
+write pass instead of the hash-then-copy two-read protocol — into a unique
+tmp name that is atomically renamed onto the key path once the hash (hence
+the key) is known. The rename is idempotent on collision, so two finishers
+ingesting identical content concurrently both succeed and exactly one object
+remains (the TOCTOU fix ``put_bytes``/``put_file`` share via ``_commit``).
+
+Every store keeps a *known-key set* mirroring the object store's known-oid
+set: once a key has been written or observed present, later ``put``/``has``
+calls are answered in memory with no ``exists`` probe against a possibly
+degraded shard directory, and re-ingest of duplicate content short-circuits
+before moving bytes. ``drop`` discards from the set; a *foreign* process
+dropping content this store has observed can make non-``fresh`` probes
+stale, which is why numcopies-critical checks pass ``fresh=True``.
 """
 from __future__ import annotations
 
+import hashlib
 import os
+import threading
+import uuid
 
 from .fsio import FS
-from .hashing import parse_annex_key, verify_annex_key
+from .hashing import make_annex_key, parse_annex_key, verify_annex_key
 
 POINTER_PREFIX = b"#%REPRO-ANNEX%#"
 _POINTER_MAX = 256
+KNOWN_KEY_CAP = 1 << 20  # bound the probe-skip set for long-lived processes
 
 
 def make_pointer(key: str) -> bytes:
@@ -48,42 +70,150 @@ class AnnexStore:
         self.root = root
         self.fs = fs
         self.name = name
+        self._known_lock = threading.Lock()
+        self._known: set[str] = set()
 
     def _path(self, key: str) -> str:
         _, hx = parse_annex_key(key)
         return os.path.join(self.root, hx[:3], key)
 
-    def has(self, key: str) -> bool:
-        return self.fs.exists(self._path(key))
+    # -- known-key set --------------------------------------------------
+    def _mark_known(self, key: str) -> None:
+        with self._known_lock:
+            if len(self._known) >= KNOWN_KEY_CAP:
+                # reset rather than evict: the set only skips probes, so
+                # dropping it costs one exists per key, never correctness
+                self._known.clear()
+            self._known.add(key)
+
+    def _is_known(self, key: str) -> bool:
+        with self._known_lock:
+            return key in self._known
+
+    def has(self, key: str, fresh: bool = False) -> bool:
+        """Presence probe. ``fresh=True`` bypasses the known-key set and
+        asks the filesystem — required wherever a stale positive would be
+        dangerous (numcopies checks before a drop)."""
+        if not fresh and self._is_known(key):
+            return True
+        if self.fs.exists(self._path(key)):
+            self._mark_known(key)
+            return True
+        return False
+
+    def has_many(self, keys, fresh: bool = False) -> set[str]:
+        """Presence of a batch of keys by per-key probes (known-key set
+        first), NOT a ``keys()`` directory sweep — probing a handful of
+        keys must not charge a listdir of every shard."""
+        present = set()
+        for key in keys:
+            if self.has(key, fresh=fresh):
+                present.add(key)
+        return present
+
+    # -- writes ---------------------------------------------------------
+    def _tmp_path(self) -> str:
+        return os.path.join(self.root, f"tmp-{uuid.uuid4().hex}")
+
+    def _commit(self, tmp: str, key: str) -> None:
+        """Atomically publish a fully written tmp file as ``key``.
+        ``os.replace`` semantics make the collision case (another finisher
+        published the same content first) idempotent: last writer wins with
+        byte-identical data, no window where the key path is partial."""
+        self.fs.rename(tmp, self._path(key))
+        self._mark_known(key)
 
     def put_bytes(self, key: str, data: bytes) -> None:
         if not verify_annex_key(key, data):
             raise ValueError(f"content does not match key {key}")
-        path = self._path(key)
-        if not self.fs.exists(path):
-            self.fs.write_bytes(path, data)
+        if self.has(key):
+            return
+        tmp = self._tmp_path()
+        try:
+            self.fs.write_bytes(tmp, data)
+            self._commit(tmp, key)
+        except BaseException:
+            self.fs.unlink(tmp)
+            raise
+
+    def _hash_while_write(self, src: str, chunk_size: int) -> tuple[str, str, int]:
+        """The single-pass pump shared by ``put_file``/``ingest_file``:
+        stream ``src`` through a sha256 into a fresh tmp file — one charged
+        read + one charged write, both held open as §9 stream sessions so
+        concurrent ingests contend honestly. Returns (tmp path, hex digest,
+        size); the tmp is unlinked on any failure."""
+        h = hashlib.sha256()
+        tmp = self._tmp_path()
+        try:
+            with self.fs.open_read(src, chunk_size) as chunks:
+
+                def hashing():
+                    for c in chunks:
+                        h.update(c)
+                        yield c
+
+                size = self.fs.write_chunks(tmp, hashing())
+        except BaseException:
+            self.fs.unlink(tmp)
+            raise
+        return tmp, h.hexdigest(), size
 
     def put_file(self, key: str, src: str) -> None:
-        path = self._path(key)
-        if not self.fs.exists(path):
-            self.fs.copy_file(src, path)
+        """Copy a file in as ``key``, hashing while copying (single pass)
+        and verifying the content actually matches the key before the tmp
+        is published — a corrupted source never lands on the key path."""
+        if self.has(key):
+            return
+        tmp, hx, size = self._hash_while_write(src, 1 << 20)
+        try:
+            if make_annex_key(hx, size) != key:
+                raise IOError(f"content of {src} does not match key {key}")
+            self._commit(tmp, key)
+        except BaseException:
+            self.fs.unlink(tmp)
+            raise
 
+    def ingest_file(self, src: str, chunk_size: int = 1 << 20) -> str:
+        """Single-pass ingest: hash ``src`` while writing the annex object.
+        The object is written to a tmp name (the key isn't known until the
+        hash is) and renamed onto the key path; duplicate content (key
+        already known or present) discards the tmp instead, leaving exactly
+        one object. Returns the key."""
+        tmp, hx, size = self._hash_while_write(src, chunk_size)
+        key = make_annex_key(hx, size)
+        try:
+            if self.has(key):
+                # dedup short-circuit: identical content already ingested
+                self.fs.unlink(tmp)
+                return key
+            self._commit(tmp, key)
+        except BaseException:
+            self.fs.unlink(tmp)
+            raise
+        return key
+
+    # -- reads / deletion ----------------------------------------------
     def read(self, key: str) -> bytes:
         data = self.fs.read_bytes(self._path(key))
         if not verify_annex_key(key, data):
             raise IOError(f"annex corruption for {key} in store {self.name}")
+        self._mark_known(key)
         return data
 
     def copy_to(self, key: str, dst: str) -> None:
         self.fs.copy_file(self._path(key), dst)
 
     def drop(self, key: str) -> None:
+        with self._known_lock:
+            self._known.discard(key)
         self.fs.unlink(self._path(key))
 
     def keys(self) -> list[str]:
-        # enumeration goes through FS like every other store op, so annex
-        # listing is charged under the same parallel-FS cost model (one
-        # listdir per shard, degraded with the shard's entry count)
+        # full enumeration goes through FS like every other store op, so
+        # annex listing is charged under the same parallel-FS cost model
+        # (one listdir per shard, degraded with the shard's entry count).
+        # Callers that only need presence of specific keys must use
+        # ``has_many`` instead — it probes per key and never sweeps.
         out = []
         if not self.fs.isdir(self.root):
             return out

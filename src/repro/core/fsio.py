@@ -29,6 +29,30 @@ the repository has ever stored). Local file systems have ``dir_degrade == 0``.
 ``listdir`` is charged against the listed directory itself. Data transfer
 costs ``bytes / bandwidth``.
 
+Concurrent transfers (DESIGN.md §9)
+-----------------------------------
+``bytes / bandwidth`` alone cannot measure parallel data movement: N
+overlapping transfers would each be charged as if they had the device to
+themselves, so parallelism would look free and contention would be
+invisible. Transfers therefore declare themselves on the shared clock:
+every streamed operation opens a *stream session* in its direction's pool
+(read or write) for the real duration of the I/O, and each chunk moved
+while ``k`` sessions are open is charged
+
+    nbytes / min(k * stream_bw, aggregate_bw)
+
+i.e. the effective delivered bandwidth with ``k`` concurrent streams is
+``min(k * per-stream cap, aggregate)``. The per-stream cap
+(``read_stream_bw``/``write_stream_bw``) models a single client stream
+hitting a bounded number of GPFS stripes/NSDs; it defaults to the
+aggregate, so profiles that don't declare one — and every serial caller —
+are charged *identically to the flat model*. With a cap below the
+aggregate, parallel streams show real speedup up to saturation
+(``k * cap >= aggregate``) and pure contention past it. The pool is
+per-clock and per-direction: every FS sharing a ``SimClock`` contends for
+the same modeled backend, which is exactly the paper's one-filesystem-
+many-jobs scenario.
+
 The superlinear per-job finish curve of the paper then *emerges* from an
 implementation that performs O(repo files) metadata ops per commit against
 degraded directories (see ``Repository.save(engine="full")``), while the
@@ -41,20 +65,29 @@ via :meth:`FS.preload_dir_entries` (see ``benchmarks/common.py``).
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import shutil
 import threading
+from contextlib import contextmanager
 from dataclasses import dataclass, field
+
+_CHUNK = 1 << 20  # streaming quantum: charge/hash/copy granularity
 
 
 @dataclass
 class FSProfile:
     name: str
     meta_op_s: float  # base metadata-op latency (seconds)
-    read_bw: float  # bytes/second
-    write_bw: float  # bytes/second
+    read_bw: float  # bytes/second, AGGREGATE across concurrent streams
+    write_bw: float  # bytes/second, AGGREGATE across concurrent streams
     degrade_threshold: int = 0  # directory entries beyond which metadata degrades
     dir_degrade: float = 0.0  # extra seconds per metadata op per entry beyond threshold
+    # per-stream bandwidth cap (one client stream over a bounded number of
+    # stripes); None = the aggregate, i.e. a single stream saturates the
+    # device and concurrency buys nothing — the pre-§9 flat model.
+    read_stream_bw: float | None = None
+    write_stream_bw: float | None = None
 
 
 # Calibrated against the paper's evaluation cluster:
@@ -70,6 +103,21 @@ GPFS = FSProfile(
     write_bw=1.5e9,
     degrade_threshold=192,
     dir_degrade=2.2e-6,
+)
+# GPFS with striping made explicit: same aggregate bandwidth and metadata
+# behaviour as `GPFS`, but one client stream only drives 1/8 of the stripes
+# (~one NSD server's worth), so bytes-heavy work scales with concurrent
+# streams up to 8-way saturation — the profile bench_ingest measures the
+# paper's "multiple jobs concurrently on the same data repository" claim on.
+GPFS_STRIPED = FSProfile(
+    name="gpfs-striped",
+    meta_op_s=2.0e-3,
+    read_bw=2.0e9,
+    write_bw=1.5e9,
+    degrade_threshold=192,
+    dir_degrade=2.2e-6,
+    read_stream_bw=2.0e9 / 8,
+    write_stream_bw=1.5e9 / 8,
 )
 LOCAL_XFS = FSProfile(
     name="xfs-local",
@@ -96,6 +144,9 @@ class SimClock:
     bytes_read: int = 0
     bytes_written: int = 0
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    # concurrent-transfer pools (§9): number of stream sessions currently
+    # open per direction. [0] = read, [1] = write.
+    _active_streams: list = field(default_factory=lambda: [0, 0], repr=False)
 
     def charge(self, seconds: float) -> None:
         with self._lock:
@@ -109,6 +160,44 @@ class SimClock:
     def charge_xfer(self, nbytes: int, write: bool, seconds: float) -> None:
         with self._lock:
             self.total += seconds
+            if write:
+                self.bytes_written += nbytes
+            else:
+                self.bytes_read += nbytes
+
+    # -- concurrent-transfer pool (§9) ---------------------------------
+    def stream_begin(self, write: bool) -> None:
+        """Open a stream session: from now until :meth:`stream_end`, chunks
+        charged in this direction share the aggregate bandwidth with every
+        other open session on this clock."""
+        with self._lock:
+            self._active_streams[int(write)] += 1
+
+    def stream_end(self, write: bool) -> None:
+        with self._lock:
+            self._active_streams[int(write)] = max(
+                0, self._active_streams[int(write)] - 1
+            )
+
+    def active_streams(self, write: bool) -> int:
+        with self._lock:
+            return self._active_streams[int(write)]
+
+    def charge_stream_chunk(
+        self, nbytes: int, write: bool, agg_bw: float, stream_bw: float
+    ) -> None:
+        """Charge one chunk of an open stream session: with ``k`` sessions
+        open in this direction, the effective delivered bandwidth is
+        ``min(k * stream_bw, agg_bw)``, so every byte moved while k streams
+        overlap advances the clock by 1/eff — summed over all streams'
+        chunks this yields the *makespan* of the overlapping transfers, and
+        degenerates to ``nbytes / agg_bw`` for a lone serial caller with the
+        default ``stream_bw == agg_bw``."""
+        with self._lock:
+            k = max(1, self._active_streams[int(write)])
+            eff = min(agg_bw, k * stream_bw)
+            if eff != float("inf"):
+                self.total += nbytes / eff
             if write:
                 self.bytes_written += nbytes
             else:
@@ -131,6 +220,8 @@ class FS:
         self.profile = profile
         self.clock = clock or SimClock()
         self._stats_lock = threading.Lock()
+        self._mkdir_lock = threading.Lock()
+        self._rename_lock = threading.Lock()
         self.n_files = 0
         self._dir_entries: dict[str, int] = {}
 
@@ -207,10 +298,42 @@ class FS:
     def _meta(self, n: int = 1, path: str | None = None) -> None:
         self._charge_meta(n, self._dir_of(path) if path else "")
 
+    def _stream_bws(self, write: bool) -> tuple[float, float]:
+        """(aggregate bw, per-stream cap) for a direction; cap defaults to
+        the aggregate so undeclared profiles keep the flat model."""
+        p = self.profile
+        if write:
+            return p.write_bw, p.write_stream_bw or p.write_bw
+        return p.read_bw, p.read_stream_bw or p.read_bw
+
+    @contextmanager
+    def transfer_stream(self, write: bool):
+        """Stream session (§9): hold open for the real duration of a
+        transfer so overlapping sessions split the aggregate bandwidth.
+        Yields a charge function taking the chunk's byte count."""
+        agg, cap = self._stream_bws(write)
+        clock = self.clock
+
+        def charge(nbytes: int) -> None:
+            clock.charge_stream_chunk(nbytes, write, agg, cap)
+
+        clock.stream_begin(write)
+        try:
+            yield charge
+        finally:
+            clock.stream_end(write)
+
     def _xfer(self, nbytes: int, write: bool) -> None:
-        bw = self.profile.write_bw if write else self.profile.read_bw
-        seconds = nbytes / bw if bw != float("inf") else 0.0
-        self.clock.charge_xfer(nbytes, write, seconds)
+        """Single-shot transfer charge, in stream-session quanta so even
+        monolithic ops contend with (and are discounted by) overlapping
+        streams. A lone caller is charged exactly ``nbytes / bandwidth``."""
+        with self.transfer_stream(write) as charge:
+            left = nbytes
+            while True:
+                charge(min(left, _CHUNK))
+                left -= _CHUNK
+                if left <= 0:
+                    break
 
     def _track_new_file(self, path: str, existed: bool) -> None:
         if not existed:
@@ -221,22 +344,25 @@ class FS:
 
     def _makedirs_counted(self, dirpath: str) -> None:
         """makedirs that counts every implicitly created directory as an
-        entry of *its* parent."""
+        entry of *its* parent. Probe + create + count run under one lock so
+        concurrent ingest workers racing to create the same parent don't
+        double-count it."""
         if os.path.isdir(dirpath):
             return
-        created = []
-        cur = os.path.abspath(dirpath)
-        while cur and not os.path.isdir(cur):
-            created.append(cur)
-            nxt = os.path.dirname(cur)
-            if nxt == cur:
-                break
-            cur = nxt
-        os.makedirs(dirpath, exist_ok=True)
-        with self._stats_lock:
-            for d in created:
-                pd = os.path.dirname(d)
-                self._dir_entries[pd] = self._dir_entries.get(pd, 0) + 1
+        with self._mkdir_lock:
+            created = []
+            cur = os.path.abspath(dirpath)
+            while cur and not os.path.isdir(cur):
+                created.append(cur)
+                nxt = os.path.dirname(cur)
+                if nxt == cur:
+                    break
+                cur = nxt
+            os.makedirs(dirpath, exist_ok=True)
+            with self._stats_lock:
+                for d in created:
+                    pd = os.path.dirname(d)
+                    self._dir_entries[pd] = self._dir_entries.get(pd, 0) + 1
 
     def _ensure_parent(self, path: str) -> None:
         self._makedirs_counted(os.path.dirname(path) or ".")
@@ -274,18 +400,27 @@ class FS:
         """Streamed write: one open/close plus the total bytes, never
         holding more than one chunk in memory — ``write_bytes`` is the
         single-chunk special case, so the charging protocol (2 meta ops,
-        write-side transfer, new-file tracking) lives only here. Returns
-        the byte count written."""
-        existed = os.path.exists(path)
+        write-side transfer, new-file tracking) lives only here. The write
+        stream stays open (and charged per chunk) for the real duration of
+        the loop, so concurrent writers contend under the §9 model.
+        Returns the byte count written."""
         self._ensure_parent(path)
+        # claim the path atomically (probe + create + count under one
+        # lock): two workers writing the same path — e.g. put_blob of
+        # identical small content from concurrent ingest workers — must not
+        # both observe it absent and double-count the directory entry
+        with self._rename_lock:
+            existed = os.path.exists(path)
+            if not existed:
+                open(path, "wb").close()
+                self._track_new_file(path, existed)
         total = 0
-        with open(path, "wb") as f:
+        self._meta(2, path)
+        with open(path, "wb") as f, self.transfer_stream(True) as charge:
             for c in chunks:
                 f.write(c)
                 total += len(c)
-        self._meta(2, path)
-        self._xfer(total, write=True)
-        self._track_new_file(path, existed)
+                charge(len(c))
         return total
 
     def read_bytes(self, path: str) -> bytes:
@@ -294,6 +429,36 @@ class FS:
         self._meta(2, path)
         self._xfer(len(data), write=False)
         return data
+
+    @contextmanager
+    def open_read(self, path: str, chunk_size: int = _CHUNK):
+        """Chunked read stream: yields an iterator of byte chunks, charging
+        each against the read pool while the session is open — the §9
+        primitive the single-pass annex ingest is built on. Charges the
+        same 2 meta ops + size bytes a ``read_bytes`` of the file would."""
+        self._meta(2, path)
+        with open(path, "rb") as f, self.transfer_stream(False) as charge:
+
+            def chunks():
+                while True:
+                    c = f.read(chunk_size)
+                    if not c:
+                        return
+                    charge(len(c))
+                    yield c
+
+            yield chunks()
+
+    def hash_file(self, path: str, chunk_size: int = _CHUNK) -> tuple[str, int]:
+        """sha256 + size of a file, streamed through the cost model (one
+        charged read pass) — hashing is data-plane work, not free."""
+        h = hashlib.sha256()
+        size = 0
+        with self.open_read(path, chunk_size) as chunks:
+            for c in chunks:
+                h.update(c)
+                size += len(c)
+        return h.hexdigest(), size
 
     def read_range(self, path: str, offset: int, nbytes: int) -> bytes:
         """Positioned read (the pack-file read path): open + seek + read of
@@ -332,26 +497,42 @@ class FS:
         self._meta(1, src)
         self._meta(1, dst)
         self._ensure_parent(dst)
-        existed = os.path.exists(dst)
-        os.replace(src, dst)
-        self._bump_dir(self._dir_of(src), -1)
-        if not existed:
-            self._bump_dir(self._dir_of(dst), +1)
-        else:
-            # two files collapsed into one: the footprint shrank
-            with self._stats_lock:
-                self.n_files = max(0, self.n_files - 1)
+        # probe + replace + count under one lock: two workers publishing
+        # onto the same dst (concurrent dedup ingest) must not both observe
+        # existed=False and double-count the target directory's entry
+        with self._rename_lock:
+            existed = os.path.exists(dst)
+            os.replace(src, dst)
+            self._bump_dir(self._dir_of(src), -1)
+            if not existed:
+                self._bump_dir(self._dir_of(dst), +1)
+            else:
+                # two files collapsed into one: the footprint shrank
+                with self._stats_lock:
+                    self.n_files = max(0, self.n_files - 1)
 
     def copy_file(self, src: str, dst: str) -> int:
-        """Deep copy (used by --alt-dir staging). Returns bytes copied."""
+        """Deep copy (used by --alt-dir staging). Chunked, with both stream
+        sessions held open for the real duration, so concurrent copies
+        contend under the §9 model; a lone copy charges exactly the old
+        read + write transfer. Returns bytes copied."""
         existed = os.path.exists(dst)
         self._ensure_parent(dst)
-        shutil.copy2(src, dst)
-        n = os.stat(dst).st_size
+        n = 0
         self._meta(2, src)
         self._meta(2, dst)
-        self._xfer(n, write=False)
-        self._xfer(n, write=True)
+        with open(src, "rb") as fsrc, open(dst, "wb") as fdst, \
+                self.transfer_stream(False) as charge_r, \
+                self.transfer_stream(True) as charge_w:
+            while True:
+                c = fsrc.read(_CHUNK)
+                if not c:
+                    break
+                charge_r(len(c))
+                fdst.write(c)
+                charge_w(len(c))
+                n += len(c)
+        shutil.copystat(src, dst)
         self._track_new_file(dst, existed)
         return n
 

@@ -19,8 +19,16 @@ def sha256_bytes(data: bytes) -> str:
     return hashlib.sha256(data).hexdigest()
 
 
-def sha256_file(path: str) -> tuple[str, int]:
-    """Return (hex digest, size) streaming the file in 1 MiB chunks."""
+def sha256_file(path: str, fs=None) -> tuple[str, int]:
+    """Return (hex digest, size) streaming the file in 1 MiB chunks.
+
+    When ``fs`` (a :class:`~repro.core.fsio.FS`) is given, the read pass is
+    routed through it so hashed bytes are charged to the cost model like any
+    other data-plane read — hashing a file is not free on a parallel FS.
+    The raw-path variant (``fs=None``) exists only for callers with no FS
+    context (e.g. hashing files outside any repository)."""
+    if fs is not None:
+        return fs.hash_file(path, _CHUNK)
     h = hashlib.sha256()
     size = 0
     with open(path, "rb") as f:
@@ -37,9 +45,13 @@ def annex_key_for_bytes(data: bytes) -> str:
     return f"SHA256-s{len(data)}--{sha256_bytes(data)}"
 
 
-def annex_key_for_file(path: str) -> str:
-    hx, size = sha256_file(path)
+def make_annex_key(hx: str, size: int) -> str:
     return f"SHA256-s{size}--{hx}"
+
+
+def annex_key_for_file(path: str, fs=None) -> str:
+    hx, size = sha256_file(path, fs=fs)
+    return make_annex_key(hx, size)
 
 
 def parse_annex_key(key: str) -> tuple[int, str]:

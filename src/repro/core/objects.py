@@ -129,6 +129,14 @@ class ObjectStore:
                 cache.popitem(last=False)
 
     # -- core ------------------------------------------------------------
+    @staticmethod
+    def oid_for(kind: str, payload: bytes) -> str:
+        """The oid ``put(kind, payload)`` would assign, without writing —
+        read-only comparisons (rerun's bitwise verification) use this."""
+        assert kind in KINDS, kind
+        framed = kind.encode() + b" " + str(len(payload)).encode() + b"\0" + payload
+        return sha256_bytes(framed)
+
     def put(self, kind: str, payload: bytes) -> str:
         assert kind in KINDS, kind
         framed = kind.encode() + b" " + str(len(payload)).encode() + b"\0" + payload

@@ -312,7 +312,7 @@ def rerun(repo: Repository, commitish: str, report_only: bool = False) -> dict:
         else:
             paths.append(out)
         for p in paths:
-            new_entry = repo._hash_working_file(p)
+            new_entry = repo.hash_path_entry(p)  # read-only: no writes
             same = recorded_tree.get(p) == new_entry
             per_output[p] = same
             changed |= not same

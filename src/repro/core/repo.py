@@ -15,16 +15,18 @@ both engines produce byte-identical tree oids for the same content.
 """
 from __future__ import annotations
 
+import errno
 import fnmatch
 import json
 import os
+import threading
 import time
 import uuid
 
-from .annex import AnnexStore, make_pointer, parse_pointer
+from .annex import _POINTER_MAX, AnnexStore, make_pointer, parse_pointer
 from .conflicts import proper_prefixes
 from .fsio import FS, NULL_FS, FSProfile, SimClock
-from .hashing import annex_key_for_bytes
+from .hashing import annex_key_for_bytes, make_annex_key
 from .objects import ObjectStore
 
 REPRO_DIR = ".repro"
@@ -43,6 +45,12 @@ class Repository:
         if not os.path.exists(cfg_path):
             raise FileNotFoundError(f"not a repro repository: {root}")
         self.fs = fs or FS(NULL_FS)
+        # serializes ref read-modify-publish sequences across threads
+        # sharing this Repository (concurrent finish batches, §9); an RLock
+        # because merge_octopus publishes from inside a holder's section.
+        # In-process only — cross-process ref races are out of scope, like
+        # the jobdb's (sqlite handles those).
+        self.ref_lock = threading.RLock()
         self.config = json.loads(self.fs.read_bytes(cfg_path))
         self.objects = ObjectStore(os.path.join(self.repro_dir, "objects"), self.fs)
         self.annex = AnnexStore(os.path.join(self.repro_dir, "annex", "objects"), self.fs)
@@ -331,9 +339,9 @@ class Repository:
             fnmatch.fnmatch(relpath, pat) for pat in self.config.get("annex_patterns", ())
         )
 
-    def _hash_working_file(self, relpath: str) -> dict:
-        abspath = os.path.join(self.root, relpath)
-        data = self.fs.read_bytes(abspath)
+    def _entry_for_data(self, relpath: str, data: bytes) -> dict:
+        """Tree entry for small in-memory content (pointer passthrough,
+        annex-by-pattern, or blob)."""
         key = parse_pointer(data)
         if key is not None:  # pointer file: content not present, key known
             return {"t": "annex", "key": key}
@@ -342,6 +350,69 @@ class Repository:
             self.annex.put_bytes(key, data)
             return {"t": "annex", "key": key}
         return {"t": "blob", "oid": self.objects.put_blob(data)}
+
+    def _hash_working_file(self, relpath: str, single_pass: bool = True) -> dict:
+        """Stage one worktree file into a tree entry.
+
+        Default (``single_pass``): one stat decides the route — files at or
+        below the pointer size are read whole (pointer detection needs the
+        content), annex-eligible files go through the streamed
+        ``AnnexStore.ingest_file`` (hash-while-write, memory bounded at one
+        chunk, known-key dedup), the rest are read whole and stored as
+        blobs. ``single_pass=False`` keeps the seed-era protocol — read the
+        entire file into memory, then write — for the legacy data-plane
+        benchmarks (see ``SlurmScheduler.finish(data_plane=...)``)."""
+        abspath = os.path.join(self.root, relpath)
+        if not single_pass:
+            return self._entry_for_data(relpath, self.fs.read_bytes(abspath))
+        size = self.fs.stat_size(abspath)
+        if size > _POINTER_MAX and self._should_annex(relpath, size):
+            return {"t": "annex", "key": self.annex.ingest_file(abspath)}
+        return self._entry_for_data(relpath, self.fs.read_bytes(abspath))
+
+    def hash_path_entry(self, relpath: str) -> dict:
+        """The tree entry staging ``relpath`` would produce, computed
+        READ-ONLY — no blob written, no annex object, no tmp churn. This is
+        rerun's bitwise-verification path (paper §3 step 8): comparing N
+        unchanged outputs must charge N read passes and nothing else."""
+        abspath = os.path.join(self.root, relpath)
+        size = self.fs.stat_size(abspath)
+        if size > _POINTER_MAX and self._should_annex(relpath, size):
+            hx, sz = self.fs.hash_file(abspath)
+            return {"t": "annex", "key": make_annex_key(hx, sz)}
+        data = self.fs.read_bytes(abspath)
+        key = parse_pointer(data)
+        if key is not None:
+            return {"t": "annex", "key": key}
+        if self._should_annex(relpath, len(data)):
+            return {"t": "annex", "key": annex_key_for_bytes(data)}
+        return {"t": "blob", "oid": self.objects.oid_for("blob", data)}
+
+    def ingest_external_file(self, src: str, relpath: str) -> dict:
+        """Fused copy-back + stage (DESIGN.md §9): absorb a file the caller
+        *owns* (an --alt-dir staged output) into the repository at
+        ``relpath``, moving its bytes exactly once. Annex-eligible content
+        is hash-while-write ingested straight from ``src`` into the annex
+        (one read + one write) and the source file itself becomes the
+        worktree copy via a rename — the in-repo fast path — instead of a
+        second byte copy. Small content is read once and renamed likewise.
+        Falls back to copy + unlink when ``src`` sits on another device.
+        Returns the tree entry."""
+        dst = os.path.join(self.root, relpath)
+        size = self.fs.stat_size(src)
+        entry = None
+        if size > _POINTER_MAX and self._should_annex(relpath, size):
+            entry = {"t": "annex", "key": self.annex.ingest_file(src)}
+        else:
+            entry = self._entry_for_data(relpath, self.fs.read_bytes(src))
+        try:
+            self.fs.rename(src, dst)
+        except OSError as e:
+            if e.errno != errno.EXDEV:  # only cross-device falls back
+                raise
+            self.fs.copy_file(src, dst)
+            self.fs.unlink(src)
+        return entry
 
     def _expand_paths(self, paths) -> list[str]:
         out: list[str] = []
@@ -364,10 +435,15 @@ class Repository:
                 raise FileNotFoundError(f"no such path: {p}")
         return out
 
-    def stage_paths(self, paths) -> dict[str, dict]:
+    def stage_paths(self, paths, single_pass: bool = True) -> dict[str, dict]:
         """Hash ``paths`` (files or directories) into tree entries, writing
-        blob/annex content as needed. Returns {relpath: entry}."""
-        return {rel: self._hash_working_file(rel) for rel in self._expand_paths(paths)}
+        blob/annex content as needed. Returns {relpath: entry}.
+        ``single_pass=False`` restores the seed-era read-whole-then-write
+        staging (legacy data-plane benchmarks)."""
+        return {
+            rel: self._hash_working_file(rel, single_pass=single_pass)
+            for rel in dict.fromkeys(self._expand_paths(paths))
+        }
 
     def commit_changes(
         self,
@@ -426,6 +502,14 @@ class Repository:
         if engine not in ("incremental", "full"):
             raise ValueError(f"unknown save engine: {engine!r}")
         branch = branch or self.current_branch()
+        with self.ref_lock:
+            return self._save_locked(
+                paths, message, parents, author, allow_empty, branch, engine, spec
+            )
+
+    def _save_locked(
+        self, paths, message, parents, author, allow_empty, branch, engine, spec
+    ) -> str:
         base = self.branch_head(branch)
         if engine == "full":
             return self._save_full(
@@ -604,6 +688,12 @@ class Repository:
         oids compared first, so unchanged subtrees are never read, and the
         merged tree rebuilds only the union of the branches' dirty spines —
         O(total changes), not O(branches x repo files)."""
+        with self.ref_lock:
+            return self._merge_octopus_locked(branches, message, author)
+
+    def _merge_octopus_locked(
+        self, branches: list[str], message: str, author: str
+    ) -> str:
         branch = self.current_branch()
         base_oid = self.head_commit()
         base_tree = self._tree_oid_of(base_oid)
@@ -646,6 +736,18 @@ class Repository:
 
     def whereis(self, key: str) -> list[str]:
         return [s.name for s in [self.annex, *self._remotes] if s.has(key)]
+
+    def whereis_many(self, keys: list[str]) -> dict[str, list[str]]:
+        """Batched ``whereis``: one ``has_many`` per store (per-key probes
+        behind each store's known-key set), never a ``keys()`` sweep — so
+        locating a handful of keys doesn't charge a listdir of every shard
+        in every store."""
+        stores = [self.annex, *self._remotes]
+        present = {s.name: s.has_many(keys) for s in stores}
+        return {
+            key: [s.name for s in stores if key in present[s.name]]
+            for key in keys
+        }
 
     def entry_at(self, commit_oid: str, path: str) -> dict | None:
         """Point lookup of one path's tree entry — O(depth), not O(repo)."""
@@ -695,7 +797,9 @@ class Repository:
         key = parse_pointer(data)
         if key is None:
             key = annex_key_for_bytes(data)
-        others = [s for s in self._remotes if s.has(key)]
+        # numcopies check: fresh probes (never the known-key set) — a stale
+        # positive here would destroy the last copy
+        others = [s for s in self._remotes if s.has(key, fresh=True)]
         if not others and not force:
             raise RuntimeError(
                 f"refusing to drop last copy of {path} ({key}); use force=True"
@@ -706,11 +810,19 @@ class Repository:
 
     def annex_push(self, store: AnnexStore, keys: list[str] | None = None) -> int:
         """Push local annex content to another store (datalad push). Returns
-        number of keys transferred."""
+        number of keys transferred. An explicit key list is served by
+        per-key presence probes on both sides (``has_many``); only the
+        push-everything form pays the full ``keys()`` enumeration. Content
+        moves as a streamed file copy, never a whole-object read into
+        memory."""
+        if keys is None:
+            keys = self.annex.keys()
+        local = self.annex.has_many(keys)
+        remote = store.has_many(keys)
         n = 0
-        for key in keys if keys is not None else self.annex.keys():
-            if self.annex.has(key) and not store.has(key):
-                store.put_bytes(key, self.annex.read(key))
+        for key in keys:
+            if key in local and key not in remote:
+                store.put_file(key, self.annex._path(key))
                 n += 1
         return n
 

@@ -32,7 +32,7 @@ from dataclasses import dataclass
 from . import slurm as S
 from .jobdb import JobDB, job_spec
 from .records import TITLE_SLURM, RunRecord, spec_of
-from .repo import Repository
+from .repo import REPRO_DIR, Repository
 from .spec import RunSpec, SpecError
 
 class ScheduleError(SpecError):
@@ -64,7 +64,8 @@ class SlurmScheduler:
 
     def __init__(self, repo: Repository, cluster: S.SlurmCluster,
                  cli_startup_s: float = 0.35,
-                 auto_repack_threshold: int | None = None):
+                 auto_repack_threshold: int | None = None,
+                 ingest_workers: int = 0):
         self.repo = repo
         self.cluster = cluster
         self.cli_startup_s = cli_startup_s
@@ -72,6 +73,12 @@ class SlurmScheduler:
         # object store after its commit batch (DESIGN.md §8). None disables
         # auto-repack — measurement runs want the aging slope observable.
         self.auto_repack_threshold = auto_repack_threshold
+        # finish()'s data-plane fan-out width (DESIGN.md §9): output
+        # ingestion is content-addressed and commutative, so a batch's
+        # files can be ingested by a worker pool while commit chaining and
+        # ref publication stay strictly ordered. 0/1 = serial (default, and
+        # identical charges to the serial model).
+        self.ingest_workers = ingest_workers
         self.db = JobDB(repo.repro_dir)
 
     def _charge_cli(self) -> None:
@@ -248,6 +255,7 @@ class SlurmScheduler:
         branches: bool = False,
         octopus: bool = False,
         engine: str = "incremental",
+        data_plane: str = "fused",
     ) -> list[FinishResult]:
         """``datalad slurm-finish``: commit results of finished jobs.
 
@@ -263,6 +271,15 @@ class SlurmScheduler:
         instead of N independent full-tree rebuilds. The branch ref is
         published before each job is closed in the DB, so a crash mid-batch
         never leaves a closed job with an unreachable commit.
+
+        The *data plane* (DESIGN.md §9) runs first and commutes: every
+        output file of every committable job is ingested content-addressed
+        (hash-while-write, alt-dir copy-back fused into the same single
+        pass) — across ``ingest_workers`` threads when configured — before
+        the strictly ordered commit/publish phase, which is serialized
+        against concurrent finishers on ``Repository.ref_lock``.
+        ``data_plane="legacy"`` restores the seed-era two-pass protocol
+        (copy back, then read-whole + write) for benchmarking.
         ``engine="full"`` routes every commit through the seed-era full
         rebuild instead (used by benchmarks to measure the legacy path).
         """
@@ -300,7 +317,7 @@ class SlurmScheduler:
             to_commit.append((job, state))
         results += self._commit_jobs_batched(
             to_commit, use_branch=branches or octopus, octopus=octopus,
-            engine=engine,
+            engine=engine, data_plane=data_plane,
         )
         if to_commit:
             self.maybe_repack()
@@ -324,79 +341,196 @@ class SlurmScheduler:
         use_branch: bool,
         octopus: bool,
         engine: str = "incremental",
+        data_plane: str = "fused",
     ) -> list[FinishResult]:
         """One commit per job (§5.1: one reproducibility record each), but the
         whole batch shares one base-tree read. The branch ref is written per
         commit, *before* the job is closed — crash-safety over batching; do
-        not hoist it out of the loop."""
+        not hoist it out of the loop.
+
+        Two phases (DESIGN.md §9): the commutative data plane first — every
+        output of every job ingested content-addressed, fan-out across
+        ``self.ingest_workers`` — then the ordered metadata phase (record,
+        commit chaining, ref publication, job closing) under
+        ``Repository.ref_lock`` so concurrent finish batches interleave at
+        the byte level but publish serially. A crash between the phases
+        loses nothing: ingested objects are content-addressed (a re-finish
+        dedups them) and the jobs are still open."""
         if engine not in ("incremental", "full"):
             raise ValueError(f"unknown commit engine: {engine!r}")
+        if data_plane not in ("fused", "legacy"):
+            raise ValueError(f"unknown data plane: {data_plane!r}")
         if not to_commit:
             return []
         repo = self.repo
-        branch = repo.current_branch()
-        base = repo.branch_head(branch)
-        base_tree = repo._tree_oid_of(base)
-        head_commit, head_tree = base, base_tree
+        prepared = []
+        for job, state in to_commit:
+            spec = job_spec(job)
+            slurm_outputs = [
+                os.path.normpath(os.path.join(spec.pwd, f))
+                for f in self.cluster.slurm_output_files(job["slurm_id"])
+            ]
+            prepared.append((job, state, spec, slurm_outputs))
+        fused = engine == "incremental" and data_plane == "fused"
+        staged: list[dict] | None = None
+        if fused:
+            staged = self._ingest_batch(prepared)
+        else:
+            # seed-era data plane: deep-copy alt-dir outputs back into the
+            # worktree now; each job re-reads + re-writes them when staged
+            for _, _, spec, slurm_outputs in prepared:
+                if spec.alt_dir:
+                    self._copy_back_alt_dir(spec, slurm_outputs)
         results: list[FinishResult] = []
         new_branches: list[str] = []
-        for job, state in to_commit:
-            message, save_paths, spec_json = self._job_record(job, state)
-            if engine == "full":
-                # seed-era path, one full-tree rebuild per job (benchmarks)
-                branch_name = None
-                if use_branch:
-                    branch_name = f"job/{job['slurm_id']}"
-                    repo.create_branch(branch_name, at=base)
-                    new_branches.append(branch_name)
-                commit = repo.save(
-                    paths=save_paths, message=message, branch=branch_name,
-                    engine="full", spec=spec_json,
+        with repo.ref_lock:
+            branch = repo.current_branch()
+            base = repo.branch_head(branch)
+            base_tree = repo._tree_oid_of(base)
+            head_commit, head_tree = base, base_tree
+            for idx, (job, state, spec, slurm_outputs) in enumerate(prepared):
+                # another finisher may have committed this job between our
+                # open_jobs() read and taking the lock (two unfiltered
+                # finish() calls racing): commits + close run under
+                # ref_lock, so a re-read here decides exactly once per job.
+                # The data-plane work already done is content-addressed —
+                # wasted effort at most, never a duplicate record.
+                row = self.db.get(job["job_id"])
+                if row is None or row["status"] != "scheduled":
+                    results.append(
+                        FinishResult(job["job_id"], job["slurm_id"], state, None)
+                    )
+                    continue
+                message, save_paths, spec_json = self._job_record(
+                    job, state, spec, slurm_outputs
                 )
-            else:
-                changes = repo.stage_paths(save_paths)
-                branch_name = None
-                if use_branch:
-                    # per-job branches all root at the shared base (§5.8)
-                    branch_name = f"job/{job['slurm_id']}"
-                    repo.create_branch(branch_name, at=base)
-                    commit, _ = repo.commit_changes(
-                        changes, message=message, base_commit=base,
-                        base_tree=base_tree, spec=spec_json,
+                if engine == "full":
+                    # seed-era path, one full-tree rebuild per job (benchmarks)
+                    branch_name = None
+                    if use_branch:
+                        branch_name = f"job/{job['slurm_id']}"
+                        repo.create_branch(branch_name, at=base)
+                        new_branches.append(branch_name)
+                    commit = repo.save(
+                        paths=save_paths, message=message, branch=branch_name,
+                        engine="full", spec=spec_json,
                     )
-                    repo.set_branch(branch_name, commit)
-                    new_branches.append(branch_name)
                 else:
-                    commit, tree = repo.commit_changes(
-                        changes, message=message,
-                        base_commit=head_commit, base_tree=head_tree,
-                        spec=spec_json,
+                    changes = (
+                        staged[idx] if staged is not None
+                        else repo.stage_paths(save_paths, single_pass=False)
                     )
-                    head_commit, head_tree = commit, tree
-                    # publish before closing the job: a closed job must always
-                    # have its commit reachable, even if the process dies here
-                    repo.set_branch(branch, commit)
-            self.db.close_job(job["job_id"], status="finished")
-            results.append(
-                FinishResult(job["job_id"], job["slurm_id"], state, commit, branch_name)
-            )
-        if octopus and new_branches:
-            repo.merge_octopus(
-                new_branches, message=f"octopus merge of {len(new_branches)} slurm jobs"
-            )
+                    branch_name = None
+                    if use_branch:
+                        # per-job branches all root at the shared base (§5.8)
+                        branch_name = f"job/{job['slurm_id']}"
+                        repo.create_branch(branch_name, at=base)
+                        commit, _ = repo.commit_changes(
+                            changes, message=message, base_commit=base,
+                            base_tree=base_tree, spec=spec_json,
+                        )
+                        repo.set_branch(branch_name, commit)
+                        new_branches.append(branch_name)
+                    else:
+                        commit, tree = repo.commit_changes(
+                            changes, message=message,
+                            base_commit=head_commit, base_tree=head_tree,
+                            spec=spec_json,
+                        )
+                        head_commit, head_tree = commit, tree
+                        # publish before closing the job: a closed job must
+                        # always have its commit reachable, even if the
+                        # process dies here
+                        repo.set_branch(branch, commit)
+                self.db.close_job(job["job_id"], status="finished")
+                results.append(
+                    FinishResult(
+                        job["job_id"], job["slurm_id"], state, commit, branch_name
+                    )
+                )
+            if octopus and new_branches:
+                repo.merge_octopus(
+                    new_branches,
+                    message=f"octopus merge of {len(new_branches)} slurm jobs",
+                )
         return results
 
-    def _job_record(self, job: dict, state: str) -> tuple[str, list[str], dict]:
+    def _ingest_batch(self, prepared) -> list[dict]:
+        """Fused data plane: expand every committable job's outputs into
+        per-file ingest tasks and run them — serially, or across the
+        ``ingest_workers`` pool (ingest is content-addressed and
+        commutative, so ordering is irrelevant and duplicate content
+        collapses via the annex known-key set). Alt-dir outputs are
+        absorbed straight from the staging tree (one read + one annex
+        write + a rename into the worktree) instead of copy-then-restage.
+        Returns one {relpath: entry} changes dict per prepared job."""
+        repo = self.repo
+        tasks: list[tuple[int, str, str | None]] = []  # (job idx, rel, alt src)
+        seen: set[tuple[int, str]] = set()
+
+        def add_task(idx: int, rel: str, src: str | None) -> None:
+            if (idx, rel) not in seen and not repo._is_ignored(rel):
+                seen.add((idx, rel))
+                tasks.append((idx, rel, src))
+
+        def expand(idx: int, rel: str, base_dir: str, external: bool) -> None:
+            abs_p = os.path.join(base_dir, rel)
+            if os.path.isdir(abs_p):
+                for dirpath, dirnames, files in os.walk(abs_p):
+                    dirnames[:] = [d for d in dirnames if d != REPRO_DIR]
+                    for f in sorted(files):
+                        r = os.path.relpath(os.path.join(dirpath, f), base_dir)
+                        add_task(
+                            idx, r,
+                            os.path.join(base_dir, r) if external else None,
+                        )
+            else:
+                add_task(idx, rel, abs_p if external else None)
+
+        for idx, (job, state, spec, slurm_outputs) in enumerate(prepared):
+            for p in list(spec.outputs) + slurm_outputs:
+                rel = os.path.normpath(p)
+                # alt first (a staged output shadows a same-path worktree
+                # file, like the legacy copy-back overwrite), then the
+                # worktree copy of the same output — a directory output may
+                # hold files on both sides and the commit needs the union,
+                # exactly as copy-back + stage produced
+                if spec.alt_dir and os.path.exists(os.path.join(spec.alt_dir, rel)):
+                    expand(idx, rel, spec.alt_dir, True)
+                if os.path.exists(os.path.join(repo.root, rel)):
+                    expand(idx, rel, repo.root, False)
+
+        def ingest_one(task: tuple[int, str, str | None]):
+            idx, rel, src = task
+            if src is not None:
+                try:
+                    return idx, rel, repo.ingest_external_file(src, rel)
+                except FileNotFoundError:
+                    # a racing finisher of the same job absorbed this staged
+                    # file already — its content now lives in the worktree,
+                    # so stage it from there like any in-repo output
+                    pass
+            return idx, rel, repo._hash_working_file(rel)
+
+        if self.ingest_workers > 1 and len(tasks) > 1:
+            from concurrent.futures import ThreadPoolExecutor
+
+            with ThreadPoolExecutor(max_workers=self.ingest_workers) as ex:
+                done = list(ex.map(ingest_one, tasks))
+        else:
+            done = [ingest_one(t) for t in tasks]
+        staged: list[dict] = [{} for _ in prepared]
+        for idx, rel, entry in done:
+            staged[idx][rel] = entry
+        return staged
+
+    def _job_record(
+        self, job: dict, state: str, spec: RunSpec, slurm_outputs: list[str]
+    ) -> tuple[str, list[str], dict]:
         """Reproducibility record message (§5.2), the existing output paths
-        to stage, and the originating spec JSON for one finished job."""
-        spec = job_spec(job)
+        to stage, and the originating spec JSON for one finished job. Pure
+        bookkeeping: the data plane (copy-back/ingest) has already run."""
         slurm_id = job["slurm_id"]
-        slurm_outputs = [
-            os.path.normpath(os.path.join(spec.pwd, f))
-            for f in self.cluster.slurm_output_files(slurm_id)
-        ]
-        if spec.alt_dir:
-            self._copy_back_alt_dir(spec, slurm_outputs)
         spec_json = spec.to_json()
         record = RunRecord(
             cmd=spec.record_cmd,

@@ -48,10 +48,12 @@ class Session:
         cli_startup_s: float = 0.0,
         max_workers: int = 8,
         auto_repack_threshold: int | None | str = "auto",
+        ingest_workers: int = 0,
     ):
         self.repo = repo
         self.cli_startup_s = cli_startup_s
         self._max_workers = max_workers
+        self.ingest_workers = ingest_workers
         self._cluster = cluster
         self._scheduler: SlurmScheduler | None = None
         self._owns_cluster = cluster is None
@@ -86,6 +88,7 @@ class Session:
             self._scheduler = SlurmScheduler(
                 self.repo, self.cluster, cli_startup_s=self.cli_startup_s,
                 auto_repack_threshold=self.auto_repack_threshold,
+                ingest_workers=self.ingest_workers,
             )
         return self._scheduler
 
@@ -199,6 +202,7 @@ def open(
     cli_startup_s: float = 0.0,
     max_workers: int = 8,
     auto_repack_threshold: int | None | str = "auto",
+    ingest_workers: int = 0,
     **init_kwargs,
 ) -> Session:
     """Open (or with ``create=True``, initialize) a repository at ``root``
@@ -221,4 +225,5 @@ def open(
     return Session(
         repo, cluster=cluster, cli_startup_s=cli_startup_s,
         max_workers=max_workers, auto_repack_threshold=auto_repack_threshold,
+        ingest_workers=ingest_workers,
     )

@@ -158,8 +158,9 @@ def test_incremental_save_touches_only_dirty_spine(tmp_path):
     ops_before = clock.meta_ops
     repo.save(paths=["jobs/00/out.txt"], message="one job")
     ops = clock.meta_ops - ops_before
-    # read file + blob put + 3 spine trees + commit + 2 ref ops, NOT ~40 dirs
-    assert ops < 25, f"incremental save issued {ops} metadata ops"
+    # stat (size routes the §9 staging) + read file + blob put + 3 spine
+    # trees + commit + 2 ref ops, NOT ~40 dirs
+    assert ops < 27, f"incremental save issued {ops} metadata ops"
 
 
 def test_batched_finish_equals_sequential_tree(tmp_path):

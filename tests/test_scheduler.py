@@ -502,3 +502,157 @@ def test_straggler_reschedule_reuses_stored_spec(env):
     fresh = RunSpec.from_json(sched.db.get(new_id)["spec"])
     assert fresh.replace(message=orig.message) == orig
     cluster.scancel(sched.db.get(new_id)["slurm_id"])
+
+
+# ------------------------------------------------ concurrent data plane (§9)
+def test_concurrent_finish_disjoint_batches_one_repo(tmp_path):
+    """The paper's core concurrency claim, exercised at the data plane: two
+    scheduler threads sharing ONE repository finish disjoint job batches
+    concurrently. No annex object may be lost, duplicate content must
+    collapse to one object (no duplicate loose writes), and ref publication
+    must serialize into one linear chain containing every job's commit."""
+    import threading
+
+    repo = Repository.init(str(tmp_path / "repo"), annex_threshold=512)
+    write(repo.root, "README", "seed\n")
+    base = repo.save(message="base")
+    cluster = LocalSlurmCluster(max_workers=8, sbatch_cost_s=0.0, sacct_cost_s=0.0)
+    sched = SlurmScheduler(repo, cluster, ingest_workers=4)
+    n = 8
+    specs = []
+    for j in range(n):
+        # jobs 3 and 7 land in different batches but produce IDENTICAL
+        # content — the dedup short-circuit must collapse them to one key
+        tag = "shared" if j in (3, 7) else f"job{j}"
+        make_job_script(
+            repo.root, f"jobs/{j}/slurm.sh",
+            f'for i in $(seq 1 400); do echo "payload {tag} $i"; done > out.bin',
+        )
+        specs.append(RunSpec(script="slurm.sh", outputs=[f"jobs/{j}/out.bin"],
+                             pwd=f"jobs/{j}"))
+    ids = sched.submit_many(specs)
+    cluster.wait(timeout=60)
+
+    barrier = threading.Barrier(2)
+    errors = []
+
+    def finish_batch(job_ids):
+        try:
+            barrier.wait()
+            for jid in job_ids:
+                (res,) = sched.finish(job_id=jid)
+                assert res.commit, res
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    t1 = threading.Thread(target=finish_batch, args=(ids[:4],))
+    t2 = threading.Thread(target=finish_batch, args=(ids[4:],))
+    t1.start(); t2.start(); t1.join(); t2.join()
+    cluster.shutdown()
+    assert not errors
+    assert sched.db.open_jobs() == []
+
+    # no lost annex objects: every job's output is an annexed entry in the
+    # final tree and its content is present and verifiable
+    tree = repo.tree_of(repo.head_commit())
+    keys = set()
+    for j in range(n):
+        entry = tree[f"jobs/{j}/out.bin"]
+        assert entry["t"] == "annex"
+        assert repo.annex.read(entry["key"])  # verifies against the key
+        keys.add(entry["key"])
+    # duplicate content collapsed: 8 jobs, 7 distinct keys
+    assert tree["jobs/3/out.bin"]["key"] == tree["jobs/7/out.bin"]["key"]
+    assert len(keys) == n - 1
+    # no duplicate/stray loose writes in the annex: exactly the final
+    # objects, no tmp leftovers
+    on_disk = []
+    for dirpath, _, files in os.walk(repo.annex.root):
+        on_disk.extend(files)
+    assert sorted(on_disk) == sorted(keys)
+
+    # serialized ref publication: a single linear first-parent chain from
+    # HEAD back to base containing all 8 job commits
+    chain = []
+    oid = repo.head_commit()
+    while oid != base:
+        c = repo.objects.get_commit(oid)
+        assert len(c["parents"]) == 1
+        chain.append(oid)
+        oid = c["parents"][0]
+    assert len(chain) == n
+
+
+def test_concurrent_unfiltered_finish_commits_each_job_once(tmp_path):
+    """Two racing finish() calls with NO job filter both see the same open
+    jobs; the commit/close decision is made exactly once per job under the
+    ref lock — never two reproducibility records for one job. Half the jobs
+    stage through --alt-dir, so the race also covers two finishers
+    absorbing the same staged files (the loser falls back to the worktree
+    copy the winner renamed into place)."""
+    import threading
+
+    repo = Repository.init(str(tmp_path / "repo"), annex_threshold=512)
+    write(repo.root, "README", "seed\n")
+    base = repo.save(message="base")
+    cluster = LocalSlurmCluster(max_workers=6, sbatch_cost_s=0.0, sacct_cost_s=0.0)
+    sched = SlurmScheduler(repo, cluster, ingest_workers=2)
+    alt = str(tmp_path / "stage")
+    n = 6
+    specs = []
+    for j in range(n):
+        make_job_script(repo.root, f"jobs/{j}/slurm.sh",
+                        f"echo result-{j} > out.txt")
+        specs.append(RunSpec(script="slurm.sh", outputs=[f"jobs/{j}/out.txt"],
+                             pwd=f"jobs/{j}", alt_dir=alt if j % 2 else None))
+    sched.submit_many(specs)
+    cluster.wait(timeout=60)
+
+    barrier = threading.Barrier(2)
+    all_results, errors = [], []
+
+    def finish_all():
+        try:
+            barrier.wait()
+            all_results.extend(sched.finish())
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=finish_all) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    cluster.shutdown()
+    assert not errors
+    assert sched.db.open_jobs() == []
+    committed = [r for r in all_results if r.commit]
+    assert len(committed) == n  # each job committed exactly once, anywhere
+    assert len({r.job_id for r in committed}) == n
+    # and the published chain holds exactly n commits over the base
+    chain = 0
+    oid = repo.head_commit()
+    while oid != base:
+        c = repo.objects.get_commit(oid)
+        assert len(c["parents"]) == 1
+        chain += 1
+        oid = c["parents"][0]
+    assert chain == n
+
+
+def test_fused_alt_dir_unions_worktree_files(env, tmp_path):
+    """A directory output holding files in BOTH the alt staging tree and
+    the worktree commits the union (alt wins per-path), exactly like the
+    legacy copy-back + stage protocol."""
+    repo, cluster, sched = env
+    alt = str(tmp_path / "stage")
+    make_job_script(repo.root, "res/slurm.sh", "echo from-alt > alt.txt")
+    job_id = sched.schedule("slurm.sh", outputs=["res"], pwd="res", alt_dir=alt)
+    cluster.wait(timeout=30)
+    # a worktree-only file appears under the output dir before finish
+    write(repo.root, "res/wt.txt", "from-worktree\n")
+    (res,) = sched.finish(job_id=job_id)
+    assert res.commit
+    tree = repo.tree_of(res.commit)
+    assert "res/alt.txt" in tree and "res/wt.txt" in tree
+    assert open(os.path.join(repo.root, "res/alt.txt")).read() == "from-alt\n"
