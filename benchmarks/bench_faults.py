@@ -1,0 +1,151 @@
+"""Robustness cost benchmark (DESIGN.md §10): what does crash-safety charge?
+
+Three questions, answered on the calibrated sim clock:
+
+  journal overhead   ``finish`` with the intent journal on vs off for the
+                     same batch — the exactly-once guarantee costs one
+                     fsynced header write + one JSONL append per job + one
+                     unlink per batch, and must stay within 1.15x.
+  recovery cost      kill the client at ``finish:after-publish`` halfway
+                     through a batch, then ``recover()`` a fresh incarnation
+                     over the same repository. Recovery (journal replay +
+                     re-finish of the unpublished half) must cost less than
+                     re-running the whole batch from scratch — and must end
+                     at zero divergence.
+  verify cost        one full fsck sweep of the recovered repository,
+                     reported for the trajectory (no gate).
+
+Rows are tagged ``bench="faults"`` and land in ``BENCH_faults.json``
+(benchmarks/run.py ``--check-faults``).
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core.faults import CrashInjected, FaultPlan
+from repro.core.fsio import FS, GPFS, SimClock
+from repro.core.repo import Repository
+from repro.core.scheduler import SlurmScheduler
+from repro.core.session import Session
+from repro.core.slurm import LocalSlurmCluster
+from repro.core.spec import RunSpec
+
+from .common import cleanup, seed_repo_files, timer, write_job_dir
+
+N_JOBS = 16
+REPO_FILES = 10_000
+
+
+def _make_env(faults=None):
+    import tempfile
+
+    root = tempfile.mkdtemp(prefix="bench_faults_")
+    clock = SimClock()
+    repo = Repository.init(
+        os.path.join(root, "repo"), profile=GPFS, clock=clock,
+        annex_threshold=256, faults=faults,
+    )
+    cluster = LocalSlurmCluster(
+        max_workers=8, clock=clock, sbatch_cost_s=0.05, sacct_cost_s=0.02,
+        faults=faults,
+    )
+    sched = SlurmScheduler(repo, cluster)
+    return root, repo, cluster, sched, clock
+
+
+def _submit_batch(repo, cluster, sched, n_jobs):
+    specs = []
+    for j in range(n_jobs):
+        write_job_dir(repo, j)
+        specs.append(RunSpec(script="slurm.sh", outputs=[f"jobs/{j}"],
+                             pwd=f"jobs/{j}"))
+    ids = sched.submit_many(specs)
+    cluster.wait(timeout=600)
+    return ids
+
+
+def _finish_cost(journal: bool, n_jobs: int, repo_files: int) -> dict:
+    root, repo, cluster, sched, clock = _make_env()
+    seed_repo_files(repo, repo_files)
+    _submit_batch(repo, cluster, sched, n_jobs)
+    s0 = clock.snapshot()
+    with timer() as t:
+        res = sched.finish(journal=journal)
+    assert len(res) == n_jobs and all(r.commit for r in res), res
+    sim_total = clock.snapshot() - s0
+    cluster.shutdown()
+    cleanup(root)
+    return {
+        "bench": "faults",
+        "case": "finish_journal" if journal else "finish_nojournal",
+        "n_jobs": n_jobs,
+        "repo_files": repo_files,
+        "sim_s_total": sim_total,
+        "sim_s_per_job": sim_total / n_jobs,
+        "wall_s_total": t["s"],
+    }
+
+
+def _recovery_cost(n_jobs: int, repo_files: int) -> list[dict]:
+    # kill the client after publishing the (n/2)-th job of the batch
+    plan = FaultPlan(seed=0, crash_at={"finish:after-publish": n_jobs // 2})
+    root, repo, cluster, sched, clock = _make_env(faults=plan)
+    seed_repo_files(repo, repo_files)
+    job_ids = _submit_batch(repo, cluster, sched, n_jobs)
+    try:
+        sched.finish()
+        raise AssertionError("crash point never fired")
+    except CrashInjected:
+        pass
+    # reboot: fresh FS over the same repository, same (uncrashed) cluster,
+    # same sim clock so recovery charges land on the same trajectory
+    cluster.faults = None
+    session = Session(
+        Repository(repo.root, fs=FS(GPFS, clock)), cluster=cluster
+    )
+    s0 = clock.snapshot()
+    with timer() as t_rec:
+        report = session.recover()
+    sim_recover = clock.snapshot() - s0
+    s0 = clock.snapshot()
+    with timer() as t_ver:
+        check = session.verify()
+    sim_verify = clock.snapshot() - s0
+    assert check["divergence"] == 0, check["issues"]
+    db = session.scheduler.db
+    assert all(db.get(j)["status"] == "finished" for j in job_ids)
+    cluster.shutdown()
+    cleanup(root)
+    return [
+        {
+            "bench": "faults", "case": "recover_midbatch",
+            "n_jobs": n_jobs, "repo_files": repo_files,
+            "recovered_jobs": report["commits_republished"]
+            + report["jobs_refinished"],
+            "sim_s_total": sim_recover,
+            "sim_s_per_job": sim_recover / n_jobs,
+            "wall_s_total": t_rec["s"],
+        },
+        {
+            "bench": "faults", "case": "verify_full",
+            "n_jobs": n_jobs, "repo_files": repo_files,
+            "checked_commits": check["checked_commits"],
+            "sim_s_total": sim_verify,
+            "sim_s_per_job": sim_verify / n_jobs,
+            "wall_s_total": t_ver["s"],
+        },
+    ]
+
+
+def run(n_jobs: int = N_JOBS, repo_files: int = REPO_FILES) -> list[dict]:
+    rows = [
+        _finish_cost(False, n_jobs, repo_files),
+        _finish_cost(True, n_jobs, repo_files),
+    ]
+    rows += _recovery_cost(n_jobs, repo_files)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -29,7 +29,13 @@ benchmark (8 jobs x 8x64 MiB --alt-dir outputs, one finish batch), writes
 <= 0.6x the seed path's ``bytes_read`` at equal output volume and (b) the
 pipelined concurrent finish completes in < 0.5x the fused-serial sim time.
 
-``python -m benchmarks.run --check-all`` runs all four gates in one
+``python -m benchmarks.run --check-faults`` runs the robustness cost
+benchmark (journaled vs unjournaled finish, mid-batch crash + recover),
+writes ``BENCH_faults.json``, and fails unless (a) the intent journal keeps
+finish within 1.15x of the unjournaled cost and (b) recovering a half-crashed
+batch costs less than re-finishing the whole batch, at zero divergence.
+
+``python -m benchmarks.run --check-all`` runs all five gates in one
 invocation and exits non-zero if any failed.
 """
 from __future__ import annotations
@@ -42,6 +48,7 @@ BENCH_FINISH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_finish.
 BENCH_SCHEDULE_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_schedule.json")
 BENCH_PACK_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_pack.json")
 BENCH_INGEST_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_ingest.json")
+BENCH_FAULTS_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_faults.json")
 
 
 def _write_rows_json(
@@ -177,6 +184,68 @@ def check_ingest() -> None:
         raise SystemExit(1)
 
 
+def _write_faults_json(rows: list[dict]) -> None:
+    out_rows = [
+        {
+            "case": r["case"],
+            "n_jobs": r["n_jobs"],
+            "repo_files": r["repo_files"],
+            "sim_s_total": r["sim_s_total"],
+            "sim_s_per_job": r["sim_s_per_job"],
+            "wall_s_total": r["wall_s_total"],
+        }
+        for r in rows
+        if r["bench"] == "faults"
+    ]
+    path = os.path.normpath(BENCH_FAULTS_JSON)
+    with open(path, "w") as f:
+        json.dump(out_rows, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path} ({len(out_rows)} rows)", file=sys.stderr)
+
+
+def _faults_claims(rows: list[dict]) -> list[tuple[str, bool, str]]:
+    flt = {r["case"]: r for r in rows if r["bench"] == "faults"}
+    claims = []
+    if "finish_journal" in flt and "finish_nojournal" in flt:
+        jrn, raw = flt["finish_journal"], flt["finish_nojournal"]
+        claims.append((
+            "robustness: intent journal keeps finish within 1.15x of"
+            " unjournaled",
+            jrn["sim_s_per_job"] <= 1.15 * raw["sim_s_per_job"],
+            f"nojournal={raw['sim_s_per_job']:.3f}s"
+            f" journal={jrn['sim_s_per_job']:.3f}s"
+            f" ({jrn['sim_s_per_job'] / raw['sim_s_per_job']:.3f}x)",
+        ))
+    if "recover_midbatch" in flt and "finish_journal" in flt:
+        rec, jrn = flt["recover_midbatch"], flt["finish_journal"]
+        claims.append((
+            "robustness: recovering a half-crashed batch costs less than"
+            " re-finishing it, at zero divergence",
+            rec["sim_s_total"] < jrn["sim_s_total"],
+            f"recover={rec['sim_s_total']:.2f}s"
+            f" ({rec['recovered_jobs']} jobs) vs"
+            f" full finish={jrn['sim_s_total']:.2f}s",
+        ))
+    return claims
+
+
+def check_faults() -> None:
+    """Robustness cost gate: the exactly-once machinery (intent journal,
+    crash recovery) must stay cheap. bench_faults itself asserts zero
+    divergence after recovery; a failed assertion fails the gate."""
+    from . import bench_faults
+
+    rows = bench_faults.run()
+    _write_faults_json(rows)
+    ok = True
+    for name, passed, detail in _faults_claims(rows):
+        ok &= passed
+        print(f"# [{'PASS' if passed else 'FAIL'}] {name}: {detail}")
+    if not ok:
+        raise SystemExit(1)
+
+
 def _write_schedule_json(rows: list[dict]) -> None:
     batch_rows = [
         {
@@ -294,8 +363,8 @@ def check_schedule() -> None:
 
 def main() -> None:
     from . import (
-        bench_conflicts, bench_finish, bench_ingest, bench_octopus,
-        bench_schedule,
+        bench_conflicts, bench_faults, bench_finish, bench_ingest,
+        bench_octopus, bench_schedule,
     )
 
     rows = []
@@ -307,6 +376,8 @@ def main() -> None:
     rows += bench_finish.run()
     print("# running bench_ingest (data plane, §9) ...", file=sys.stderr)
     rows += bench_ingest.run()
+    print("# running bench_faults (robustness cost, §10) ...", file=sys.stderr)
+    rows += bench_faults.run()
     print("# running bench_conflicts (§5.5) ...", file=sys.stderr)
     rows += bench_conflicts.run()
     print("# running bench_octopus (Fig. 6 / A2) ...", file=sys.stderr)
@@ -316,6 +387,7 @@ def main() -> None:
     _write_schedule_json(rows)
     _write_pack_json(rows)
     _write_ingest_json(rows)
+    _write_faults_json(rows)
 
     print("name,us_per_call,derived")
     claims = []
@@ -336,6 +408,10 @@ def main() -> None:
             derived = f"sim={r['sim_s_per_job']:.3f}s_per_job"
         elif r["bench"] == "ingest":
             name = f"ingest/{r['case']}/{r['n_jobs']}jobs"
+            us = r["wall_s_total"] * 1e6 / r["n_jobs"]
+            derived = f"sim={r['sim_s_total']:.3f}s_total"
+        elif r["bench"] == "faults":
+            name = f"faults/{r['case']}/{r['n_jobs']}jobs"
             us = r["wall_s_total"] * 1e6 / r["n_jobs"]
             derived = f"sim={r['sim_s_total']:.3f}s_total"
         elif r["bench"] == "conflict_check":
@@ -366,6 +442,7 @@ def main() -> None:
     claims += _pack_claims(rows)
     claims += _schedule_batch_claims(rows)
     claims += _ingest_claims(rows)
+    claims += _faults_claims(rows)
     conf = {r["scheduled_jobs"]: r for r in rows if r["bench"] == "conflict_check"}
     claims.append(("§5.5: conflict check ~O(1) in scheduled jobs",
                    conf[50_000]["wall_us_per_check"] < 20 * conf[100]["wall_us_per_check"],
@@ -385,11 +462,12 @@ def main() -> None:
 if __name__ == "__main__":
     args = sys.argv[1:]
     if "--check-all" in args:
-        # all four gates in one invocation; report every failure, then exit
+        # all five gates in one invocation; report every failure, then exit
         failed = []
         for name, gate in (
             ("finish", check_finish), ("schedule", check_schedule),
             ("pack", check_pack), ("ingest", check_ingest),
+            ("faults", check_faults),
         ):
             print(f"# --check-{name} ...", file=sys.stderr)
             try:
@@ -413,6 +491,9 @@ if __name__ == "__main__":
         ran_gate = True
     if "--check-ingest" in args:
         check_ingest()
+        ran_gate = True
+    if "--check-faults" in args:
+        check_faults()
         ran_gate = True
     if not ran_gate:
         main()

@@ -11,7 +11,8 @@ Only the lightweight core is imported here; the modeling subpackages
 (``repro.models``, ``repro.train``, ...) pull in jax and are imported
 explicitly by their users.
 """
+from .core.faults import FaultPlan, FaultRule
 from .core.session import Session, open  # noqa: A004 (module-level `open` is the API)
 from .core.spec import RunSpec, SpecError
 
-__all__ = ["Session", "open", "RunSpec", "SpecError"]
+__all__ = ["Session", "open", "RunSpec", "SpecError", "FaultPlan", "FaultRule"]

@@ -13,10 +13,19 @@ from .conflicts import (
     normalize,
     proper_prefixes,
 )
+from .faults import (
+    CrashInjected,
+    FaultPlan,
+    FaultRule,
+    InjectedIOError,
+    InjectedSlurmError,
+    is_crash,
+)
 from .fsio import FS, GPFS, LOCAL_XFS, NULL_FS, FSProfile, SimClock
 from .hashing import annex_key_for_bytes, annex_key_for_file, verify_annex_key
 from .jobdb import JobDB, job_spec
 from .records import RunFailed, RunRecord, rerun, run, run_spec, spec_of
+from .recovery import FileLock, JournalHandle, LockHeld
 from .repo import ConflictError, Repository
 from .scheduler import FinishResult, ScheduleError, SlurmScheduler
 from .session import Session, open
@@ -27,10 +36,13 @@ __all__ = [
     "AnnexStore", "make_pointer", "parse_pointer",
     "OutputConflict", "ProtectedOutputs", "WildcardOutputError",
     "normalize", "proper_prefixes",
+    "CrashInjected", "FaultPlan", "FaultRule",
+    "InjectedIOError", "InjectedSlurmError", "is_crash",
     "FS", "GPFS", "LOCAL_XFS", "NULL_FS", "FSProfile", "SimClock",
     "annex_key_for_bytes", "annex_key_for_file", "verify_annex_key",
     "JobDB", "job_spec",
     "RunFailed", "RunRecord", "rerun", "run", "run_spec", "spec_of",
+    "FileLock", "JournalHandle", "LockHeld",
     "ConflictError", "Repository",
     "FinishResult", "ScheduleError", "SlurmScheduler",
     # "open" stays importable explicitly but is NOT star-exported: a

@@ -33,8 +33,10 @@ from __future__ import annotations
 import hashlib
 import os
 import threading
+import time
 import uuid
 
+from .faults import is_crash, owner_is_dead
 from .fsio import FS
 from .hashing import make_annex_key, parse_annex_key, verify_annex_key
 
@@ -66,12 +68,18 @@ class AnnexStore:
     paper's second-tier-storage scenario (§2.6).
     """
 
-    def __init__(self, root: str, fs: FS, name: str = "local"):
+    def __init__(self, root: str, fs: FS, name: str = "local",
+                 sweep_on_open: bool = True):
         self.root = root
         self.fs = fs
         self.name = name
         self._known_lock = threading.Lock()
         self._known: set[str] = set()
+        if sweep_on_open and os.path.isdir(root):
+            # self-heal: an interrupted ingest leaves tmp-* files forever;
+            # opening the store reclaims the ones whose writer is provably
+            # dead (pid/incarnation-token guard, age fallback) — DESIGN §10
+            self.sweep_stale_tmps()
 
     def _path(self, key: str) -> str:
         _, hx = parse_annex_key(key)
@@ -113,7 +121,62 @@ class AnnexStore:
 
     # -- writes ---------------------------------------------------------
     def _tmp_path(self) -> str:
-        return os.path.join(self.root, f"tmp-{uuid.uuid4().hex}")
+        # owner-stamped (pid + FS incarnation token): the crash sweep can
+        # prove the writer is dead instead of guessing by age alone
+        token = getattr(self.fs, "token", None) or "0"
+        return os.path.join(
+            self.root, f"tmp-{os.getpid()}-{token}-{uuid.uuid4().hex[:12]}"
+        )
+
+    @staticmethod
+    def _tmp_owner(name: str) -> tuple[int | None, str | None]:
+        """(pid, token) from a tmp name; (None, None) for legacy
+        ``tmp-<hex>`` names (age-guard only)."""
+        parts = name.split("-")
+        if len(parts) >= 4 and parts[1].isdigit():
+            return int(parts[1]), parts[2]
+        return None, None
+
+    def _stale_tmps(self, max_age_s: float | None) -> list[str]:
+        if not os.path.isdir(self.root):
+            return []
+        out = []
+        for name in self.fs.listdir(self.root):
+            if not name.startswith("tmp-"):
+                continue
+            path = os.path.join(self.root, name)
+            pid, token = self._tmp_owner(name)
+            stale = pid is not None and owner_is_dead(pid, token)
+            if not stale and max_age_s is not None:
+                try:
+                    stale = (time.time() - os.stat(path).st_mtime) > max_age_s
+                except OSError:
+                    continue  # swept by a racing opener
+            if not stale and max_age_s is None and pid is None:
+                stale = True  # forced sweep: legacy names have no owner proof
+            if stale:
+                out.append(path)
+        return out
+
+    def count_stale_tmps(self, max_age_s: float | None = 3600.0) -> int:
+        """Report-only probe for verify(); charges the same listdir."""
+        return len(self._stale_tmps(max_age_s))
+
+    def sweep_stale_tmps(self, max_age_s: float | None = 3600.0) -> int:
+        """Unlink leaked ingest tmp files whose writer is provably dead
+        (dead pid / dead incarnation token) or whose mtime exceeds
+        ``max_age_s`` (``None`` = no age sweeping: owner-proof only, except
+        unprovable legacy names which a forced ``None`` sweep does take).
+        Every unlink is charged through the FS cost model. Returns the
+        count swept."""
+        swept = 0
+        for path in self._stale_tmps(max_age_s):
+            try:
+                self.fs.unlink(path)
+                swept += 1
+            except OSError:
+                pass  # a racing sweeper got it first
+        return swept
 
     def _commit(self, tmp: str, key: str) -> None:
         """Atomically publish a fully written tmp file as ``key``.
@@ -132,7 +195,9 @@ class AnnexStore:
         try:
             self.fs.write_bytes(tmp, data)
             self._commit(tmp, key)
-        except BaseException:
+        except BaseException as e:
+            if is_crash(e):
+                raise  # a dead process runs no cleanup: the tmp leaks
             self.fs.unlink(tmp)
             raise
 
@@ -153,7 +218,9 @@ class AnnexStore:
                         yield c
 
                 size = self.fs.write_chunks(tmp, hashing())
-        except BaseException:
+        except BaseException as e:
+            if is_crash(e):
+                raise  # a dead process runs no cleanup: the tmp leaks
             self.fs.unlink(tmp)
             raise
         return tmp, h.hexdigest(), size
@@ -169,7 +236,9 @@ class AnnexStore:
             if make_annex_key(hx, size) != key:
                 raise IOError(f"content of {src} does not match key {key}")
             self._commit(tmp, key)
-        except BaseException:
+        except BaseException as e:
+            if is_crash(e):
+                raise
             self.fs.unlink(tmp)
             raise
 
@@ -187,7 +256,9 @@ class AnnexStore:
                 self.fs.unlink(tmp)
                 return key
             self._commit(tmp, key)
-        except BaseException:
+        except BaseException as e:
+            if is_crash(e):
+                raise
             self.fs.unlink(tmp)
             raise
         return key

@@ -1,0 +1,301 @@
+"""Deterministic fault injection (DESIGN.md §10).
+
+The paper's claim — many concurrent Slurm jobs safely sharing one data
+repository — is only believable if it survives what real HPC does to a
+process: parallel filesystems throw transient EIO, `sacct`/`sbatch` fail
+under controller load, nodes die (NODE_FAIL), jobs are preempted, and the
+finish process itself gets killed mid-batch. This module makes every one of
+those failures a *first-class, seeded, replayable event* so the recovery
+subsystem (:mod:`repro.core.recovery`) can be property-tested: for every
+named crash point, killing there and recovering must yield a consistent
+repository.
+
+A :class:`FaultPlan` is declarative: a list of :class:`FaultRule`\\ s
+("EIO on every 50th read", "fail the 3rd rename under objects/", "sacct
+returns a transient error twice then succeeds", "the 2nd task started dies
+with NODE_FAIL") plus a ``crash_at`` map of named :dfn:`crash points`
+("finish:after-publish" -> crash on the 1st hit). The plan is threaded
+through :class:`~repro.core.fsio.FS` and
+:class:`~repro.core.slurm.LocalSlurmCluster`; the scheduler and the pack
+layer mark their phase boundaries with ``fs.crash_point(name)``.
+
+Crash semantics
+---------------
+A fired crash point (or a rule with ``error="crash"``) raises
+:class:`CrashInjected` — a ``BaseException`` — and flips the plan into the
+*crashed* state: from then on **every** injected filesystem and Slurm
+operation raises ``CrashInjected`` too. That models a hard kill honestly:
+``except``/``finally`` cleanup handlers in the dying "process" cannot
+unlink tmp files, release lock files, or close job rows, because their own
+I/O is already dead. Cleanup handlers that must survive *soft* errors but
+not crashes re-raise via :func:`is_crash` before cleaning up.
+
+Liveness tokens
+---------------
+Real crash recovery asks "is the owner of this lock / tmp file still
+alive?" — normally a pid probe. A *simulated* crash happens inside a live
+process, so pid-liveness alone cannot see it. Every ``FS`` therefore
+carries an incarnation ``token`` registered in a process-wide live set;
+a plan's crash unregisters the tokens of every FS it was attached to.
+:func:`owner_is_dead` then answers correctly for all three worlds: a
+genuinely dead pid, a dead simulated incarnation of this process, and a
+live owner (same or foreign process).
+"""
+from __future__ import annotations
+
+import fnmatch
+import os
+import random
+import threading
+import uuid
+from dataclasses import dataclass, field
+
+# -- liveness token registry -------------------------------------------------
+
+_TOKEN_LOCK = threading.Lock()
+_LIVE_TOKENS: set[str] = set()
+
+
+def new_token() -> str:
+    """Mint + register a live incarnation token (one per FS instance)."""
+    token = uuid.uuid4().hex[:12]
+    with _TOKEN_LOCK:
+        _LIVE_TOKENS.add(token)
+    return token
+
+
+def kill_token(token: str | None) -> None:
+    with _TOKEN_LOCK:
+        _LIVE_TOKENS.discard(token)
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True  # exists, owned by someone else
+    except (OverflowError, ValueError, TypeError):
+        return False
+    return True
+
+
+def owner_is_dead(pid, token=None) -> bool:
+    """Is the (pid, token) that stamped a lock/tmp file provably dead?
+
+    Dead iff the pid no longer exists, or the pid is *this* process but the
+    incarnation token is not in the live set (a simulated crash killed it —
+    or, conservatively false, a foreign same-pid-namespace writer; real
+    deployments distinguish hosts via the lock's heartbeat TTL instead).
+    A live foreign pid is never declared dead here — age/heartbeat rules
+    are the caller's cross-host fallback."""
+    if pid is None:
+        return False
+    if not _pid_alive(pid):
+        return True
+    if pid == os.getpid() and token is not None:
+        with _TOKEN_LOCK:
+            return token not in _LIVE_TOKENS
+    return False
+
+
+# -- exceptions --------------------------------------------------------------
+
+
+class CrashInjected(BaseException):
+    """A simulated hard process kill (kill -9 / NODE_FAIL of the client).
+
+    Subclasses ``BaseException`` so ordinary ``except Exception`` recovery
+    code never converts a simulated death into a handled error; cleanup
+    handlers that catch ``BaseException`` re-raise via :func:`is_crash`."""
+
+
+class InjectedIOError(IOError):
+    """A filesystem fault from a :class:`FaultRule` (modeled EIO)."""
+
+    def __init__(self, op: str, path: str, transient: bool = False):
+        super().__init__(5, f"injected {'transient ' if transient else ''}EIO during {op} of {path}")
+        self.op = op
+        self.path = path
+        self.transient = transient
+
+
+class InjectedSlurmError(RuntimeError):
+    """A Slurm CLI fault (sbatch/sacct failing under controller load)."""
+
+    def __init__(self, op: str, transient: bool = False):
+        super().__init__(f"injected {'transient ' if transient else ''}slurm failure in {op}")
+        self.op = op
+        self.transient = transient
+
+
+def is_crash(exc: BaseException) -> bool:
+    return isinstance(exc, CrashInjected)
+
+
+def is_transient(exc: BaseException) -> bool:
+    return bool(getattr(exc, "transient", False))
+
+
+# -- rules & plan ------------------------------------------------------------
+
+
+@dataclass
+class FaultRule:
+    """One declarative fault. ``op`` is the injection site:
+
+    filesystem  ``read | write | write-chunk | rename | unlink | listdir |
+                stat | exists`` (``write-chunk`` fires *mid-stream* inside
+                ``FS.write_chunks`` — a torn write),
+    slurm       ``sbatch | sacct | scancel``,
+    tasks       ``task`` — ``error`` names the injected terminal state
+                (``NODE_FAIL``, ``PREEMPTED``, ``TIMEOUT``, ``FAILED``).
+
+    Triggering: ``nth`` fires on exactly the nth matching call; ``every``
+    fires on each k-th; ``p`` fires with seeded probability; none of the
+    three = every matching call. ``times`` caps total fires. ``path`` is a
+    substring (or fnmatch glob) filter on the touched path. ``error`` is
+    ``"io"`` (default), ``"crash"``, or a task state name."""
+
+    op: str
+    path: str | None = None
+    nth: int | None = None
+    every: int | None = None
+    p: float | None = None
+    times: int | None = None
+    error: str = "io"
+    transient: bool = False
+    calls: int = 0
+    fires: int = 0
+
+    def _matches_path(self, path: str | None) -> bool:
+        if self.path is None:
+            return True
+        if path is None:
+            return False
+        if any(c in self.path for c in "*?["):
+            return fnmatch.fnmatch(path, self.path)
+        return self.path in path
+
+
+class FaultPlan:
+    """Seeded, declarative fault schedule shared by FS + cluster + scheduler.
+
+    Thread-safe: counters mutate under one lock (ingest workers inject
+    concurrently). ``record_points=True`` turns the plan into a crash-point
+    *recorder* — a clean run logs every boundary it passes in
+    ``crash_point_log``, which is how the crash-matrix test discovers the
+    full set of named points before killing at each one."""
+
+    def __init__(
+        self,
+        seed: int = 0,
+        rules: list[FaultRule] | tuple = (),
+        crash_at: dict[str, int] | None = None,
+        record_points: bool = False,
+        max_fs_retries: int = 4,
+        max_slurm_retries: int = 4,
+        backoff_base_s: float = 0.05,
+    ):
+        self.rng = random.Random(seed)
+        self.rules = list(rules)
+        self.crash_at = dict(crash_at or {})
+        self.record_points = record_points
+        self.max_fs_retries = max_fs_retries
+        self.max_slurm_retries = max_slurm_retries
+        self.backoff_base_s = backoff_base_s
+        self.crashed = False
+        self.crash_origin: str | None = None
+        self.crash_point_log: list[str] = []
+        self._point_hits: dict[str, int] = {}
+        self._attached_fs: list = []
+        self._lock = threading.Lock()
+
+    # -- wiring ---------------------------------------------------------
+    def attach_fs(self, fs) -> None:
+        with self._lock:
+            self._attached_fs.append(fs)
+
+    def backoff_s(self, attempt: int) -> float:
+        """Exponential backoff charge for retry attempt ``attempt``."""
+        return self.backoff_base_s * (2 ** attempt)
+
+    # -- firing ---------------------------------------------------------
+    def _check_crashed(self) -> None:
+        if self.crashed:
+            raise CrashInjected(self.crash_origin or "process already crashed")
+
+    def _fire(self, rule: FaultRule) -> bool:
+        """Count one matching call; decide (under the lock) whether the
+        rule fires on it."""
+        with self._lock:
+            rule.calls += 1
+            if rule.times is not None and rule.fires >= rule.times:
+                return False
+            if rule.nth is not None:
+                fire = rule.calls == rule.nth
+            elif rule.every is not None:
+                fire = rule.calls % rule.every == 0
+            elif rule.p is not None:
+                fire = self.rng.random() < rule.p
+            else:
+                fire = True
+            if fire:
+                rule.fires += 1
+            return fire
+
+    def _do_crash(self, origin: str) -> None:
+        with self._lock:
+            self.crashed = True
+            self.crash_origin = origin
+            dead = list(self._attached_fs)
+        for fs in dead:
+            kill_token(getattr(fs, "token", None))
+        raise CrashInjected(origin)
+
+    def on_fs(self, op: str, path: str, fs=None) -> None:
+        """FS injection hook: called before the real operation runs."""
+        self._check_crashed()
+        for rule in self.rules:
+            if rule.op != op or not rule._matches_path(path):
+                continue
+            if self._fire(rule):
+                if rule.error == "crash":
+                    self._do_crash(f"{op}:{path}")
+                raise InjectedIOError(op, path, transient=rule.transient)
+
+    def on_slurm(self, op: str) -> None:
+        """Slurm CLI injection hook (sbatch/sacct/scancel)."""
+        self._check_crashed()
+        for rule in self.rules:
+            if rule.op != op:
+                continue
+            if self._fire(rule):
+                if rule.error == "crash":
+                    self._do_crash(f"slurm:{op}")
+                raise InjectedSlurmError(op, transient=rule.transient)
+
+    def task_fate(self) -> str | None:
+        """Forced terminal state for the task now starting (rules with
+        ``op="task"``; ``error`` is the state name), or None to run it."""
+        self._check_crashed()
+        for rule in self.rules:
+            if rule.op != "task":
+                continue
+            if self._fire(rule):
+                return rule.error
+        return None
+
+    def crash_point(self, name: str, fs=None) -> None:
+        """A named phase boundary. Crashes when ``crash_at[name]`` hits
+        are reached; always appended to the log when recording."""
+        self._check_crashed()
+        with self._lock:
+            hits = self._point_hits.get(name, 0) + 1
+            self._point_hits[name] = hits
+            if self.record_points:
+                self.crash_point_log.append(name)
+        want = self.crash_at.get(name)
+        if want is not None and hits == want:
+            self._do_crash(name)

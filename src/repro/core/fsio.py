@@ -69,8 +69,11 @@ import hashlib
 import os
 import shutil
 import threading
+import uuid
 from contextlib import contextmanager
 from dataclasses import dataclass, field
+
+from . import faults as _faults
 
 _CHUNK = 1 << 20  # streaming quantum: charge/hash/copy granularity
 
@@ -216,14 +219,53 @@ class FS:
     counts that drive parallel-FS metadata degradation.
     """
 
-    def __init__(self, profile: FSProfile = NULL_FS, clock: SimClock | None = None):
+    def __init__(
+        self,
+        profile: FSProfile = NULL_FS,
+        clock: SimClock | None = None,
+        faults: "_faults.FaultPlan | None" = None,
+    ):
         self.profile = profile
         self.clock = clock or SimClock()
+        self.faults = faults
+        # incarnation token (DESIGN.md §10): stamped into lock files and tmp
+        # names so crash recovery can tell a dead owner from a live one even
+        # when the "dead" owner was a simulated incarnation of this process
+        self.token = _faults.new_token()
+        if faults is not None:
+            faults.attach_fs(self)
         self._stats_lock = threading.Lock()
         self._mkdir_lock = threading.Lock()
         self._rename_lock = threading.Lock()
         self.n_files = 0
         self._dir_entries: dict[str, int] = {}
+
+    # -- fault injection (§10) -----------------------------------------
+    def _fault(self, op: str, path: str) -> None:
+        """Injection gate, called before the real operation. Transient
+        faults are retried here with SimClock-charged exponential backoff
+        (the retry consults the plan again, so per-call counters advance
+        and an every-k rule lets the retry through); persistent faults and
+        crashes propagate."""
+        plan = self.faults
+        if plan is None:
+            return
+        attempt = 0
+        while True:
+            try:
+                plan.on_fs(op, path, self)
+                return
+            except _faults.InjectedIOError as e:
+                if not e.transient or attempt >= plan.max_fs_retries:
+                    raise
+                self.clock.charge(plan.backoff_s(attempt))
+                attempt += 1
+
+    def crash_point(self, name: str) -> None:
+        """Named phase boundary for the §10 crash matrix; no-op without a
+        fault plan."""
+        if self.faults is not None:
+            self.faults.crash_point(name, self)
 
     # -- directory pressure --------------------------------------------
     def _dir_of(self, path: str) -> str:
@@ -369,26 +411,38 @@ class FS:
 
     # -- operations ----------------------------------------------------
     def exists(self, path: str) -> bool:
+        if self.faults is not None:
+            self._fault("exists", path)
         self._meta(1, path)
         return os.path.exists(path)
 
     def isdir(self, path: str) -> bool:
+        if self.faults is not None:
+            self._fault("exists", path)
         self._meta(1, path)
         return os.path.isdir(path)
 
     def stat_size(self, path: str) -> int:
+        if self.faults is not None:
+            self._fault("stat", path)
         self._meta(1, path)
         return os.stat(path).st_size
 
     def stat_mtime(self, path: str) -> float:
+        if self.faults is not None:
+            self._fault("stat", path)
         self._meta(1, path)
         return os.stat(path).st_mtime
 
     def mkdir(self, path: str) -> None:
+        if self.faults is not None:
+            self._fault("write", path)
         self._meta(1, path)
         self._makedirs_counted(path)
 
     def listdir(self, path: str) -> list[str]:
+        if self.faults is not None:
+            self._fault("listdir", path)
         # enumeration cost scales with the listed directory's own entry count
         self._charge_meta(1, os.path.abspath(path))
         return sorted(os.listdir(path))
@@ -396,7 +450,7 @@ class FS:
     def write_bytes(self, path: str, data: bytes) -> None:
         self.write_chunks(path, (data,))
 
-    def write_chunks(self, path: str, chunks) -> int:
+    def write_chunks(self, path: str, chunks, fsync: bool = False) -> int:
         """Streamed write: one open/close plus the total bytes, never
         holding more than one chunk in memory — ``write_bytes`` is the
         single-chunk special case, so the charging protocol (2 meta ops,
@@ -404,6 +458,9 @@ class FS:
         stream stays open (and charged per chunk) for the real duration of
         the loop, so concurrent writers contend under the §9 model.
         Returns the byte count written."""
+        faults = self.faults
+        if faults is not None:
+            self._fault("write", path)
         self._ensure_parent(path)
         # claim the path atomically (probe + create + count under one
         # lock): two workers writing the same path — e.g. put_blob of
@@ -418,12 +475,45 @@ class FS:
         self._meta(2, path)
         with open(path, "wb") as f, self.transfer_stream(True) as charge:
             for c in chunks:
+                if faults is not None:
+                    # torn-write site: a fault here leaves a partial file
+                    self._fault("write-chunk", path)
                 f.write(c)
                 total += len(c)
                 charge(len(c))
+            if fsync:
+                f.flush()
+                os.fsync(f.fileno())
+                self._meta(1, path)
         return total
 
+    def write_atomic(self, path: str, data: bytes, fsync: bool = True) -> None:
+        """Durable publish: write to a unique sibling tmp (optionally
+        fsynced) and rename onto ``path`` — the §10 journal write protocol.
+        Readers never observe a torn file; a crash leaves only a tmp."""
+        tmp = f"{path}.tmp-{os.getpid()}-{uuid.uuid4().hex[:6]}"
+        self.write_chunks(tmp, (data,), fsync=fsync)
+        self.rename(tmp, path)
+
+    def create_exclusive(self, path: str, data: bytes) -> None:
+        """Atomic O_CREAT|O_EXCL create+write+fsync — the lock-file
+        primitive (§10). Raises ``FileExistsError`` if ``path`` exists."""
+        if self.faults is not None:
+            self._fault("write", path)
+        self._ensure_parent(path)
+        fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        try:
+            os.write(fd, data)
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+        self._meta(2, path)
+        self._xfer(len(data), write=True)
+        self._track_new_file(path, False)
+
     def read_bytes(self, path: str) -> bytes:
+        if self.faults is not None:
+            self._fault("read", path)
         with open(path, "rb") as f:
             data = f.read()
         self._meta(2, path)
@@ -436,6 +526,8 @@ class FS:
         each against the read pool while the session is open — the §9
         primitive the single-pass annex ingest is built on. Charges the
         same 2 meta ops + size bytes a ``read_bytes`` of the file would."""
+        if self.faults is not None:
+            self._fault("read", path)
         self._meta(2, path)
         with open(path, "rb") as f, self.transfer_stream(False) as charge:
 
@@ -464,6 +556,8 @@ class FS:
         """Positioned read (the pack-file read path): open + seek + read of
         ``nbytes``. Charged like :meth:`read_bytes` of the range — the seek
         itself is free; only the bytes actually transferred cost time."""
+        if self.faults is not None:
+            self._fault("read", path)
         with open(path, "rb") as f:
             f.seek(offset)
             data = f.read(nbytes)
@@ -476,6 +570,8 @@ class FS:
         return data
 
     def append_text(self, path: str, text: str) -> None:
+        if self.faults is not None:
+            self._fault("write", path)
         existed = os.path.exists(path)
         self._ensure_parent(path)
         with open(path, "a") as f:
@@ -485,6 +581,8 @@ class FS:
         self._track_new_file(path, existed)
 
     def unlink(self, path: str) -> None:
+        if self.faults is not None:
+            self._fault("unlink", path)
         self._meta(1, path)
         if os.path.exists(path):
             os.unlink(path)
@@ -494,6 +592,10 @@ class FS:
                 self._dir_entries[d] = max(0, self._dir_entries.get(d, 0) - 1)
 
     def rename(self, src: str, dst: str) -> None:
+        if self.faults is not None:
+            # matched against the destination: "fail the 3rd rename under
+            # objects/" targets where the publish lands
+            self._fault("rename", dst)
         self._meta(1, src)
         self._meta(1, dst)
         self._ensure_parent(dst)
@@ -516,6 +618,9 @@ class FS:
         sessions held open for the real duration, so concurrent copies
         contend under the §9 model; a lone copy charges exactly the old
         read + write transfer. Returns bytes copied."""
+        if self.faults is not None:
+            self._fault("read", src)
+            self._fault("write", dst)
         existed = os.path.exists(dst)
         self._ensure_parent(dst)
         n = 0

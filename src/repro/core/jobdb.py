@@ -229,6 +229,42 @@ class JobDB:
         ).fetchall()
         return [_to_dict(r) for r in rows]
 
+    def all_jobs(self) -> list[dict]:
+        rows = self._conn().execute(
+            "SELECT * FROM jobs ORDER BY job_id"
+        ).fetchall()
+        return [_to_dict(r) for r in rows]
+
+    def unsubmitted_open_jobs(self) -> list[dict]:
+        """Rows a crash left open with no slurm id (died between
+        ``add_jobs`` and ``set_slurm_ids``): unqueryable orphans, the §10
+        sweep target."""
+        rows = self._conn().execute(
+            "SELECT * FROM jobs WHERE status='scheduled' AND slurm_id IS NULL"
+            " ORDER BY job_id"
+        ).fetchall()
+        return [_to_dict(r) for r in rows]
+
+    def orphan_protection(self) -> list[int]:
+        """Job ids owning protection rows despite no longer being open.
+        ``close_job`` releases protection in the same transaction as the
+        status flip, so these only arise from out-of-band divergence — the
+        §10 fsck cross-check reports (and can release) them."""
+        rows = self._conn().execute(
+            "SELECT DISTINCT p.job_id FROM protected p JOIN jobs j"
+            " ON p.job_id = j.job_id WHERE j.status != 'scheduled'"
+        ).fetchall()
+        return [r[0] for r in rows]
+
+    def release_protection(self, job_ids: list[int]) -> None:
+        if not job_ids:
+            return
+        with self._conn() as c:
+            c.executemany(
+                "DELETE FROM protected WHERE job_id=?",
+                [(j,) for j in job_ids],
+            )
+
     def n_protected(self) -> int:
         return self._conn().execute(
             "SELECT COUNT(*) FROM protected WHERE kind='name'"

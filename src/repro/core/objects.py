@@ -44,6 +44,7 @@ from collections import OrderedDict
 from .fsio import FS
 from .hashing import sha256_bytes
 from .packs import PACK_DIR, PackManager
+from .recovery import FileLock
 
 KINDS = ("blob", "tree", "commit")
 
@@ -71,6 +72,12 @@ class ObjectStore:
         self.packs = PackManager(os.path.join(root, PACK_DIR))
         self._lock = threading.Lock()
         self._repack_lock = threading.Lock()  # one compaction at a time
+        # cross-process/crash-boundary counterpart of _repack_lock: a §10
+        # FileLock beside the store; a crash mid-repack leaves it behind and
+        # the next acquire detects the dead owner and breaks it
+        self._repack_lock_path = os.path.join(
+            os.path.dirname(root), "locks", "repack.lock"
+        )
         self._caches_enabled = True
         self._known: set[str] = set()
         # oid -> canonical payload bytes; parsed per hit so returned dicts
@@ -332,10 +339,14 @@ class ObjectStore:
         bounded at ~``2 x max_packs + 2`` forever and never re-crosses the
         degradation threshold the packs exist to avoid (``max_packs=None``
         disables consolidation). One compaction runs at a time
-        (``_repack_lock``); readers racing the unlink storm retry through
-        the pack index (see ``get``). Returns stats."""
+        (``_repack_lock`` for threads, a crash-safe :class:`FileLock` for
+        processes — a stale lock from a crashed compactor is detected and
+        broken, so a crash never disables compaction permanently); readers
+        racing the unlink storm retry through the pack index (see ``get``).
+        Returns stats."""
         with self._repack_lock:
-            return self._repack_locked(delete_loose, max_packs)
+            with FileLock(self.fs, self._repack_lock_path):
+                return self._repack_locked(delete_loose, max_packs)
 
     def _repack_locked(self, delete_loose: bool, max_packs: int | None) -> dict:
         fs = self.fs
@@ -380,17 +391,22 @@ class ObjectStore:
             for pid in consolidated:
                 yield from self.packs.read_pack_objects(pid, fs)
 
+        fs.crash_point("repack:planned")
         pack_id = None
         if to_pack or consolidated:
             pack_id = self.packs.add_pack(frames(), fs)
         # the pack (and index) is published: from here on every object is
         # served from it, and losing the loose/old-pack copies can no
         # longer lose data
+        fs.crash_point("repack:pack-published")
         unlinked = phantoms = 0
         if delete_loose:
             for path in loose_paths:
                 fs.unlink(path)
                 unlinked += 1
+                if unlinked == 1:
+                    # §10: the pack is live, the loose copies half-gone
+                    fs.crash_point("repack:mid-unlink")
             for shard in self._shard_dirs():
                 phantoms += fs.purge_phantom_entries(shard)
             for pid in consolidated:

@@ -48,6 +48,7 @@ import threading
 import time
 import uuid
 
+from .faults import is_crash
 from .fsio import FS
 
 PACK_DIR = "pack"
@@ -304,7 +305,9 @@ class PackManager:
         )
         try:
             fs.write_chunks(tmp_data, stream())
-        except BaseException:
+        except BaseException as e:
+            if is_crash(e):
+                raise  # a dead process runs no cleanup: sweep_garbage's job
             fs.unlink(tmp_data)  # no half-written tmp left behind
             raise
         if not index:
@@ -312,6 +315,9 @@ class PackManager:
             return None
         pack_id = digest.hexdigest()[:16]
         fs.rename(tmp_data, self._data_path(pack_id))
+        # §10 crash matrix: data renamed into place, index not yet published
+        # — the sweep_garbage invariant window
+        fs.crash_point("repack:data-renamed")
         # publish: the index appears atomically or not at all
         tmp = self._index_path(pack_id) + ".tmp"
         fs.write_bytes(

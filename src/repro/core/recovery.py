@@ -1,0 +1,595 @@
+"""Crash recovery: locks, intent journals, recover(), verify() (DESIGN.md §10).
+
+The scheduler's durability story before this module was *ordering*: publish
+the ref before closing the job, write the pack before unlinking loose
+objects. Ordering bounds the damage of a crash but doesn't clean it up — a
+finish process killed mid-batch leaves open job rows whose commits exist but
+were never published, annex ``tmp-*`` files, a held lock file, and (worst) a
+window between ref publish and job close where a naive re-finish would
+commit the same job twice. This module closes that story:
+
+``FileLock``
+    An O_CREAT|O_EXCL lock file stamped with ``(pid, incarnation token,
+    heartbeat timestamp)``. Staleness is decided by
+    :func:`repro.core.faults.owner_is_dead` (dead pid, or dead simulated
+    incarnation of this process) with a heartbeat TTL as the cross-host
+    fallback; stale locks are broken automatically on acquire. Used for the
+    finish publish phase (``refs``) and for ``repack`` — a crash can no
+    longer disable compaction or ref publication forever.
+
+Intent journals
+    ``submit_many`` and ``finish`` write a journal file under
+    ``.repro/journal/`` before their effects start landing (header via
+    fsynced tmp+rename, one JSONL line appended per applied step, unlink on
+    completion). The finish journal records each job's commit oid *before*
+    the ref is published, so replay can distinguish the three crash windows:
+    committed-not-published (publish from the journal), published-not-closed
+    (close the row), and not-yet-committed (re-run finish for exactly those
+    jobs — re-ingest is idempotent via content addressing, and the orphaned
+    pre-crash commit, if any, is unreachable garbage rather than a duplicate
+    published record). That is the exactly-once guarantee.
+
+``recover(session)``
+    Break stale locks, sweep dead-owner annex tmps, replay journals, close
+    unsubmitted orphan rows, release orphaned output protection.
+
+``verify(session)``
+    fsck: cross-checks refs ↔ object store ↔ annex ↔ jobdb and reports
+    divergence (broken refs, missing annex objects, duplicate slurm
+    records, orphan rows/protection); ``repair=True`` fixes what can be
+    fixed without inventing data.
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import time
+from typing import TYPE_CHECKING
+
+from .faults import owner_is_dead
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids import cycles
+    from .fsio import FS
+    from .session import Session
+
+JOURNAL_DIR = "journal"
+LOCKS_DIR = "locks"
+
+
+class LockHeld(RuntimeError):
+    """The lock is held by a live owner and the wait budget ran out."""
+
+
+class FileLock:
+    """Crash-safe advisory lock: an exclusive file stamped with owner
+    identity. Complements (never replaces) the in-process locks — threads
+    serialize on ``Repository.ref_lock`` / ``ObjectStore._repack_lock``
+    first, so this file only arbitrates across processes and across crash
+    boundaries.
+
+    Staleness: owner pid dead, owner's incarnation token dead (simulated
+    crash in this process), an unparseable payload (torn by a crash), or a
+    heartbeat older than ``ttl_s`` (cross-host fallback; long holders call
+    :meth:`beat`). Stale locks are broken and re-acquired atomically —
+    ``create_exclusive`` arbitrates racing breakers."""
+
+    _GONE = object()  # sentinel: lock file vanished between probe and read
+
+    def __init__(self, fs: "FS", path: str, ttl_s: float | None = 600.0):
+        self.fs = fs
+        self.path = path
+        self.ttl_s = ttl_s
+        self._held = False
+
+    def _payload(self) -> bytes:
+        return json.dumps({
+            "pid": os.getpid(),
+            "token": getattr(self.fs, "token", None),
+            "host": socket.gethostname(),
+            "heartbeat": time.time(),
+        }).encode()
+
+    def read_info(self):
+        try:
+            data = self.fs.read_bytes(self.path)
+        except FileNotFoundError:
+            return self._GONE
+        try:
+            info = json.loads(data)
+            return info if isinstance(info, dict) else None
+        except (ValueError, UnicodeDecodeError):
+            return None  # torn payload -> crashed writer -> stale
+
+    def is_stale(self, info) -> bool:
+        if info is self._GONE:
+            return False
+        if info is None:
+            return True
+        if owner_is_dead(info.get("pid"), info.get("token")):
+            return True
+        hb = info.get("heartbeat")
+        if self.ttl_s is not None and isinstance(hb, (int, float)):
+            return (time.time() - hb) > self.ttl_s
+        return False
+
+    def break_if_stale(self) -> bool:
+        """Recovery sweep entry: break the lock iff its owner is dead."""
+        info = self.read_info()
+        if info is self._GONE or not self.is_stale(info):
+            return False
+        self.break_lock()
+        return True
+
+    def break_lock(self) -> None:
+        try:
+            self.fs.unlink(self.path)
+        except FileNotFoundError:
+            pass
+
+    def acquire(self, wait_s: float = 30.0, poll_s: float = 0.02) -> "FileLock":
+        deadline = time.monotonic() + wait_s
+        while True:
+            try:
+                self.fs.create_exclusive(self.path, self._payload())
+                self._held = True
+                return self
+            except FileExistsError:
+                info = self.read_info()
+                if info is self._GONE:
+                    continue  # released between probe and read: retry now
+                if self.is_stale(info):
+                    self.break_lock()
+                    continue
+                if time.monotonic() >= deadline:
+                    raise LockHeld(
+                        f"{self.path} held by pid {info.get('pid')}"
+                        f" on {info.get('host')}"
+                    ) from None
+                time.sleep(poll_s)
+
+    def beat(self) -> None:
+        """Refresh the heartbeat (long-held locks: repack of a huge store)."""
+        if self._held:
+            self.fs.write_atomic(self.path, self._payload(), fsync=False)
+
+    def release(self) -> None:
+        if self._held:
+            self._held = False
+            try:
+                self.fs.unlink(self.path)
+            except FileNotFoundError:
+                pass
+            except Exception:
+                # release runs during exception unwind: it must not mask the
+                # error that got us here, and a lock left behind by a failed
+                # charged unlink would wedge the next holder until the TTL.
+                # Raw best-effort fallback — an injected hard crash is a
+                # BaseException and still propagates, keeping the lock held
+                # exactly like a dead process would.
+                try:
+                    os.unlink(self.path)
+                except OSError:
+                    pass
+
+    def __enter__(self) -> "FileLock":
+        return self.acquire()
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+# -- intent journal ----------------------------------------------------------
+
+
+def _journal_dir(repro_dir: str) -> str:
+    return os.path.join(repro_dir, JOURNAL_DIR)
+
+
+class JournalHandle:
+    """One in-flight batch's journal file. The header line is published
+    atomically (fsynced tmp+rename) *before* any effect of the batch lands;
+    per-step lines are appended as each effect is applied; :meth:`done`
+    retires the journal. Present journal file == possibly-interrupted batch."""
+
+    _seq = 0
+
+    def __init__(self, fs: "FS", path: str):
+        self.fs = fs
+        self.path = path
+
+    @classmethod
+    def begin(cls, fs: "FS", repro_dir: str, kind: str, header: dict) -> "JournalHandle":
+        cls._seq += 1
+        name = (
+            f"{kind}-{int(time.time() * 1000):013d}-{os.getpid()}"
+            f"-{cls._seq:04d}.jsonl"
+        )
+        path = os.path.join(_journal_dir(repro_dir), name)
+        line = json.dumps({"kind": kind, **header}, sort_keys=True) + "\n"
+        fs.write_atomic(path, line.encode(), fsync=True)
+        return cls(fs, path)
+
+    def append(self, record: dict) -> None:
+        self.fs.append_text(self.path, json.dumps(record, sort_keys=True) + "\n")
+
+    def done(self) -> None:
+        try:
+            self.fs.unlink(self.path)
+        except FileNotFoundError:
+            pass
+
+
+def list_journals(fs: "FS", repro_dir: str) -> list[str]:
+    d = _journal_dir(repro_dir)
+    if not os.path.isdir(d):
+        return []
+    return [os.path.join(d, n) for n in fs.listdir(d) if n.endswith(".jsonl")]
+
+
+def read_journal(fs: "FS", path: str) -> tuple[dict | None, list[dict]]:
+    """(header, entries). A torn trailing line (the crash interrupted an
+    append) is skipped — its effect never happened or will be re-derived.
+    A torn/missing header returns (None, [])."""
+    try:
+        raw = fs.read_bytes(path)
+    except FileNotFoundError:
+        return None, []
+    records = []
+    for line in raw.split(b"\n"):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except ValueError:
+            continue  # torn write: drop
+        if isinstance(rec, dict):
+            records.append(rec)
+    if not records or "kind" not in records[0]:
+        return None, []
+    return records[0], records[1:]
+
+
+# -- recover -----------------------------------------------------------------
+
+
+def recover(
+    session: "Session",
+    close_unsubmitted: bool = True,
+    max_tmp_age_s: float | None = 3600.0,
+) -> dict:
+    """Bring the repository back to a consistent state after a crash.
+    Idempotent; cheap when there is nothing to do. See module docstring
+    for the exactly-once argument. Returns a report dict."""
+    repo = session.repo
+    fs = repo.fs
+    sched = session.scheduler
+    db = sched.db
+    report = {
+        "locks_broken": 0,
+        "stale_tmps_swept": 0,
+        "journals_replayed": 0,
+        "slurm_ids_recovered": 0,
+        "commits_republished": 0,
+        "jobs_refinished": 0,
+        "jobs_closed_unsubmitted": 0,
+        "protection_released": 0,
+        "errors": [],
+    }
+    # 1. stale locks — before journal replay, which needs to take them
+    locks_dir = os.path.join(repo.repro_dir, LOCKS_DIR)
+    if os.path.isdir(locks_dir):
+        for name in fs.listdir(locks_dir):
+            if not name.endswith(".lock"):
+                continue
+            if FileLock(fs, os.path.join(locks_dir, name)).break_if_stale():
+                report["locks_broken"] += 1
+    # 2. dead-owner annex tmps (local store + remotes)
+    for store in [repo.annex] + list(repo._remotes):
+        report["stale_tmps_swept"] += store.sweep_stale_tmps(
+            max_age_s=max_tmp_age_s
+        )
+    # 3. journals, oldest first (names sort by timestamp)
+    for path in sorted(list_journals(fs, repo.repro_dir)):
+        header, entries = read_journal(fs, path)
+        ok = True
+        if header is None:
+            pass  # header never landed: the batch had no effects yet
+        elif header.get("kind") == "submit":
+            _replay_submit(db, header, entries, report)
+        elif header.get("kind") == "finish":
+            ok = _replay_finish(session, header, entries, report)
+        if ok:
+            fs.unlink(path)
+            report["journals_replayed"] += 1
+    # 4. orphan rows a journal never covered (crash before the journal, or
+    # pre-journal databases)
+    if close_unsubmitted:
+        for row in db.unsubmitted_open_jobs():
+            db.close_job(row["job_id"], status="closed-unsubmitted")
+            report["jobs_closed_unsubmitted"] += 1
+    # 5. protection owned by rows that are no longer open
+    orphans = db.orphan_protection()
+    if orphans:
+        db.release_protection(orphans)
+        report["protection_released"] += len(orphans)
+    return report
+
+
+def _replay_submit(db, header: dict, entries: list[dict], report: dict) -> None:
+    """Crash window: between sbatch calls and the batched set_slurm_ids.
+    Every journaled (job_id, slurm_id) pair IS submitted — persist it (the
+    UPDATE is idempotent). Header-listed jobs with no journaled pair never
+    reached sbatch — close them, releasing their output protection."""
+    pairs = [
+        (e["job_id"], e["slurm_id"])
+        for e in entries
+        if "job_id" in e and "slurm_id" in e
+    ]
+    if pairs:
+        db.set_slurm_ids(pairs)
+        report["slurm_ids_recovered"] += len(pairs)
+    for job_id in header.get("job_ids", ()):
+        row = db.get(job_id)
+        if row and row["status"] == "scheduled" and row["slurm_id"] is None:
+            db.close_job(job_id, status="closed-unsubmitted")
+            report["jobs_closed_unsubmitted"] += 1
+
+
+def _replay_finish(session: "Session", header: dict, entries: list[dict],
+                   report: dict) -> bool:
+    """Exactly-once finish replay. Per journaled entry (written after the
+    commit object existed, before the ref moved):
+
+      row closed                  -> done pre-crash, skip;
+      commit exists, ref at it    -> publish landed, just close the row;
+      commit exists, ref at its   -> publish from the journal — never
+        parent                       recommit;
+      otherwise                   -> fall through to a re-finish.
+
+    Jobs with no (usable) entry are re-finished through the normal path —
+    their ingest work is deduplicated by content addressing, and any
+    pre-crash commit object that existed but wasn't journaled is
+    unreachable garbage, not a published duplicate. Returns False when the
+    re-finish couldn't run (e.g. the cluster no longer knows the jobs), in
+    which case the journal is kept for a later recover()."""
+    repo = session.repo
+    sched = session.scheduler
+    db = sched.db
+    flags = header.get("flags", {})
+    branch = header.get("branch")
+    octopus_done = any("octopus" in e for e in entries)
+    branch_names: list[str] = []
+    for e in entries:
+        if "octopus" in e:
+            continue
+        jid = e.get("job_id")
+        commit = e.get("commit")
+        job_branch = e.get("job_branch")
+        if job_branch:
+            branch_names.append(job_branch)
+        row = db.get(jid) if jid is not None else None
+        if row is None or row["status"] != "scheduled":
+            continue
+        if not commit or not repo.objects.has(commit):
+            continue  # commit never landed: re-finish below
+        if job_branch:
+            # per-job-branch mode: the branch roots at the shared base and
+            # only this job ever publishes it
+            if repo.branch_head(job_branch) != commit:
+                repo.set_branch(job_branch, commit)
+            db.close_job(jid, status="finished")
+            report["commits_republished"] += 1
+        else:
+            head = repo.branch_head(branch)
+            parents = repo.objects.get_commit(commit).get("parents", [])
+            if head == commit:
+                db.close_job(jid, status="finished")
+                report["commits_republished"] += 1
+            elif head in parents:
+                repo.set_branch(branch, commit)
+                db.close_job(jid, status="finished")
+                report["commits_republished"] += 1
+            # else: the chain advanced past other commits first — this
+            # journaled commit can't fast-forward; re-finish the job
+    remaining = [
+        j["job_id"] for j in header.get("jobs", ())
+        if (db.get(j["job_id"]) or {}).get("status") == "scheduled"
+    ]
+    if remaining:
+        try:
+            res = sched.finish(
+                job_ids=remaining,
+                close_failed_jobs=flags.get("close_failed_jobs", False),
+                commit_failed_jobs=flags.get("commit_failed_jobs", False),
+                branches=flags.get("branches", False),
+                octopus=False,  # merged below, with the replayed branches
+                engine=flags.get("engine", "incremental"),
+                data_plane=flags.get("data_plane", "fused"),
+            )
+        except Exception as e:
+            report["errors"].append(f"re-finish of jobs {remaining}: {e}")
+            return False
+        report["jobs_refinished"] += len(remaining)
+        branch_names += [r.branch for r in res if r.branch]
+    if flags.get("octopus") and branch_names and not octopus_done:
+        heads = {
+            h for h in (repo.branch_head(b) for b in branch_names)
+            if h is not None
+        }
+        head_commit = repo.head_commit()
+        merged = (
+            set(repo.objects.get_commit(head_commit).get("parents", []))
+            if head_commit else set()
+        )
+        if heads and not heads <= merged:
+            repo.merge_octopus(
+                sorted(set(branch_names)),
+                message=(
+                    f"octopus merge of {len(set(branch_names))} slurm jobs"
+                    " (recovered)"
+                ),
+            )
+    return True
+
+
+# -- verify (fsck) -----------------------------------------------------------
+
+_DIVERGENCE_KINDS = {
+    "broken-ref",
+    "missing-commit",
+    "missing-annex",
+    "duplicate-record",
+    "orphan-job",
+    "orphan-protection",
+}
+
+
+def verify(session: "Session", repair: bool = False) -> dict:
+    """Cross-check jobdb ↔ refs ↔ object store ↔ annex (``repro fsck``).
+
+    Reports issues as ``{"kind", "detail", ...}`` dicts; ``divergence``
+    counts the ones that mean the stores disagree (stale tmps and pending
+    journals are warnings — recover() owns those). ``repair=True`` fixes
+    what is safe: re-ingests a missing annex object from an intact worktree
+    copy, closes orphan rows, releases orphan protection, sweeps dead tmps.
+    Never invents data — a missing annex object with no worktree copy stays
+    reported."""
+    from .records import RunRecord  # local: records -> repo -> recovery
+
+    repo = session.repo
+    fs = repo.fs
+    db = session.scheduler.db
+    issues: list[dict] = []
+    repaired: list[dict] = []
+
+    def issue(kind: str, detail: str, **extra) -> dict:
+        rec = {"kind": kind, "detail": detail, **extra}
+        issues.append(rec)
+        return rec
+
+    # -- refs -> commits -> trees: walk every branch once ---------------
+    annex_keys: dict[str, str] = {}  # key -> an example path needing it
+    slurm_records: dict[int, list[str]] = {}
+    seen: set[str] = set()
+    n_commits = 0
+    for b in repo.branches():
+        head = repo.branch_head(b)
+        if head is None:
+            continue
+        if not repo.objects.has(head):
+            issue("broken-ref", f"branch {b} points at missing commit", branch=b,
+                  commit=head)
+            continue
+        frontier = [head]
+        while frontier:
+            oid = frontier.pop()
+            if oid in seen:
+                continue
+            seen.add(oid)
+            try:
+                commit = repo.objects.get_commit(oid)
+            except Exception:
+                issue("missing-commit", f"commit {oid[:12]} unreadable",
+                      commit=oid)
+                continue
+            n_commits += 1
+            rec = RunRecord.from_message(commit.get("message", ""))
+            if rec is not None and rec.slurm_job_id is not None:
+                slurm_records.setdefault(rec.slurm_job_id, []).append(oid)
+            frontier.extend(commit.get("parents", []))
+        try:
+            for path, entry in repo.tree_of(head).items():
+                if entry.get("t") == "annex":
+                    annex_keys.setdefault(entry["key"], path)
+        except Exception as e:
+            issue("broken-ref", f"tree of branch {b} unreadable: {e}", branch=b)
+
+    # exactly-once: one published record per slurm job, ever
+    for slurm_id, oids in sorted(slurm_records.items()):
+        if len(oids) > 1:
+            issue(
+                "duplicate-record",
+                f"slurm job {slurm_id} recorded by {len(oids)} commits",
+                slurm_id=slurm_id, commits=sorted(oids),
+            )
+
+    # -- annex presence across all stores --------------------------------
+    if annex_keys:
+        where = repo.whereis_many(sorted(annex_keys))
+        for key, path in sorted(annex_keys.items()):
+            if where.get(key):
+                continue
+            rec = issue("missing-annex", f"no store holds {key} ({path})",
+                        key=key, path=path)
+            if repair:
+                abspath = os.path.join(repo.root, path)
+                if os.path.isfile(abspath):
+                    try:
+                        if repo.hash_path_entry(path).get("key") == key:
+                            repo.annex.put_file(key, abspath)
+                            rec["repaired"] = True
+                            repaired.append(rec)
+                    except Exception:
+                        pass
+
+    # -- jobdb ------------------------------------------------------------
+    for row in db.unsubmitted_open_jobs():
+        rec = issue(
+            "orphan-job",
+            f"job {row['job_id']} open with no slurm id",
+            job_id=row["job_id"],
+        )
+        if repair:
+            db.close_job(row["job_id"], status="closed-unsubmitted")
+            rec["repaired"] = True
+            repaired.append(rec)
+    orphans = db.orphan_protection()
+    if orphans:
+        rec = issue(
+            "orphan-protection",
+            f"closed jobs {orphans} still hold output protection",
+            job_ids=orphans,
+        )
+        if repair:
+            db.release_protection(orphans)
+            rec["repaired"] = True
+            repaired.append(rec)
+
+    # -- crash litter (warnings: recover() owns these) -------------------
+    for path in list_journals(fs, repo.repro_dir):
+        issue("pending-journal", f"unreplayed journal {os.path.basename(path)}",
+              path=path)
+    for store in [repo.annex] + list(repo._remotes):
+        n = store.count_stale_tmps()
+        if n:
+            rec = issue("stale-tmp", f"{n} dead-owner tmp files in {store.name}",
+                        store=store.name, count=n)
+            if repair:
+                store.sweep_stale_tmps(max_age_s=None)
+                rec["repaired"] = True
+                repaired.append(rec)
+    locks_dir = os.path.join(repo.repro_dir, LOCKS_DIR)
+    if os.path.isdir(locks_dir):
+        for name in fs.listdir(locks_dir):
+            if not name.endswith(".lock"):
+                continue
+            lock = FileLock(fs, os.path.join(locks_dir, name))
+            info = lock.read_info()
+            if info is not FileLock._GONE and lock.is_stale(info):
+                rec = issue("stale-lock", f"dead-owner lock {name}", lock=name)
+                if repair:
+                    lock.break_lock()
+                    rec["repaired"] = True
+                    repaired.append(rec)
+
+    unrepaired = [i for i in issues if not i.get("repaired")]
+    return {
+        "divergence": sum(
+            1 for i in unrepaired if i["kind"] in _DIVERGENCE_KINDS
+        ),
+        "issues": issues,
+        "repaired": repaired,
+        "checked_commits": n_commits,
+        "checked_annex_keys": len(annex_keys),
+    }

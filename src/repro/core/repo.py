@@ -28,6 +28,7 @@ from .conflicts import proper_prefixes
 from .fsio import FS, NULL_FS, FSProfile, SimClock
 from .hashing import annex_key_for_bytes, make_annex_key
 from .objects import ObjectStore
+from .recovery import LOCKS_DIR, FileLock
 
 REPRO_DIR = ".repro"
 DEFAULT_ANNEX_THRESHOLD = 64 * 1024  # bytes; files >= this are annexed
@@ -69,8 +70,9 @@ class Repository:
         annex_threshold: int = DEFAULT_ANNEX_THRESHOLD,
         annex_patterns: tuple[str, ...] = (),
         dsid: str | None = None,
+        faults=None,
     ) -> "Repository":
-        fs = FS(profile, clock)
+        fs = FS(profile, clock, faults=faults)
         root = os.path.abspath(root)
         repro_dir = os.path.join(root, REPRO_DIR)
         os.makedirs(os.path.join(repro_dir, "objects"), exist_ok=True)
@@ -145,6 +147,16 @@ class Repository:
             self._remotes.append(
                 AnnexStore(store_root, self.fs, name=f"remote{len(self._remotes)}")
             )
+
+    def file_lock(self, name: str, ttl_s: float = 600.0) -> FileLock:
+        """Cross-process advisory lock under ``.repro/locks/`` (DESIGN §10).
+        Stale (dead-owner) locks are broken automatically on acquire, so a
+        crashed holder can never wedge the repository."""
+        return FileLock(
+            self.fs,
+            os.path.join(self.repro_dir, LOCKS_DIR, f"{name}.lock"),
+            ttl_s=ttl_s,
+        )
 
     # -- refs ----------------------------------------------------------
     def _ref_path(self, branch: str) -> str:

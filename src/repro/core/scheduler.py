@@ -30,8 +30,10 @@ import statistics
 from dataclasses import dataclass
 
 from . import slurm as S
+from .faults import is_crash, is_transient
 from .jobdb import JobDB, job_spec
 from .records import TITLE_SLURM, RunRecord, spec_of
+from .recovery import JournalHandle
 from .repo import REPRO_DIR, Repository
 from .spec import RunSpec, SpecError
 
@@ -85,6 +87,25 @@ class SlurmScheduler:
         if self.cli_startup_s:
             self.repo.fs.clock.charge(self.cli_startup_s)
 
+    def _retry_slurm(self, fn, what: str):
+        """Run one Slurm CLI interaction, retrying *transient* failures
+        (a flaky slurmctld / accounting DB — DESIGN §10) with exponential
+        backoff charged on the virtual clock. Permanent errors and injected
+        crashes propagate immediately; the retry budget is bounded so a
+        genuinely dead controller still surfaces as an error."""
+        plan = getattr(self.repo.fs, "faults", None)
+        retries = plan.max_slurm_retries if plan is not None else 3
+        base = plan.backoff_base_s if plan is not None else 0.05
+        attempt = 0
+        while True:
+            try:
+                return fn()
+            except BaseException as e:
+                if is_crash(e) or not is_transient(e) or attempt >= retries:
+                    raise
+                self.repo.fs.clock.charge(base * (2 ** attempt))
+                attempt += 1
+
     # ------------------------------------------------------------- submit
     def submit(self, spec: RunSpec) -> int:
         """Validate, conflict-check, stage, and submit one script spec.
@@ -129,6 +150,16 @@ class SlurmScheduler:
         # potentially expensive annex fetches, so a conflicting batch is
         # refused without moving any data
         job_ids = self.db.add_jobs(specs)
+        fs = self.repo.fs
+        fs.crash_point("submit:jobs-added")
+
+        # intent journal (DESIGN §10): each slurm id is journaled the moment
+        # sbatch hands it out, so a hard crash before the batched
+        # set_slurm_ids transaction no longer orphans running jobs —
+        # Session.recover() replays the pairs instead of guessing
+        jh = JournalHandle.begin(
+            fs, self.repo.repro_dir, "submit", {"job_ids": job_ids}
+        )
 
         submitted: list[tuple[int, int]] = []
         unlocked = False  # did the currently failing spec get its outputs unlocked?
@@ -140,9 +171,15 @@ class SlurmScheduler:
                 unlocked = True
                 for o in spec.outputs:
                     self.repo.unlock(o)
-                slurm_id = self._submit_one(spec, inputs)
+                slurm_id = self._retry_slurm(
+                    lambda: self._submit_one(spec, inputs), "sbatch"
+                )
+                jh.append({"job_id": job_ids[idx], "slurm_id": slurm_id})
+                fs.crash_point("submit:after-sbatch")
                 submitted.append((job_ids[idx], slurm_id))
-        except BaseException:
+        except BaseException as e:
+            if is_crash(e):
+                raise  # dead process: no cleanup; recover() replays the journal
             # submission failed: persist what did get submitted, then close
             # the failed + never-submitted jobs so their rows don't linger
             # and their protected outputs are released (and re-locked, if
@@ -154,8 +191,12 @@ class SlurmScheduler:
             if unlocked:
                 for o in specs[failed_idx].outputs:
                     self.repo.lock(o)
+            jh.done()  # the DB now tells the whole story
             raise
+        fs.crash_point("submit:before-set-ids")
         self.db.set_slurm_ids(submitted)  # one transaction for the batch
+        fs.crash_point("submit:after-set-ids")
+        jh.done()
         return job_ids
 
     def _fetch_inputs(self, spec: RunSpec) -> list[str]:
@@ -256,6 +297,8 @@ class SlurmScheduler:
         octopus: bool = False,
         engine: str = "incremental",
         data_plane: str = "fused",
+        job_ids: list[int] | None = None,
+        journal: bool = True,
     ) -> list[FinishResult]:
         """``datalad slurm-finish``: commit results of finished jobs.
 
@@ -282,16 +325,28 @@ class SlurmScheduler:
         (copy back, then read-whole + write) for benchmarking.
         ``engine="full"`` routes every commit through the seed-era full
         rebuild instead (used by benchmarks to measure the legacy path).
+
+        ``journal=True`` (default) writes an intent journal before the
+        commit phase so a crash anywhere inside it is replayed exactly-once
+        by ``Session.recover()`` (DESIGN §10); ``job_ids`` restricts the
+        batch to specific job-DB rows (the recovery path uses this to
+        re-finish precisely the jobs a crashed batch left open).
         """
         self._charge_cli()
         jobs = self.db.open_jobs()
         if job_id is not None:
             jobs = [j for j in jobs if j["job_id"] == job_id]
+        if job_ids is not None:
+            wanted = set(job_ids)
+            jobs = [j for j in jobs if j["job_id"] in wanted]
         if slurm_job_id is not None:
             jobs = [j for j in jobs if j["slurm_id"] == slurm_job_id]
         # one batched accounting query for the whole candidate set
-        states = self.cluster.sacct_many(
-            [j["slurm_id"] for j in jobs if j["slurm_id"] is not None]
+        states = self._retry_slurm(
+            lambda: self.cluster.sacct_many(
+                [j["slurm_id"] for j in jobs if j["slurm_id"] is not None]
+            ),
+            "sacct",
         )
         results: list[FinishResult] = []
         to_commit: list[tuple[dict, str]] = []
@@ -315,10 +370,35 @@ class SlurmScheduler:
                 results.append(FinishResult(job["job_id"], job["slurm_id"], state, None))
                 continue
             to_commit.append((job, state))
+        jh = None
+        if to_commit and journal:
+            jh = JournalHandle.begin(
+                self.repo.fs, self.repo.repro_dir, "finish",
+                {
+                    "branch": self.repo.current_branch(),
+                    "jobs": [
+                        {"job_id": j["job_id"], "slurm_id": j["slurm_id"],
+                         "state": st}
+                        for j, st in to_commit
+                    ],
+                    "flags": {
+                        "branches": branches, "octopus": octopus,
+                        "engine": engine, "data_plane": data_plane,
+                        "close_failed_jobs": close_failed_jobs,
+                        "commit_failed_jobs": commit_failed_jobs,
+                    },
+                },
+            )
+            self.repo.fs.crash_point("finish:journal-written")
+        # a non-crash failure mid-batch deliberately leaves the journal in
+        # place: the jobs it covers are still open and recover() (or the
+        # next finish) completes them exactly-once
         results += self._commit_jobs_batched(
             to_commit, use_branch=branches or octopus, octopus=octopus,
-            engine=engine, data_plane=data_plane,
+            engine=engine, data_plane=data_plane, journal=jh,
         )
+        if jh is not None:
+            jh.done()
         if to_commit:
             self.maybe_repack()
         return results
@@ -342,6 +422,7 @@ class SlurmScheduler:
         octopus: bool,
         engine: str = "incremental",
         data_plane: str = "fused",
+        journal: JournalHandle | None = None,
     ) -> list[FinishResult]:
         """One commit per job (§5.1: one reproducibility record each), but the
         whole batch shares one base-tree read. The branch ref is written per
@@ -375,6 +456,7 @@ class SlurmScheduler:
         staged: list[dict] | None = None
         if fused:
             staged = self._ingest_batch(prepared)
+            repo.fs.crash_point("finish:after-ingest")
         else:
             # seed-era data plane: deep-copy alt-dir outputs back into the
             # worktree now; each job re-reads + re-writes them when staged
@@ -383,7 +465,9 @@ class SlurmScheduler:
                     self._copy_back_alt_dir(spec, slurm_outputs)
         results: list[FinishResult] = []
         new_branches: list[str] = []
-        with repo.ref_lock:
+        # ref_lock serializes threads; the file lock serializes processes
+        # and survives (as a breakable stale lock) the holder's crash
+        with repo.ref_lock, repo.file_lock("refs"):
             branch = repo.current_branch()
             base = repo.branch_head(branch)
             base_tree = repo._tree_oid_of(base)
@@ -409,12 +493,20 @@ class SlurmScheduler:
                     branch_name = None
                     if use_branch:
                         branch_name = f"job/{job['slurm_id']}"
-                        repo.create_branch(branch_name, at=base)
+                        if repo.branch_head(branch_name) is None:
+                            repo.create_branch(branch_name, at=base)
                         new_branches.append(branch_name)
                     commit = repo.save(
                         paths=save_paths, message=message, branch=branch_name,
                         engine="full", spec=spec_json,
                     )
+                    if journal is not None:
+                        # save() publishes internally; journal after the fact
+                        # so replay sees head==commit and just closes the row
+                        journal.append({
+                            "job_id": job["job_id"], "commit": commit,
+                            "job_branch": branch_name,
+                        })
                 else:
                     changes = (
                         staged[idx] if staged is not None
@@ -422,14 +514,26 @@ class SlurmScheduler:
                     )
                     branch_name = None
                     if use_branch:
-                        # per-job branches all root at the shared base (§5.8)
+                        # per-job branches all root at the shared base (§5.8);
+                        # tolerate a branch a crashed pre-recovery finish
+                        # already created — it is re-published below
                         branch_name = f"job/{job['slurm_id']}"
-                        repo.create_branch(branch_name, at=base)
+                        if repo.branch_head(branch_name) is None:
+                            repo.create_branch(branch_name, at=base)
                         commit, _ = repo.commit_changes(
                             changes, message=message, base_commit=base,
                             base_tree=base_tree, spec=spec_json,
                         )
+                        if journal is not None:
+                            # journal BEFORE the ref moves: replay can tell
+                            # published from committed-only (exactly-once)
+                            journal.append({
+                                "job_id": job["job_id"], "commit": commit,
+                                "job_branch": branch_name,
+                            })
+                        repo.fs.crash_point("finish:before-publish")
                         repo.set_branch(branch_name, commit)
+                        repo.fs.crash_point("finish:after-publish")
                         new_branches.append(branch_name)
                     else:
                         commit, tree = repo.commit_changes(
@@ -438,21 +542,33 @@ class SlurmScheduler:
                             spec=spec_json,
                         )
                         head_commit, head_tree = commit, tree
+                        if journal is not None:
+                            journal.append({
+                                "job_id": job["job_id"], "commit": commit,
+                                "job_branch": None,
+                            })
                         # publish before closing the job: a closed job must
                         # always have its commit reachable, even if the
                         # process dies here
+                        repo.fs.crash_point("finish:before-publish")
                         repo.set_branch(branch, commit)
+                        repo.fs.crash_point("finish:after-publish")
                 self.db.close_job(job["job_id"], status="finished")
+                repo.fs.crash_point("finish:after-close")
                 results.append(
                     FinishResult(
                         job["job_id"], job["slurm_id"], state, commit, branch_name
                     )
                 )
             if octopus and new_branches:
-                repo.merge_octopus(
+                repo.fs.crash_point("finish:before-octopus")
+                merge_oid = repo.merge_octopus(
                     new_branches,
                     message=f"octopus merge of {len(new_branches)} slurm jobs",
                 )
+                if journal is not None:
+                    journal.append({"octopus": merge_oid})
+                repo.fs.crash_point("finish:after-octopus")
         return results
 
     def _ingest_batch(self, prepared) -> list[dict]:
@@ -502,6 +618,7 @@ class SlurmScheduler:
 
         def ingest_one(task: tuple[int, str, str | None]):
             idx, rel, src = task
+            repo.fs.crash_point("finish:mid-ingest")
             if src is not None:
                 try:
                     return idx, rel, repo.ingest_external_file(src, rel)
@@ -661,13 +778,28 @@ class SlurmScheduler:
                     stragglers.append(job)
         return stragglers
 
-    def reschedule_straggler(self, job_id: int) -> int:
+    def reschedule_straggler(self, job_id: int) -> int | None:
         """Cancel a straggling job, release its outputs, and submit a fresh
-        copy of its exact stored spec."""
+        copy of its exact stored spec.
+
+        Race-safe: between the straggler scan and the cancel, the job may
+        have completed (and a concurrent finish may even have closed the
+        row). ``scancel`` is idempotent and reports the job's terminal state
+        instead of cancelling twice; a COMPLETED straggler is left open for
+        a normal ``finish`` and no duplicate submission happens — returns
+        None in both already-resolved cases."""
         job = self.db.get(job_id)
         if job is None:
             raise ScheduleError(f"unknown job {job_id}")
-        self.cluster.scancel(job["slurm_id"])
+        if job["status"] != "scheduled" or job["slurm_id"] is None:
+            return None  # a racing finisher already resolved this job
+        state = self._retry_slurm(
+            lambda: self.cluster.scancel(job["slurm_id"]), "scancel"
+        )
+        if state == S.COMPLETED:
+            # lost the race: the job finished before the cancel landed.
+            # Leave the row open so finish() commits it exactly once.
+            return None
         self.db.close_job(job_id, status="cancelled-straggler")
         spec = job_spec(job).replace(
             message=f"straggler reschedule of job {job_id}"

@@ -78,7 +78,8 @@ class Session:
     def cluster(self) -> SlurmCluster:
         if self._cluster is None:
             self._cluster = LocalSlurmCluster(
-                max_workers=self._max_workers, clock=self.repo.fs.clock
+                max_workers=self._max_workers, clock=self.repo.fs.clock,
+                faults=getattr(self.repo.fs, "faults", None),
             )
         return self._cluster
 
@@ -192,6 +193,27 @@ class Session:
             for job, state in self.scheduler.list_open_jobs()
         ]
 
+    # ------------------------------------------------------------- recovery
+    def recover(self, close_unsubmitted: bool = True,
+                max_tmp_age_s: float | None = 3600.0) -> dict:
+        """Crash recovery (DESIGN.md §10): break stale locks, sweep
+        dead-owner annex tmps, replay intent journals (exactly-once finish
+        and submit), close orphan rows, release orphan protection.
+        Idempotent; returns a report dict."""
+        from . import recovery as _recovery
+
+        return _recovery.recover(
+            self, close_unsubmitted=close_unsubmitted,
+            max_tmp_age_s=max_tmp_age_s,
+        )
+
+    def verify(self, repair: bool = False) -> dict:
+        """fsck: cross-check jobdb ↔ refs ↔ object store ↔ annex and report
+        divergence; ``repair=True`` fixes what is safe (DESIGN.md §10)."""
+        from . import recovery as _recovery
+
+        return _recovery.verify(self, repair=repair)
+
 
 def open(
     root: str,
@@ -203,10 +225,14 @@ def open(
     max_workers: int = 8,
     auto_repack_threshold: int | None | str = "auto",
     ingest_workers: int = 0,
+    faults=None,
     **init_kwargs,
 ) -> Session:
     """Open (or with ``create=True``, initialize) a repository at ``root``
-    and return a :class:`Session` over it — the documented entry point."""
+    and return a :class:`Session` over it — the documented entry point.
+    ``faults`` attaches a :class:`~repro.core.faults.FaultPlan` to the
+    session's FS and (lazily created) cluster — the fault-injection harness
+    of DESIGN.md §10."""
     if os.path.isdir(os.path.join(root, REPRO_DIR)):
         if init_kwargs:
             raise TypeError(
@@ -215,9 +241,11 @@ def open(
             )
         from .fsio import FS
 
-        repo = Repository(root, fs=FS(profile, clock))
+        repo = Repository(root, fs=FS(profile, clock, faults=faults))
     elif create:
-        repo = Repository.init(root, profile=profile, clock=clock, **init_kwargs)
+        repo = Repository.init(
+            root, profile=profile, clock=clock, faults=faults, **init_kwargs
+        )
     else:
         raise FileNotFoundError(
             f"not a repro repository: {root} (pass create=True to initialize)"

@@ -31,6 +31,7 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 
+from . import faults as _faults
 from .fsio import SimClock
 
 # canonical Slurm states we model
@@ -40,7 +41,9 @@ COMPLETED = "COMPLETED"
 FAILED = "FAILED"
 CANCELLED = "CANCELLED"
 TIMEOUT = "TIMEOUT"
-TERMINAL = {COMPLETED, FAILED, CANCELLED, TIMEOUT}
+NODE_FAIL = "NODE_FAIL"
+PREEMPTED = "PREEMPTED"
+TERMINAL = {COMPLETED, FAILED, CANCELLED, TIMEOUT, NODE_FAIL, PREEMPTED}
 
 
 def fold_states(states: list[str]) -> str:
@@ -48,12 +51,14 @@ def fold_states(states: list[str]) -> str:
     precedence both of SubprocessSlurmCluster's accounting paths (single and
     batched) share — a job is only COMPLETED when nothing else applies to
     any of its rows. NOTE: LocalSlurmCluster's ``aggregate_state`` orders
-    terminal states CANCELLED > TIMEOUT > FAILED instead; for mixed-terminal
-    array jobs the simulated and real backends can report different (but
-    equally terminal) states."""
+    terminal states CANCELLED > TIMEOUT > ... > FAILED instead; for mixed-
+    terminal array jobs the simulated and real backends can report different
+    (but equally terminal) states."""
     if not states:
         return PENDING
-    for precedence in (RUNNING, PENDING, FAILED, CANCELLED, TIMEOUT):
+    for precedence in (
+        RUNNING, PENDING, NODE_FAIL, PREEMPTED, FAILED, CANCELLED, TIMEOUT
+    ):
         if any(s.startswith(precedence) for s in states):
             return precedence
     return COMPLETED
@@ -92,6 +97,10 @@ class SlurmJob:
             return CANCELLED
         if any(s == TIMEOUT for s in states):
             return TIMEOUT
+        if any(s == NODE_FAIL for s in states):
+            return NODE_FAIL
+        if any(s == PREEMPTED for s in states):
+            return PREEMPTED
         return FAILED
 
 
@@ -115,7 +124,10 @@ class SlurmCluster:
     def sacct_tasks(self, job_id: int) -> list[str]:
         raise NotImplementedError
 
-    def scancel(self, job_id: int) -> None:
+    def scancel(self, job_id: int) -> str | None:
+        """Cancel a job. Idempotent: cancelling an already-terminal or
+        unknown job is a no-op. Returns the job's state after the call when
+        the backend knows it (None for backends that don't report one)."""
         raise NotImplementedError
 
     def wait(self, job_ids: list[int] | None = None, timeout: float = 300.0) -> None:
@@ -130,9 +142,11 @@ class LocalSlurmCluster(SlurmCluster):
         sbatch_cost_s: float = 0.05,
         sacct_cost_s: float = 0.02,
         first_job_id: int = 11_452_000,
+        faults: "_faults.FaultPlan | None" = None,
     ):
         self.pool = ThreadPoolExecutor(max_workers=max_workers)
         self.clock = clock or SimClock()
+        self.faults = faults
         self.sbatch_cost_s = sbatch_cost_s
         self.sacct_cost_s = sacct_cost_s
         self._jobs: dict[int, SlurmJob] = {}
@@ -144,6 +158,8 @@ class LocalSlurmCluster(SlurmCluster):
     # -- submission ------------------------------------------------------
     def sbatch(self, script: str, workdir: str, args: str = "", array_n: int = 1,
                time_limit_s: float | None = None, env: dict | None = None) -> int:
+        if self.faults is not None:
+            self.faults.on_slurm("sbatch")
         self.clock.charge(self.sbatch_cost_s)
         if not os.path.exists(os.path.join(workdir, script)) and not os.path.isabs(script):
             raise FileNotFoundError(f"job script not found: {script} (cwd {workdir})")
@@ -175,6 +191,21 @@ class LocalSlurmCluster(SlurmCluster):
                 return
             task.state = RUNNING
             task.start_time = time.time()
+        if self.faults is not None:
+            # injected node-level fate (NODE_FAIL / PREEMPTED / TIMEOUT /
+            # FAILED): the task "ran" on a node that died — it never gets
+            # to execute, but accounting still reports a terminal state
+            try:
+                fate = self.faults.task_fate()
+            except _faults.CrashInjected:
+                fate = None  # the *client* died; compute nodes are unaffected
+            if fate is not None:
+                task.state = fate
+                task.exit_code = -1
+                task.end_time = time.time()
+                self._write_env_json(job)
+                self._maybe_done(job)
+                return
         env = dict(os.environ)
         if job.env:
             env.update(job.env)  # spec env first; SLURM identity vars win
@@ -245,6 +276,8 @@ class LocalSlurmCluster(SlurmCluster):
 
     # -- queries -----------------------------------------------------------
     def sacct(self, job_id: int) -> str:
+        if self.faults is not None:
+            self.faults.on_slurm("sacct")
         self.clock.charge(self.sacct_cost_s)
         job = self._jobs.get(job_id)
         if job is None:
@@ -254,6 +287,8 @@ class LocalSlurmCluster(SlurmCluster):
     def sacct_many(self, job_ids: list[int]) -> dict[int, str]:
         if not job_ids:
             return {}  # nothing to poll -> no CLI invocation, no charge
+        if self.faults is not None:
+            self.faults.on_slurm("sacct")
         # one poll = one CLI-startup charge, however many jobs it covers
         self.clock.charge(self.sacct_cost_s)
         out = {}
@@ -265,6 +300,8 @@ class LocalSlurmCluster(SlurmCluster):
         return out
 
     def sacct_tasks(self, job_id: int) -> list[str]:
+        if self.faults is not None:
+            self.faults.on_slurm("sacct")
         self.clock.charge(self.sacct_cost_s)
         return [t.state for t in self._jobs[job_id].tasks]
 
@@ -284,9 +321,19 @@ class LocalSlurmCluster(SlurmCluster):
         return logs + [f"slurm-job-{job_id}.env.json"]
 
     # -- control -------------------------------------------------------------
-    def scancel(self, job_id: int) -> None:
+    def scancel(self, job_id: int) -> str | None:
+        """Idempotent cancel (real ``scancel`` semantics): unknown ids and
+        already-terminal jobs are no-ops — a straggler that completed
+        between being flagged and being cancelled keeps its COMPLETED state
+        (the caller inspects the returned state to decide what to do)."""
+        if self.faults is not None:
+            self.faults.on_slurm("scancel")
         with self._lock:
-            job = self._jobs[job_id]
+            job = self._jobs.get(job_id)
+            if job is None:
+                return None
+            if all(t.state in TERMINAL for t in job.tasks):
+                return job.aggregate_state()
             job.cancelled = True
             for t in job.tasks:
                 if t.state == PENDING:
@@ -297,6 +344,7 @@ class LocalSlurmCluster(SlurmCluster):
         for p in procs:
             p.kill()
         self._maybe_done(job)
+        return job.aggregate_state()
 
     def wait(self, job_ids: list[int] | None = None, timeout: float = 300.0) -> None:
         ids = job_ids if job_ids is not None else list(self._jobs)
@@ -371,8 +419,10 @@ class SubprocessSlurmCluster(SlurmCluster):
         )
         return [s.strip() for s in out.stdout.splitlines() if s.strip()]
 
-    def scancel(self, job_id: int) -> None:
+    def scancel(self, job_id: int) -> str | None:
+        # real scancel is already idempotent on terminal jobs (exit 0)
         subprocess.run(["scancel", str(job_id)], check=True)
+        return None
 
     def wait(self, job_ids: list[int] | None = None, timeout: float = 300.0) -> None:
         deadline = time.time() + timeout

@@ -1,0 +1,463 @@
+"""Fault-injection + crash-recovery property tests (DESIGN.md §10).
+
+The central property: for every named crash point, killing the client there
+and then recovering a fresh incarnation over the same repository yields zero
+divergence — every job finished exactly once, no annex object lost, no
+duplicate published record. "Reboot" means a new FS/Repository/Session over
+the same root while the *same* LocalSlurmCluster keeps running (the
+controller and the compute nodes did not crash with the client).
+"""
+import json
+import os
+import time
+
+import pytest
+
+import repro
+from repro.core import FaultPlan, FaultRule
+from repro.core.faults import (
+    CrashInjected,
+    InjectedSlurmError,
+    new_token,
+    owner_is_dead,
+)
+from repro.core.fsio import FS, NULL_FS
+from repro.core.records import RunRecord
+from repro.core.recovery import FileLock, LockHeld, list_journals
+from repro.core.repo import Repository
+from repro.core.session import Session
+from repro.core import slurm as S
+
+# the named phase boundaries the crash matrix kills at, one by one
+FINISH_POINTS = [
+    "finish:journal-written",
+    "finish:mid-ingest",
+    "finish:after-ingest",
+    "finish:before-publish",
+    "finish:after-publish",
+    "finish:after-close",
+]
+OCTOPUS_POINTS = ["finish:before-octopus", "finish:after-octopus"]
+SUBMIT_POINTS = [
+    "submit:jobs-added",
+    "submit:after-sbatch",
+    "submit:before-set-ids",
+    "submit:after-set-ids",
+]
+REPACK_POINTS = [
+    "repack:planned",
+    "repack:data-renamed",
+    "repack:pack-published",
+    "repack:mid-unlink",
+]
+
+
+def write(root, rel, data):
+    p = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    with open(p, "w") as f:
+        f.write(data)
+
+
+def setup_session(tmp_path, plan=None, n_jobs=3):
+    """A repo (annex threshold 64 so job outputs annex) + n job specs."""
+    root = str(tmp_path / "proj")
+    os.makedirs(root, exist_ok=True)
+    s = repro.open(root, create=True, faults=plan, annex_threshold=64)
+    write(root, "data/seed.txt", "s" * 200)  # annexed seed content
+    s.save(message="seed")
+    specs = []
+    for i in range(n_jobs):
+        write(root, f"j{i}.sh", f"#!/bin/bash\nprintf 'x%.0s' {{1..300}} > out{i}.dat\n")
+        specs.append(repro.RunSpec(script=f"j{i}.sh", outputs=[f"out{i}.dat"]))
+    return root, s, specs
+
+
+def reboot(root, cluster):
+    """A fresh client incarnation over the same repository. The cluster
+    (controller + nodes) survived the client crash, so it is reused — but
+    the dead incarnation's fault plan does not follow the new client."""
+    cluster.faults = None
+    return Session(Repository(root, fs=FS(NULL_FS)), cluster=cluster)
+
+
+def slurm_record_counts(repo):
+    """{slurm_id: number of commits publishing its record} over all refs."""
+    counts: dict[int, int] = {}
+    seen: set[str] = set()
+    for b in repo.branches():
+        frontier = [repo.branch_head(b)]
+        while frontier:
+            oid = frontier.pop()
+            if oid is None or oid in seen:
+                continue
+            seen.add(oid)
+            c = repo.objects.get_commit(oid)
+            rec = RunRecord.from_message(c.get("message", ""))
+            if rec is not None and rec.slurm_job_id is not None:
+                counts[rec.slurm_job_id] = counts.get(rec.slurm_job_id, 0) + 1
+            frontier.extend(c.get("parents", []))
+    return counts
+
+
+def assert_consistent(s2, job_ids):
+    rep = s2.verify()
+    assert rep["divergence"] == 0, rep["issues"]
+    rows = [s2.scheduler.db.get(j) for j in job_ids]
+    assert all(r["status"] == "finished" for r in rows), rows
+    counts = slurm_record_counts(s2.repo)
+    for r in rows:
+        assert counts.get(r["slurm_id"]) == 1, (r, counts)
+
+
+# ------------------------------------------------------------ crash matrix
+@pytest.mark.parametrize("point", FINISH_POINTS)
+def test_finish_crash_matrix(tmp_path, point):
+    plan = FaultPlan(seed=7, crash_at={point: 1})
+    root, s, specs = setup_session(tmp_path, plan)
+    job_ids = s.submit_many(specs)
+    s.wait()
+    cluster = s.cluster
+    with pytest.raises(CrashInjected):
+        s.finish()
+    s2 = reboot(root, cluster)
+    s2.recover()
+    assert_consistent(s2, job_ids)
+    # recovery is idempotent: a second pass finds nothing to do
+    rep2 = s2.recover()
+    assert rep2["journals_replayed"] == 0 and rep2["jobs_refinished"] == 0
+    cluster.shutdown()
+
+
+@pytest.mark.parametrize("point", OCTOPUS_POINTS)
+def test_finish_octopus_crash_matrix(tmp_path, point):
+    plan = FaultPlan(seed=7, crash_at={point: 1})
+    root, s, specs = setup_session(tmp_path, plan)
+    job_ids = s.submit_many(specs)
+    s.wait()
+    cluster = s.cluster
+    with pytest.raises(CrashInjected):
+        s.finish(octopus=True)
+    s2 = reboot(root, cluster)
+    s2.recover()
+    assert_consistent(s2, job_ids)
+    # the octopus merge happened exactly once (replayed iff it was lost)
+    head = s2.repo.head_commit()
+    parents = s2.repo.objects.get_commit(head).get("parents", [])
+    assert len(parents) == len(job_ids) + 1
+    cluster.shutdown()
+
+
+@pytest.mark.parametrize("point", SUBMIT_POINTS)
+def test_submit_crash_matrix(tmp_path, point):
+    plan = FaultPlan(seed=7, crash_at={point: 1})
+    root, s, specs = setup_session(tmp_path, plan)
+    cluster = s.cluster
+    with pytest.raises(CrashInjected):
+        s.submit_many(specs)
+    s2 = reboot(root, cluster)
+    s2.recover()
+    assert s2.verify()["divergence"] == 0
+    # journaled submissions were recovered; unjournaled rows were closed —
+    # either way every open row is now finishable and nothing leaks
+    open_rows = [r for r in s2.scheduler.db.all_jobs() if r["status"] == "scheduled"]
+    assert all(r["slurm_id"] is not None for r in open_rows)
+    if open_rows:
+        s2.wait([r["job_id"] for r in open_rows])
+        s2.finish()
+    rep = s2.verify()
+    assert rep["divergence"] == 0, rep["issues"]
+    assert not any(
+        r["status"] == "scheduled" for r in s2.scheduler.db.all_jobs()
+    )
+    cluster.shutdown()
+
+
+@pytest.mark.parametrize("point", REPACK_POINTS)
+def test_repack_crash_matrix(tmp_path, point):
+    plan = FaultPlan(seed=7, crash_at={point: 1})
+    root = str(tmp_path / "proj")
+    os.makedirs(root)
+    s = repro.open(root, create=True, faults=plan, annex_threshold=1 << 20)
+    for i in range(4):
+        write(root, f"f{i}.txt", f"content {i}")
+        s.save(paths=[f"f{i}.txt"], message=f"c{i}")
+    with pytest.raises(CrashInjected):
+        s.gc()
+    s2 = Session(Repository(root, fs=FS(NULL_FS)))  # no cluster was involved
+    s2.recover()
+    assert s2.verify()["divergence"] == 0
+    # a crashed repack can never wedge the store: the lock is breakable
+    # (either recover() broke it above, or acquire breaks it here) and a
+    # fresh repack completes, after which every commit is still readable
+    s2.gc()
+    assert s2.verify()["divergence"] == 0
+    assert s2.repo.resolve("main")
+
+
+def test_crash_points_recorded_cover_matrix(tmp_path):
+    """A clean recording run passes every boundary the matrices kill at —
+    guards against the static lists and the code drifting apart."""
+    plan = FaultPlan(seed=0, record_points=True)
+    root, s, specs = setup_session(tmp_path, plan)
+    s.submit_many(specs)
+    s.wait()
+    s.finish(octopus=True)
+    s.gc()
+    s.close()
+    log = set(plan.crash_point_log)
+    for point in FINISH_POINTS + OCTOPUS_POINTS + SUBMIT_POINTS + REPACK_POINTS:
+        assert point in log, f"{point} never passed in a clean run"
+
+
+# ------------------------------------------------------- transient faults
+def run_workload(tmp_path, sub, plan=None):
+    root, s, specs = setup_session(tmp_path / sub, plan, n_jobs=2)
+    job_ids = s.submit_many(specs)
+    s.wait()
+    res = s.finish()
+    assert all(r.state == S.COMPLETED for r in res)
+    elapsed = s.repo.fs.clock.total
+    assert s.verify()["divergence"] == 0
+    s.close()
+    return elapsed
+
+
+def test_transient_faults_are_retried_with_bounded_charge(tmp_path):
+    clean = run_workload(tmp_path, "clean")
+    plan = FaultPlan(
+        seed=3,
+        rules=[
+            # sacct fails twice then succeeds (controller under load)
+            FaultRule(op="sacct", every=1, times=2, transient=True),
+            # every 50th read throws a transient EIO
+            FaultRule(op="read", every=50, times=4, transient=True),
+        ],
+    )
+    faulty = run_workload(tmp_path, "faulty", plan)
+    # retried to success, charging only bounded backoff on the sim clock
+    assert faulty >= clean
+    assert faulty - clean < 2.0, (clean, faulty)
+
+
+def test_transient_exhaustion_surfaces_the_error(tmp_path):
+    plan = FaultPlan(
+        seed=3, max_slurm_retries=2,
+        rules=[FaultRule(op="sbatch", transient=True)],  # never stops failing
+    )
+    root, s, specs = setup_session(tmp_path, plan, n_jobs=1)
+    with pytest.raises(InjectedSlurmError):
+        s.submit_many(specs)
+    # the soft-failure path cleaned up: row closed, journal retired
+    rows = s.scheduler.db.all_jobs()
+    assert all(r["status"] == "submit-failed" for r in rows)
+    assert list_journals(s.repo.fs, s.repo.repro_dir) == []
+    s.close()
+
+
+def test_seeded_probabilistic_rules_are_deterministic():
+    def fires(seed):
+        plan = FaultPlan(seed=seed, rules=[FaultRule(op="read", p=0.3)])
+        out = []
+        for i in range(64):
+            try:
+                plan.on_fs("read", f"/f{i}")
+                out.append(0)
+            except IOError:
+                out.append(1)
+        return out
+
+    assert fires(11) == fires(11)
+    assert fires(11) != fires(12)  # astronomically unlikely to collide
+
+
+# ------------------------------------------------ annex tmp-leak sweeping
+def test_crash_mid_ingest_leaks_tmp_and_open_sweeps_it(tmp_path):
+    plan = FaultPlan(
+        seed=1,
+        rules=[FaultRule(op="rename", path="annex/objects", error="crash", nth=1)],
+    )
+    root = str(tmp_path / "proj")
+    os.makedirs(root)
+    s = repro.open(root, create=True, faults=plan, annex_threshold=64)
+    write(root, "big.dat", "z" * 500)
+    with pytest.raises(CrashInjected):
+        s.save(paths=["big.dat"], message="ingest")
+    annex_root = os.path.join(root, ".repro", "annex", "objects")
+    leaked = [n for n in os.listdir(annex_root) if n.startswith("tmp-")]
+    assert leaked, "the dead process must not have cleaned up its tmp"
+    # reboot: opening the store sweeps dead-owner tmps (pid+token proof,
+    # no age wait needed)
+    s2 = Session(Repository(root, fs=FS(NULL_FS)))
+    assert not [
+        n for n in os.listdir(annex_root) if n.startswith("tmp-")
+    ]
+    assert s2.verify()["divergence"] == 0
+    # the interrupted save replays cleanly
+    s2.save(paths=["big.dat"], message="ingest again")
+    assert s2.verify()["divergence"] == 0
+
+
+def test_live_owner_tmps_survive_sweep(tmp_path):
+    root = str(tmp_path / "proj")
+    os.makedirs(root)
+    s = repro.open(root, create=True)
+    annex_root = os.path.join(root, ".repro", "annex", "objects")
+    os.makedirs(annex_root, exist_ok=True)
+    live = os.path.join(
+        annex_root, f"tmp-{os.getpid()}-{s.repo.fs.token}-abc123"
+    )
+    write(root, os.path.relpath(live, root), "inflight")
+    # even a forced sweep never removes a tmp whose owner is alive
+    assert s.repo.annex.sweep_stale_tmps(max_age_s=None) == 0
+    assert os.path.exists(live)
+
+
+# ----------------------------------------------------------- stale locks
+def test_stale_repack_lock_is_broken(tmp_path):
+    root = str(tmp_path / "proj")
+    os.makedirs(root)
+    s = repro.open(root, create=True)
+    for i in range(3):
+        write(root, f"f{i}.txt", f"c{i}")
+        s.save(paths=[f"f{i}.txt"], message=f"c{i}")
+    lock_path = os.path.join(root, ".repro", "locks", "repack.lock")
+    os.makedirs(os.path.dirname(lock_path), exist_ok=True)
+    # a lock stamped by a dead incarnation of this very process: the pid is
+    # alive, but the token was never registered -> provably dead owner
+    with open(lock_path, "w") as f:
+        json.dump({
+            "pid": os.getpid(), "token": "dead0incarnat",
+            "host": "here", "heartbeat": time.time(),
+        }, f)
+    stats = s.repo.objects.repack()  # acquire auto-breaks the stale lock
+    assert stats["objects_packed"] >= 1
+    assert not os.path.exists(lock_path)
+
+
+def test_live_lock_blocks_and_stale_token_logic(tmp_path):
+    fs = FS(NULL_FS)
+    path = str(tmp_path / "x.lock")
+    lock = FileLock(fs, path)
+    lock.acquire()
+    with pytest.raises(LockHeld):
+        FileLock(fs, path).acquire(wait_s=0.1, poll_s=0.01)
+    lock.release()
+    FileLock(fs, path).acquire(wait_s=0.1).release()
+    # owner_is_dead: live foreign pids are never declared dead; a dead
+    # token of our own pid is
+    assert not owner_is_dead(os.getpid(), new_token())
+    assert owner_is_dead(os.getpid(), "neverregister")
+    assert owner_is_dead(2 ** 22 + 12345, None) in (True, False)  # pid probe
+
+
+# ------------------------------------------------- slurm-side satellites
+def test_scancel_is_idempotent(tmp_path):
+    root, s, specs = setup_session(tmp_path, n_jobs=1)
+    (jid,) = s.submit_many(specs)
+    s.wait()
+    slurm_id = s.scheduler.db.get(jid)["slurm_id"]
+    # cancelling a completed job is a no-op that reports COMPLETED — twice
+    assert s.cluster.scancel(slurm_id) == S.COMPLETED
+    assert s.cluster.scancel(slurm_id) == S.COMPLETED
+    assert s.cluster.sacct(slurm_id) == S.COMPLETED
+    # unknown ids are a no-op, not an error
+    assert s.cluster.scancel(999_999_999) is None
+    res = s.finish()
+    assert [r.state for r in res] == [S.COMPLETED]
+    s.close()
+
+
+def test_reschedule_straggler_completed_race(tmp_path):
+    root, s, specs = setup_session(tmp_path, n_jobs=1)
+    (jid,) = s.submit_many(specs)
+    s.wait()  # the "straggler" completed before the cancel lands
+    assert s.scheduler.reschedule_straggler(jid) is None
+    row = s.scheduler.db.get(jid)
+    assert row["status"] == "scheduled"  # left open for a normal finish
+    res = s.finish()
+    assert [(r.job_id, r.state) for r in res] == [(jid, S.COMPLETED)]
+    assert slurm_record_counts(s.repo)[row["slurm_id"]] == 1
+    s.close()
+
+
+def test_submit_many_mid_batch_sbatch_failure(tmp_path):
+    plan = FaultPlan(seed=2, rules=[FaultRule(op="sbatch", nth=2)])
+    root, s, specs = setup_session(tmp_path, plan, n_jobs=3)
+    with pytest.raises(InjectedSlurmError):
+        s.submit_many(specs)
+    rows = sorted(s.scheduler.db.all_jobs(), key=lambda r: r["job_id"])
+    assert rows[0]["status"] == "scheduled" and rows[0]["slurm_id"] is not None
+    assert [r["status"] for r in rows[1:]] == ["submit-failed"] * 2
+    assert s.scheduler.db.orphan_protection() == []
+    assert list_journals(s.repo.fs, s.repo.repro_dir) == []
+    # the survivor finishes normally
+    s.wait([rows[0]["job_id"]])
+    res = s.finish()
+    assert [(r.job_id, r.state) for r in res] == [(rows[0]["job_id"], S.COMPLETED)]
+    assert s.verify()["divergence"] == 0
+    s.close()
+
+
+def test_finish_close_failed_jobs_after_submit_crash(tmp_path):
+    """The documented recovery path for rows whose slurm id was never
+    persisted: finish reports UNKNOWN, close_failed_jobs closes them and
+    releases their output protection so resubmission works."""
+    plan = FaultPlan(seed=2, crash_at={"submit:jobs-added": 1})
+    root, s, specs = setup_session(tmp_path, plan, n_jobs=2)
+    cluster = s.cluster
+    with pytest.raises(CrashInjected):
+        s.submit_many(specs)
+    s2 = reboot(root, cluster)
+    res = s2.finish()  # reports, closes nothing
+    assert {r.state for r in res} == {"UNKNOWN"}
+    assert all(
+        r["status"] == "scheduled" for r in s2.scheduler.db.all_jobs()
+    )
+    res = s2.finish(close_failed_jobs=True)
+    assert {r.state for r in res} == {"UNKNOWN"}
+    assert all(
+        r["status"] == "closed-unsubmitted" for r in s2.scheduler.db.all_jobs()
+    )
+    # protection released: the same outputs can be scheduled again
+    job_ids = s2.submit_many(specs)
+    s2.wait(job_ids)
+    s2.finish()
+    assert_consistent(s2, job_ids)
+    cluster.shutdown()
+
+
+def test_injected_node_fail_keeps_job_protected(tmp_path):
+    plan = FaultPlan(seed=4, rules=[FaultRule(op="task", error=S.NODE_FAIL, nth=1)])
+    root, s, specs = setup_session(tmp_path, plan, n_jobs=2)
+    job_ids = s.submit_many(specs)
+    s.wait(job_ids)
+    res = {r.job_id: r for r in s.finish()}
+    states = sorted(r.state for r in res.values())
+    assert states == [S.COMPLETED, S.NODE_FAIL]
+    failed = next(j for j, r in res.items() if r.state == S.NODE_FAIL)
+    assert res[failed].commit is None
+    assert s.scheduler.db.get(failed)["status"] == "scheduled"  # protected
+    res2 = {r.job_id: r for r in s.finish(close_failed_jobs=True)}
+    assert s.scheduler.db.get(failed)["status"] == f"closed-{S.NODE_FAIL.lower()}"
+    assert s.verify()["divergence"] == 0
+    s.close()
+
+
+# ------------------------------------------------------- verify() repairs
+def test_verify_detects_and_repairs_orphans(tmp_path):
+    root, s, specs = setup_session(tmp_path, n_jobs=1)
+    db = s.scheduler.db
+    job_ids = s.submit_many(specs)
+    s.wait(job_ids)
+    s.finish()
+    # manufacture divergence: an open row with no slurm id
+    orphan = db.add_jobs([repro.RunSpec(script="j0.sh", outputs=["other.out"])])[0]
+    rep = s.verify()
+    kinds = {i["kind"] for i in rep["issues"]}
+    assert "orphan-job" in kinds and rep["divergence"] >= 1
+    rep = s.verify(repair=True)
+    assert rep["divergence"] == 0
+    assert db.get(orphan)["status"] == "closed-unsubmitted"
+    assert s.verify()["divergence"] == 0
+    s.close()
