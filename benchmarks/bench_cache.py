@@ -1,0 +1,151 @@
+"""Run-cache benchmark (DESIGN.md §11): what does memoization buy?
+
+The functional model says a re-submitted spec whose content-addressed
+inputs are unchanged need not run at all. This benchmark measures exactly
+that claim at campaign scale:
+
+  sweep_cold   1000 novel specs: submit_many -> wait -> finish. Every job
+               goes through sbatch and the full finish data plane; the
+               finish path populates the run-cache index as a side effect.
+  sweep_warm   1000 specs at 90% overlap: 900 bit-identical re-submissions
+               of cold-sweep specs plus 100 novel ones. The 900 hits
+               short-circuit at submit_many into memoized provenance
+               commits (zero sbatch calls, zero data-plane work); only the
+               100 novel specs reach Slurm and pay the cold path.
+
+The gate (benchmarks/run.py ``--check-cache``) holds three claims:
+  (a) the warm sweep costs <= 0.15x the cold sweep on the sim clock,
+  (b) cached specs submit nothing to Slurm (warm slurm submissions ==
+      the novel count, and every hit row closes as 'memoized' with a
+      NULL slurm id), and
+  (c) a memoized provenance record reconstructs to the exact original
+      spec: ``spec_of(memoized commit).spec_id == original.spec_id``.
+
+Rows are tagged ``bench="cache"`` and land in ``BENCH_cache.json``.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+from repro.core import records as R
+from repro.core.fsio import GPFS, SimClock
+from repro.core.repo import Repository
+from repro.core.scheduler import SlurmScheduler
+from repro.core.slurm import LocalSlurmCluster
+from repro.core.spec import RunSpec
+
+from .common import cleanup, timer
+
+N_JOBS = 1000
+OVERLAP = 0.9
+
+# minimal payload: the bench measures the version-store control plane, not
+# bash startup, and LocalSlurmCluster really execs every script
+_SCRIPT = "#!/bin/bash\necho payload > out.txt\n"
+
+
+def _make_env():
+    root = tempfile.mkdtemp(prefix="bench_cache_")
+    clock = SimClock()
+    repo = Repository.init(
+        os.path.join(root, "repo"), profile=GPFS, clock=clock,
+        annex_threshold=256,
+    )
+    cluster = LocalSlurmCluster(
+        max_workers=8, clock=clock, sbatch_cost_s=0.05, sacct_cost_s=0.02
+    )
+    sched = SlurmScheduler(repo, cluster)
+    return root, repo, cluster, sched, clock
+
+
+def _spec_for(repo, j: int) -> RunSpec:
+    d = os.path.join(repo.root, "jobs", str(j))
+    if not os.path.isdir(d):
+        os.makedirs(d)
+        with open(os.path.join(d, "slurm.sh"), "w") as f:
+            f.write(_SCRIPT)
+    return RunSpec(script="slurm.sh", outputs=[f"jobs/{j}"], pwd=f"jobs/{j}")
+
+
+def _sweep(repo, cluster, sched, specs) -> tuple[list[int], float, float]:
+    clock = repo.fs.clock
+    s0 = clock.snapshot()
+    with timer() as t:
+        ids = sched.submit_many(specs)
+        open_rows = [
+            r for jid in ids
+            if (r := sched.db.get(jid)) and r["status"] == "scheduled"
+        ]
+        if open_rows:
+            cluster.wait([r["slurm_id"] for r in open_rows], timeout=600)
+            sched.finish()
+    return ids, clock.snapshot() - s0, t["s"]
+
+
+def run(n_jobs: int = N_JOBS, overlap: float = OVERLAP) -> list[dict]:
+    root, repo, cluster, sched, clock = _make_env()
+    try:
+        n_overlap = int(n_jobs * overlap)
+
+        cold_specs = [_spec_for(repo, j) for j in range(n_jobs)]
+        cold_ids, cold_sim, cold_wall = _sweep(repo, cluster, sched, cold_specs)
+        assert sched.db.cache_count() >= n_jobs, "cold sweep must fill the cache"
+
+        # 90% bit-identical re-submissions + 10% novel — fresh RunSpec
+        # objects, so the hit comes from content addressing, not object
+        # identity
+        warm_specs = [_spec_for(repo, j) for j in range(n_overlap)]
+        warm_specs += [_spec_for(repo, n_jobs + j) for j in range(n_jobs - n_overlap)]
+        warm_ids, warm_sim, warm_wall = _sweep(repo, cluster, sched, warm_specs)
+
+        rows_db = [sched.db.get(j) for j in warm_ids]
+        n_memo = sum(1 for r in rows_db if r["status"] == "memoized")
+        n_slurm = sum(1 for r in rows_db if r["slurm_id"] is not None)
+        assert all(
+            r["slurm_id"] is None for r in rows_db if r["status"] == "memoized"
+        ), "memoized rows must never have touched Slurm"
+
+        # claim (c): the memoized provenance record reconstructs the exact
+        # original spec — walk the head chain over the memoized commits
+        spec_ok = n_memo > 0
+        cold_by_id = {s.spec_id: s for s in cold_specs}
+        oid, checked = repo.head_commit(), 0
+        while oid and checked < n_memo:
+            commit = repo.objects.get_commit(oid)
+            rec = R.RunRecord.from_message(commit["message"])
+            if rec is not None and rec.memoized:
+                spec = R.spec_of(repo, oid)
+                spec_ok &= spec.spec_id in cold_by_id
+                checked += 1
+            parents = commit.get("parents") or []
+            oid = parents[0] if parents else None
+        spec_ok &= checked == n_memo
+
+        base = {
+            "bench": "cache", "n_jobs": n_jobs, "repo_files": 0,
+            "overlap": overlap,
+        }
+        return [
+            {
+                **base, "case": "sweep_cold", "n_hits": 0, "n_novel": n_jobs,
+                "slurm_submissions": n_jobs, "spec_roundtrip_ok": True,
+                "sim_s_total": cold_sim, "sim_s_per_job": cold_sim / n_jobs,
+                "wall_s_total": cold_wall,
+            },
+            {
+                **base, "case": "sweep_warm", "n_hits": n_memo,
+                "n_novel": n_jobs - n_overlap, "slurm_submissions": n_slurm,
+                "spec_roundtrip_ok": bool(spec_ok),
+                "sim_s_total": warm_sim, "sim_s_per_job": warm_sim / n_jobs,
+                "wall_s_total": warm_wall,
+            },
+        ]
+    finally:
+        cluster.shutdown()
+        cleanup(root)
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

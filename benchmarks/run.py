@@ -35,7 +35,14 @@ writes ``BENCH_faults.json``, and fails unless (a) the intent journal keeps
 finish within 1.15x of the unjournaled cost and (b) recovering a half-crashed
 batch costs less than re-finishing the whole batch, at zero divergence.
 
-``python -m benchmarks.run --check-all`` runs all five gates in one
+``python -m benchmarks.run --check-cache`` runs the run-cache benchmark
+(a 1000-spec campaign swept cold, then re-swept at 90% overlap), writes
+``BENCH_cache.json``, and fails unless (a) the warm sweep costs <= 0.15x
+the cold sweep on the sim clock, (b) cached specs submit nothing to Slurm
+(warm submissions == the novel count), and (c) every memoized provenance
+record reconstructs to a spec with the original ``spec_id``.
+
+``python -m benchmarks.run --check-all`` runs all six gates in one
 invocation and exits non-zero if any failed.
 """
 from __future__ import annotations
@@ -49,6 +56,7 @@ BENCH_SCHEDULE_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_sched
 BENCH_PACK_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_pack.json")
 BENCH_INGEST_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_ingest.json")
 BENCH_FAULTS_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_faults.json")
+BENCH_CACHE_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_cache.json")
 
 
 def _write_rows_json(
@@ -246,6 +254,75 @@ def check_faults() -> None:
         raise SystemExit(1)
 
 
+def _write_cache_json(rows: list[dict]) -> None:
+    out_rows = [
+        {
+            "case": r["case"],
+            "n_jobs": r["n_jobs"],
+            "overlap": r["overlap"],
+            "n_hits": r["n_hits"],
+            "n_novel": r["n_novel"],
+            "slurm_submissions": r["slurm_submissions"],
+            "spec_roundtrip_ok": r["spec_roundtrip_ok"],
+            "sim_s_total": r["sim_s_total"],
+            "sim_s_per_job": r["sim_s_per_job"],
+            "wall_s_total": r["wall_s_total"],
+        }
+        for r in rows
+        if r["bench"] == "cache"
+    ]
+    path = os.path.normpath(BENCH_CACHE_JSON)
+    with open(path, "w") as f:
+        json.dump(out_rows, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path} ({len(out_rows)} rows)", file=sys.stderr)
+
+
+def _cache_claims(rows: list[dict]) -> list[tuple[str, bool, str]]:
+    cache = {r["case"]: r for r in rows if r["bench"] == "cache"}
+    if "sweep_cold" not in cache or "sweep_warm" not in cache:
+        return []
+    cold, warm = cache["sweep_cold"], cache["sweep_warm"]
+    return [
+        (
+            f"run cache: {warm['n_jobs']}-spec sweep at"
+            f" {warm['overlap']:.0%} overlap <= 0.15x the cold sweep",
+            warm["sim_s_total"] <= 0.15 * cold["sim_s_total"],
+            f"cold={cold['sim_s_total']:.1f}s warm={warm['sim_s_total']:.1f}s"
+            f" ({warm['sim_s_total'] / cold['sim_s_total']:.3f}x,"
+            f" {warm['n_hits']} hits)",
+        ),
+        (
+            "run cache: cached specs submit nothing to Slurm",
+            warm["slurm_submissions"] == warm["n_novel"]
+            and warm["n_hits"] + warm["n_novel"] == warm["n_jobs"],
+            f"{warm['slurm_submissions']} submissions for"
+            f" {warm['n_novel']} novel specs ({warm['n_hits']} memoized)",
+        ),
+        (
+            "run cache: memoized records reconstruct the original spec_id",
+            bool(warm["spec_roundtrip_ok"]),
+            f"{warm['n_hits']} memoized commits spec-verified",
+        ),
+    ]
+
+
+def check_cache() -> None:
+    """Run-cache gate: memoized re-submission must short-circuit (<= 0.15x
+    cold, zero Slurm submissions for cached specs) and stay provenance-
+    exact (memoized records reconstruct the original spec)."""
+    from . import bench_cache
+
+    rows = bench_cache.run()
+    _write_cache_json(rows)
+    ok = True
+    for name, passed, detail in _cache_claims(rows):
+        ok &= passed
+        print(f"# [{'PASS' if passed else 'FAIL'}] {name}: {detail}")
+    if not ok:
+        raise SystemExit(1)
+
+
 def _write_schedule_json(rows: list[dict]) -> None:
     batch_rows = [
         {
@@ -363,8 +440,8 @@ def check_schedule() -> None:
 
 def main() -> None:
     from . import (
-        bench_conflicts, bench_faults, bench_finish, bench_ingest,
-        bench_octopus, bench_schedule,
+        bench_cache, bench_conflicts, bench_faults, bench_finish,
+        bench_ingest, bench_octopus, bench_schedule,
     )
 
     rows = []
@@ -378,6 +455,8 @@ def main() -> None:
     rows += bench_ingest.run()
     print("# running bench_faults (robustness cost, §10) ...", file=sys.stderr)
     rows += bench_faults.run()
+    print("# running bench_cache (run cache, §11) ...", file=sys.stderr)
+    rows += bench_cache.run()
     print("# running bench_conflicts (§5.5) ...", file=sys.stderr)
     rows += bench_conflicts.run()
     print("# running bench_octopus (Fig. 6 / A2) ...", file=sys.stderr)
@@ -388,6 +467,7 @@ def main() -> None:
     _write_pack_json(rows)
     _write_ingest_json(rows)
     _write_faults_json(rows)
+    _write_cache_json(rows)
 
     print("name,us_per_call,derived")
     claims = []
@@ -412,6 +492,10 @@ def main() -> None:
             derived = f"sim={r['sim_s_total']:.3f}s_total"
         elif r["bench"] == "faults":
             name = f"faults/{r['case']}/{r['n_jobs']}jobs"
+            us = r["wall_s_total"] * 1e6 / r["n_jobs"]
+            derived = f"sim={r['sim_s_total']:.3f}s_total"
+        elif r["bench"] == "cache":
+            name = f"cache/{r['case']}/{r['n_jobs']}jobs"
             us = r["wall_s_total"] * 1e6 / r["n_jobs"]
             derived = f"sim={r['sim_s_total']:.3f}s_total"
         elif r["bench"] == "conflict_check":
@@ -443,6 +527,7 @@ def main() -> None:
     claims += _schedule_batch_claims(rows)
     claims += _ingest_claims(rows)
     claims += _faults_claims(rows)
+    claims += _cache_claims(rows)
     conf = {r["scheduled_jobs"]: r for r in rows if r["bench"] == "conflict_check"}
     claims.append(("§5.5: conflict check ~O(1) in scheduled jobs",
                    conf[50_000]["wall_us_per_check"] < 20 * conf[100]["wall_us_per_check"],
@@ -462,12 +547,12 @@ def main() -> None:
 if __name__ == "__main__":
     args = sys.argv[1:]
     if "--check-all" in args:
-        # all five gates in one invocation; report every failure, then exit
+        # all six gates in one invocation; report every failure, then exit
         failed = []
         for name, gate in (
             ("finish", check_finish), ("schedule", check_schedule),
             ("pack", check_pack), ("ingest", check_ingest),
-            ("faults", check_faults),
+            ("faults", check_faults), ("cache", check_cache),
         ):
             print(f"# --check-{name} ...", file=sys.stderr)
             try:
@@ -494,6 +579,9 @@ if __name__ == "__main__":
         ran_gate = True
     if "--check-faults" in args:
         check_faults()
+        ran_gate = True
+    if "--check-cache" in args:
+        check_cache()
         ran_gate = True
     if not ran_gate:
         main()

@@ -12,7 +12,11 @@ simulation campaign:
   3. a transformer LM trains on that dataset; checkpoints are committed to
      the same repository with records chaining model -> data commit;
   4. more simulations finish; training continues from the checkpoint on the
-     bigger data commit — the lineage is the commit DAG.
+     bigger data commit — the lineage is the commit DAG;
+  5. the phase-1 simulations are re-submitted verbatim: the §11 run cache
+     recognizes every execution key and publishes memoized provenance
+     commits instead of touching Slurm — bit-identical outputs, full
+     records, zero compute.
 
 Defaults are laptop-sized (~8M params, 60 steps). --model-dim 768
 --layers 12 --steps 300 gives the ~100M-param configuration; the code path
@@ -30,6 +34,7 @@ import numpy as np
 
 import repro
 from repro import RunSpec
+from repro.core.records import RunRecord
 from repro.configs.base import ModelConfig
 from repro.data.tokens import RepoTokenDataset
 from repro.optim.adamw import AdamW
@@ -126,6 +131,24 @@ def main() -> int:
                          optimizer=AdamW(lr=3e-4), seed=0)
     print(f"  resumed {res2.start_step} -> {res2.end_step}, "
           f"loss {res2.final_loss:.3f}")
+
+    # ---- phase 3: resubmit phase 1 verbatim — the run cache answers
+    print("== phase 3: run-cache replay of the phase-1 simulations")
+    replay = [RunSpec(
+        script="slurm.sh",
+        outputs=[f"campaign/batch_0/{t}/shard.npy"],
+        pwd=f"campaign/batch_0/{t}",
+        message=f"simulation 0+{t}",
+    ) for t in range(args.sim_jobs)]
+    ids = s.submit_many(replay)  # identical execution keys: no sbatch runs
+    rows = [s.scheduler.db.get(j) for j in ids]
+    n_memo = sum(1 for r in rows if r["status"] == "memoized")
+    assert n_memo == len(replay) and all(r["slurm_id"] is None for r in rows)
+    print(f"  {n_memo}/{len(replay)} specs memoized — zero Slurm submissions")
+    head = s.repo.head_commit()
+    rec = RunRecord.from_message(s.repo.objects.get_commit(head)["message"])
+    print(f"  head {head[:12]} is a memoized record of {rec.memoized_of[:12]}; "
+          f"spec_id {s.spec_of(head).spec_id[:12]} reconstructs exactly")
 
     # ---- provenance: walk the commit DAG
     print("== provenance (newest first):")

@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests, then every benchmark gate, with a per-step
+# pass/fail summary and a nonzero exit if anything failed.
+#
+#   scripts/verify.sh            # everything
+#   scripts/verify.sh tests      # tier-1 pytest only
+#   scripts/verify.sh gates      # benchmark gates only
+set -u
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+MODE="${1:-all}"
+STEPS=()
+RESULTS=()
+
+run_step() {
+    local name="$1"; shift
+    echo "==> ${name}: $*" >&2
+    "$@"
+    local rc=$?
+    STEPS+=("$name")
+    RESULTS+=("$rc")
+    return 0
+}
+
+if [ "$MODE" = "all" ] || [ "$MODE" = "tests" ]; then
+    run_step "tier1-pytest" python -m pytest -x -q
+fi
+
+if [ "$MODE" = "all" ] || [ "$MODE" = "gates" ]; then
+    for gate in finish schedule pack ingest faults cache; do
+        run_step "gate-${gate}" python -m benchmarks.run "--check-${gate}"
+    done
+fi
+
+echo ""
+echo "== verify summary =="
+printf '%-16s %s\n' "step" "result"
+FAILED=0
+for i in "${!STEPS[@]}"; do
+    if [ "${RESULTS[$i]}" -eq 0 ]; then
+        printf '%-16s PASS\n' "${STEPS[$i]}"
+    else
+        printf '%-16s FAIL (rc=%s)\n' "${STEPS[$i]}" "${RESULTS[$i]}"
+        FAILED=1
+    fi
+done
+exit "$FAILED"

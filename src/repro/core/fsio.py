@@ -239,6 +239,13 @@ class FS:
         self._rename_lock = threading.Lock()
         self.n_files = 0
         self._dir_entries: dict[str, int] = {}
+        # readdirplus stat cache (consume-on-use): scan_dir() pays ONE
+        # charged enumeration and primes per-file sizes; the next
+        # stat_size() of each file consumes its entry free of charge —
+        # GPFS's stat-ahead / batched RPC behaviour. Any mutating op
+        # invalidates the touched path, so a cached size can never mask
+        # a write that happened after the scan.
+        self._stat_cache: dict[str, int] = {}
 
     # -- fault injection (§10) -----------------------------------------
     def _fault(self, op: str, path: str) -> None:
@@ -423,6 +430,12 @@ class FS:
         return os.path.isdir(path)
 
     def stat_size(self, path: str) -> int:
+        ap = os.path.abspath(path)
+        with self._stats_lock:
+            cached = self._stat_cache.pop(ap, None)
+        if cached is not None:
+            # primed by scan_dir(): already paid for by the enumeration
+            return cached
         if self.faults is not None:
             self._fault("stat", path)
         self._meta(1, path)
@@ -447,6 +460,45 @@ class FS:
         self._charge_meta(1, os.path.abspath(path))
         return sorted(os.listdir(path))
 
+    def scan_dir(self, path: str) -> list[str]:
+        """Enumerate ``path`` *readdirplus-style*: one charged enumeration
+        (same cost as :meth:`listdir`) that also primes the stat cache with
+        every regular file's size, so the subsequent ``stat_size`` of each
+        entry is served from the batch instead of paying its own metadata
+        RPC. Entries are consume-on-use and invalidated by any mutating op
+        on the path. Returns the sorted entry names."""
+        if self.faults is not None:
+            self._fault("listdir", path)
+        self._charge_meta(1, os.path.abspath(path))
+        names: list[str] = []
+        with self._stats_lock:
+            with os.scandir(path) as it:
+                for de in it:
+                    names.append(de.name)
+                    try:
+                        if de.is_file(follow_symlinks=False):
+                            self._stat_cache[
+                                os.path.abspath(de.path)
+                            ] = de.stat(follow_symlinks=False).st_size
+                    except OSError:
+                        continue
+        return sorted(names)
+
+    def _stat_invalidate(self, *paths: str) -> None:
+        """Drop stat-cache entries for mutated paths (callers: every op
+        that can change a file's size or existence)."""
+        with self._stats_lock:
+            for p in paths:
+                self._stat_cache.pop(os.path.abspath(p), None)
+
+    def stat_cache_clear(self) -> None:
+        """Drop every unconsumed stat-cache entry. Batch callers (the
+        finish staging plane) clear after their batch: job payloads are
+        written by processes outside this FS layer, so a primed size must
+        never outlive the batch that scanned it."""
+        with self._stats_lock:
+            self._stat_cache.clear()
+
     def write_bytes(self, path: str, data: bytes) -> None:
         self.write_chunks(path, (data,))
 
@@ -461,6 +513,7 @@ class FS:
         faults = self.faults
         if faults is not None:
             self._fault("write", path)
+        self._stat_invalidate(path)
         self._ensure_parent(path)
         # claim the path atomically (probe + create + count under one
         # lock): two workers writing the same path — e.g. put_blob of
@@ -500,6 +553,7 @@ class FS:
         primitive (§10). Raises ``FileExistsError`` if ``path`` exists."""
         if self.faults is not None:
             self._fault("write", path)
+        self._stat_invalidate(path)
         self._ensure_parent(path)
         fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
         try:
@@ -572,6 +626,7 @@ class FS:
     def append_text(self, path: str, text: str) -> None:
         if self.faults is not None:
             self._fault("write", path)
+        self._stat_invalidate(path)
         existed = os.path.exists(path)
         self._ensure_parent(path)
         with open(path, "a") as f:
@@ -583,6 +638,7 @@ class FS:
     def unlink(self, path: str) -> None:
         if self.faults is not None:
             self._fault("unlink", path)
+        self._stat_invalidate(path)
         self._meta(1, path)
         if os.path.exists(path):
             os.unlink(path)
@@ -596,6 +652,7 @@ class FS:
             # matched against the destination: "fail the 3rd rename under
             # objects/" targets where the publish lands
             self._fault("rename", dst)
+        self._stat_invalidate(src, dst)
         self._meta(1, src)
         self._meta(1, dst)
         self._ensure_parent(dst)
@@ -621,6 +678,7 @@ class FS:
         if self.faults is not None:
             self._fault("read", src)
             self._fault("write", dst)
+        self._stat_invalidate(dst)
         existed = os.path.exists(dst)
         self._ensure_parent(dst)
         n = 0

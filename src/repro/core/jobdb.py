@@ -37,7 +37,10 @@ from .conflicts import (
 )
 from .spec import RunSpec
 
-_SCHEMA = """
+# Ordered schema migrations, tracked by ``PRAGMA user_version``. Each step
+# runs exactly once per database; a fresh database replays all of them, a
+# pre-versioning database has its version detected from its shape first.
+_SCHEMA_V1 = """
 CREATE TABLE IF NOT EXISTS jobs (
     job_id      INTEGER PRIMARY KEY AUTOINCREMENT,
     slurm_id    INTEGER,
@@ -51,7 +54,6 @@ CREATE TABLE IF NOT EXISTS jobs (
     is_array    INTEGER NOT NULL DEFAULT 0,
     array_n     INTEGER NOT NULL DEFAULT 1,
     message     TEXT NOT NULL DEFAULT '',
-    spec        TEXT,
     submitted_at REAL NOT NULL,
     finished_at REAL,
     heartbeat   REAL
@@ -66,17 +68,67 @@ CREATE INDEX IF NOT EXISTS idx_protected_name ON protected(name, kind);
 CREATE INDEX IF NOT EXISTS idx_jobs_status ON jobs(status);
 """
 
+_SCHEMA_V2 = """
+ALTER TABLE jobs ADD COLUMN spec TEXT;
+"""
+
+_SCHEMA_V3 = """
+CREATE TABLE IF NOT EXISTS runcache (
+    exec_key    TEXT PRIMARY KEY,
+    spec_id     TEXT NOT NULL,
+    commit_oid  TEXT NOT NULL,
+    output_tree TEXT NOT NULL,
+    annex_keys  TEXT NOT NULL DEFAULT '[]',
+    created_at  REAL NOT NULL,
+    hits        INTEGER NOT NULL DEFAULT 0,
+    last_hit    REAL
+);
+CREATE INDEX IF NOT EXISTS idx_runcache_spec ON runcache(spec_id);
+ALTER TABLE jobs ADD COLUMN exec_key TEXT;
+"""
+
+_MIGRATIONS: tuple[tuple[int, str], ...] = (
+    (1, _SCHEMA_V1),  # base schema (pre-spec)
+    (2, _SCHEMA_V2),  # canonical spec stored per row (PR 2)
+    (3, _SCHEMA_V3),  # run-cache index + execution key per row (PR 7)
+)
+
 
 class JobDB:
     def __init__(self, repro_dir: str):
         self.path = os.path.join(repro_dir, "jobdb.sqlite")
         self._local = threading.local()
-        with self._conn() as c:
-            c.executescript(_SCHEMA)
-            # pre-spec databases: add the spec column in place
-            cols = {r[1] for r in c.execute("PRAGMA table_info(jobs)")}
-            if "spec" not in cols:
-                c.execute("ALTER TABLE jobs ADD COLUMN spec TEXT")
+        self._migrate(self._conn())
+
+    @staticmethod
+    def _detect_version(c: sqlite3.Connection) -> int:
+        """Schema version of a pre-versioning database, inferred from its
+        shape (fresh file -> 0 so every migration applies)."""
+        tables = {
+            r[0]
+            for r in c.execute("SELECT name FROM sqlite_master WHERE type='table'")
+        }
+        if "jobs" not in tables:
+            return 0
+        if "runcache" in tables:
+            return 3
+        cols = {r[1] for r in c.execute("PRAGMA table_info(jobs)")}
+        return 2 if "spec" in cols else 1
+
+    @classmethod
+    def _migrate(cls, c: sqlite3.Connection) -> None:
+        version = c.execute("PRAGMA user_version").fetchone()[0]
+        if version == 0:
+            version = cls._detect_version(c)
+        applied = version
+        for target, script in _MIGRATIONS:
+            if applied < target:
+                c.executescript(script)
+                applied = target
+        if applied != version or version == 0:
+            # PRAGMA cannot be parameterized; `applied` is an int literal
+            c.execute(f"PRAGMA user_version = {applied:d}")
+            c.commit()
 
     def _conn(self) -> sqlite3.Connection:
         conn = getattr(self._local, "conn", None)
@@ -87,7 +139,9 @@ class JobDB:
         return conn
 
     # ------------------------------------------------------------------
-    def add_jobs(self, specs: list[RunSpec]) -> list[int]:
+    def add_jobs(
+        self, specs: list[RunSpec], exec_keys: list[str | None] | None = None
+    ) -> list[int]:
         """Insert a batch of specs and protect their outputs atomically.
 
         ONE transaction for the whole batch: N row inserts plus one shared
@@ -100,12 +154,14 @@ class JobDB:
         """
         conn = self._conn()
         job_ids: list[int] = []
+        keys = exec_keys if exec_keys is not None else [None] * len(specs)
         with conn:  # single transaction: all checks + inserts + protection
-            for spec in specs:
+            for spec, ekey in zip(specs, keys):
                 cur = conn.execute(
                     "INSERT INTO jobs (script, script_args, pwd, inputs, outputs,"
-                    " alt_dir, is_array, array_n, message, spec, submitted_at)"
-                    " VALUES (?,?,?,?,?,?,?,?,?,?,?)",
+                    " alt_dir, is_array, array_n, message, spec, exec_key,"
+                    " submitted_at)"
+                    " VALUES (?,?,?,?,?,?,?,?,?,?,?,?)",
                     (
                         spec.script or spec.cmd or "",
                         spec.script_args,
@@ -117,6 +173,7 @@ class JobDB:
                         spec.array_n,
                         spec.message,
                         spec.canonical_bytes().decode(),
+                        ekey,
                         time.time(),
                     ),
                 )
@@ -270,6 +327,78 @@ class JobDB:
             "SELECT COUNT(*) FROM protected WHERE kind='name'"
         ).fetchone()[0]
 
+    # --------------------------------------------------- run cache (§11)
+    def cache_lookup(self, exec_keys: list[str | None]) -> dict[str, dict]:
+        """Point-lookup a batch of execution keys; returns the hit rows
+        keyed by exec_key (misses and ``None`` keys are simply absent)."""
+        conn = self._conn()
+        hits: dict[str, dict] = {}
+        for key in exec_keys:
+            if key is None or key in hits:
+                continue
+            row = conn.execute(
+                "SELECT * FROM runcache WHERE exec_key=?", (key,)
+            ).fetchone()
+            if row:
+                hits[key] = _cache_to_dict(row)
+        return hits
+
+    def cache_put(self, rows: list[dict]) -> None:
+        """Record a batch of finished executions — ONE transaction, and
+        idempotent (``INSERT OR REPLACE`` on the exec_key primary key) so
+        journal replay of an already-recorded finish cannot double-insert."""
+        if not rows:
+            return
+        now = time.time()
+        with self._conn() as c:
+            c.executemany(
+                "INSERT OR REPLACE INTO runcache"
+                " (exec_key, spec_id, commit_oid, output_tree, annex_keys,"
+                "  created_at) VALUES (?,?,?,?,?,?)",
+                [
+                    (
+                        r["exec_key"],
+                        r["spec_id"],
+                        r["commit_oid"],
+                        json.dumps(r["output_tree"], sort_keys=True),
+                        json.dumps(sorted(r["annex_keys"])),
+                        now,
+                    )
+                    for r in rows
+                ],
+            )
+
+    def cache_bump(self, exec_keys: list[str]) -> None:
+        """Batched hit accounting (one transaction per memoized batch)."""
+        if not exec_keys:
+            return
+        now = time.time()
+        with self._conn() as c:
+            c.executemany(
+                "UPDATE runcache SET hits=hits+1, last_hit=? WHERE exec_key=?",
+                [(now, k) for k in exec_keys],
+            )
+
+    def cache_rows(self) -> list[dict]:
+        rows = self._conn().execute(
+            "SELECT * FROM runcache ORDER BY exec_key"
+        ).fetchall()
+        return [_cache_to_dict(r) for r in rows]
+
+    def cache_evict(self, exec_keys: list[str]) -> None:
+        if not exec_keys:
+            return
+        with self._conn() as c:
+            c.executemany(
+                "DELETE FROM runcache WHERE exec_key=?",
+                [(k,) for k in exec_keys],
+            )
+
+    def cache_count(self) -> int:
+        return self._conn().execute(
+            "SELECT COUNT(*) FROM runcache"
+        ).fetchone()[0]
+
 
 def job_spec(job: dict) -> RunSpec:
     """The :class:`RunSpec` of a job row: the stored canonical spec when
@@ -293,4 +422,11 @@ def _to_dict(row: sqlite3.Row) -> dict:
     d["inputs"] = json.loads(d["inputs"])
     d["outputs"] = json.loads(d["outputs"])
     d["spec"] = json.loads(d["spec"]) if d.get("spec") else None
+    return d
+
+
+def _cache_to_dict(row: sqlite3.Row) -> dict:
+    d = dict(row)
+    d["output_tree"] = json.loads(d["output_tree"])
+    d["annex_keys"] = json.loads(d["annex_keys"])
     return d

@@ -59,6 +59,17 @@ class RunRecord:
     slurm_outputs: list[str] | None = None
     extras: dict = field(default_factory=dict)
 
+    @property
+    def memoized(self) -> bool:
+        """True for a §11 run-cache hit: no execution happened — the record
+        replays an earlier run's recorded result."""
+        return bool(self.extras.get("memoized"))
+
+    @property
+    def memoized_of(self) -> str | None:
+        """The original run's commit oid for a memoized record, else None."""
+        return self.extras.get("memoized_of")
+
     def to_json(self) -> dict:
         d = {
             "chain": self.chain,

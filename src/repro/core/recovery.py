@@ -213,6 +213,18 @@ class JournalHandle:
     def append(self, record: dict) -> None:
         self.fs.append_text(self.path, json.dumps(record, sort_keys=True) + "\n")
 
+    def append_many(self, records: list[dict]) -> None:
+        """Batch append: ONE charged write for a whole batch's entries. The
+        §11 memoize path journals N hits in a single append so the per-hit
+        charge stays at ~one commit write; all-or-nothing durability of the
+        batch's lines is exactly what its replay assumes."""
+        if not records:
+            return
+        self.fs.append_text(
+            self.path,
+            "".join(json.dumps(r, sort_keys=True) + "\n" for r in records),
+        )
+
     def done(self) -> None:
         try:
             self.fs.unlink(self.path)
@@ -271,6 +283,7 @@ def recover(
         "journals_replayed": 0,
         "slurm_ids_recovered": 0,
         "commits_republished": 0,
+        "memoized_republished": 0,
         "jobs_refinished": 0,
         "jobs_closed_unsubmitted": 0,
         "protection_released": 0,
@@ -299,6 +312,8 @@ def recover(
             _replay_submit(db, header, entries, report)
         elif header.get("kind") == "finish":
             ok = _replay_finish(session, header, entries, report)
+        elif header.get("kind") == "memoize":
+            ok = _replay_memoize(session, header, entries, report)
         if ok:
             fs.unlink(path)
             report["journals_replayed"] += 1
@@ -433,6 +448,91 @@ def _replay_finish(session: "Session", header: dict, entries: list[dict],
     return True
 
 
+def _replay_memoize(session: "Session", header: dict, entries: list[dict],
+                    report: dict) -> bool:
+    """Exactly-once §11 memoize replay. The memoize journal is written in
+    two strokes: the header before any commit, then ONE batched append
+    naming every (job_id, commit) after ALL commits exist but before the
+    single ref publication. So either no entries survived (the commits, if
+    any, are unreachable garbage — republish every still-open hit from the
+    durable cache rows) or every entry's commit exists and the only
+    question is how far the ref moved, answered by walking the current head
+    back to the journaled base.
+
+    Cache rows are never (re-)inserted here — memoization only *reads* the
+    index, and `JobDB.cache_put` is keyed INSERT OR REPLACE — so replay
+    cannot double-insert cache entries."""
+    from .jobdb import job_spec
+
+    repo = session.repo
+    sched = session.scheduler
+    db = sched.db
+    branch = header.get("branch")
+    base = header.get("base")
+    # commits already reachable from the head, back to the journaled base
+    published: set[str] = set()
+    head = repo.branch_head(branch) if branch else None
+    oid = head
+    while oid and oid != base and repo.objects.has(oid):
+        published.add(oid)
+        parents = repo.objects.get_commit(oid).get("parents", [])
+        oid = parents[0] if parents else None
+    last = head
+    for e in entries:
+        jid = e.get("job_id")
+        commit = e.get("commit")
+        row = db.get(jid) if jid is not None else None
+        if row is None or row["status"] != "scheduled":
+            continue
+        if not commit or not repo.objects.has(commit):
+            continue  # never landed: republished from the cache rows below
+        if commit in published or head == commit:
+            db.close_job(jid, status="memoized")
+            report["memoized_republished"] += 1
+            continue
+        parents = repo.objects.get_commit(commit).get("parents", [])
+        if last in parents or (last is None and not parents):
+            repo.set_branch(branch, commit)
+            published.add(commit)
+            last = head = commit
+            db.close_job(jid, status="memoized")
+            report["memoized_republished"] += 1
+    # hits the crash left without a journaled commit: re-derive them from
+    # the cache index (durable since their original run) and re-publish
+    remaining = [
+        j for j in header.get("jobs", ())
+        if (db.get(j.get("job_id")) or {}).get("status") == "scheduled"
+    ]
+    if remaining:
+        cached = db.cache_lookup([j.get("exec_key") for j in remaining])
+        hits = []
+        for j in remaining:
+            jid = j["job_id"]
+            row = cached.get(j.get("exec_key"))
+            if row is None:
+                # index row gone (evicted between crash and recovery):
+                # nothing to replay from — close the orphan, releasing its
+                # output protection, and surface the loss
+                db.close_job(jid, status="closed-unsubmitted")
+                report["jobs_closed_unsubmitted"] += 1
+                report["errors"].append(
+                    f"memoize replay: cache row missing for job {jid}"
+                )
+                continue
+            hits.append((jid, job_spec(db.get(jid)), j["exec_key"], row))
+        if hits:
+            try:
+                sched._publish_memoized(hits)
+            except Exception as e:
+                report["errors"].append(
+                    f"memoize re-publish of jobs"
+                    f" {[h[0] for h in hits]}: {e}"
+                )
+                return False
+            report["memoized_republished"] += len(hits)
+    return True
+
+
 # -- verify (fsck) -----------------------------------------------------------
 
 _DIVERGENCE_KINDS = {
@@ -442,6 +542,7 @@ _DIVERGENCE_KINDS = {
     "duplicate-record",
     "orphan-job",
     "orphan-protection",
+    "broken-cache",
 }
 
 
@@ -553,6 +654,22 @@ def verify(session: "Session", repair: bool = False) -> dict:
         )
         if repair:
             db.release_protection(orphans)
+            rec["repaired"] = True
+            repaired.append(rec)
+
+    # -- run-cache index (§11): every row must still be materializable ----
+    from .runcache import RunCache
+
+    for row, reason in RunCache(repo, db).check():
+        rec = issue(
+            "broken-cache",
+            f"cache row {row['exec_key'][:12]}: {reason}",
+            exec_key=row["exec_key"], commit=row["commit_oid"],
+        )
+        if repair:
+            # eviction is always safe: the cache is derived state — losing
+            # a row costs a re-execution, never data
+            db.cache_evict([row["exec_key"]])
             rec["repaired"] = True
             repaired.append(rec)
 

@@ -27,7 +27,7 @@ from .annex import _POINTER_MAX, AnnexStore, make_pointer, parse_pointer
 from .conflicts import proper_prefixes
 from .fsio import FS, NULL_FS, FSProfile, SimClock
 from .hashing import annex_key_for_bytes, make_annex_key
-from .objects import ObjectStore
+from .objects import ObjectStore, canonical_json
 from .recovery import LOCKS_DIR, FileLock
 
 REPRO_DIR = ".repro"
@@ -467,6 +467,7 @@ class Repository:
         base_commit: str | None = None,
         base_tree: str | None = None,
         spec: dict | None = None,
+        defer: list | None = None,
     ) -> tuple[str, str | None]:
         """Low-level incremental commit: apply ``changes`` on top of
         ``base_tree`` and write a commit object. Does NOT move any ref —
@@ -474,7 +475,13 @@ class Repository:
         ``(commit_oid, tree_oid)``; if nothing changed and ``allow_empty`` is
         false, returns the base commit unchanged. ``spec`` (a RunSpec JSON
         dict) is embedded as a first-class field of the commit object, so
-        provenance replay needs no message parsing."""
+        provenance replay needs no message parsing.
+
+        ``defer``: append the commit object to the given list instead of
+        writing it (the oid is still returned). The caller MUST make the
+        batch durable via ``objects.put_commits_packed(defer)`` before
+        publishing any ref that references these oids — the §11 memoized
+        publish path, where N loose commit writes collapse into one pack."""
         tree_oid = self._update_tree(base_tree, changes)
         if tree_oid == base_tree and base_commit is not None and not allow_empty:
             return base_commit, base_tree  # nothing changed (paper §3 step 8)
@@ -489,6 +496,12 @@ class Repository:
         }
         if spec is not None:
             commit["spec"] = spec
+        if defer is not None:
+            defer.append(commit)
+            payload = canonical_json(commit)
+            return (
+                self.objects.oid_for("commit", payload), tree_oid
+            )
         return self.objects.put_commit(commit), tree_oid
 
     def save(

@@ -1,0 +1,164 @@
+"""Run cache: content-addressed memoization of RunSpec executions (§11).
+
+The functional model (Guix; DVC's run-cache) says an execution is a pure
+function of its content-addressed inputs: ``spec_id`` (the exact command,
+outputs, pwd, env — PR 2) plus the tree entries of every resolved input
+plus an environment fingerprint determine the outputs. This module derives
+that **execution key** and fronts the jobdb ``runcache`` table (migration
+v3) that maps it to the recorded result: the output tree, the provenance
+commit, and the annex keys it references.
+
+``SlurmScheduler.submit_many`` consults the index before sbatch — hits
+short-circuit into a memoized provenance commit (scheduler
+``_publish_memoized``) while only novel specs reach Slurm. The index is
+written exactly once per finished job through the batched finish path
+(``JobDB.cache_put`` is INSERT OR REPLACE on the key, so §10 journal
+replay of a re-finished batch cannot double-insert), fsck'd by
+``Session.verify()`` and pruned by ``Session.gc()``.
+
+Input hashing cost: deriving a key charges one read pass per input file
+(``Repository.hash_path_entry``). A per-process stat memo — the DVC
+state-db analogue — reuses the hash while the raw ``(size, mtime_ns)``
+pair is unchanged, so a 1000-spec sweep over a shared input set pays for
+each input once, not once per spec. The memo guards with *uncharged*
+``os.stat``: it is an in-memory client-side cache, not simulated-FS state.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .hashing import sha256_bytes
+from .spec import RunSpec
+
+REPRO_DIR = ".repro"
+
+
+def env_fingerprint(cache_env: dict | None) -> str:
+    """Canonical fingerprint of the execution environment the caller deems
+    result-relevant (module stack, container digest, ...). Empty/None — the
+    default — fingerprints to the empty string so keys stay stable for
+    callers who opt out of environment keying."""
+    if not cache_env:
+        return ""
+    canon = json.dumps(
+        {str(k): str(v) for k, v in cache_env.items()},
+        sort_keys=True,
+        separators=(",", ":"),
+    )
+    return sha256_bytes(canon.encode())
+
+
+class RunCache:
+    """Execution-key derivation + lookup over the jobdb runcache table."""
+
+    def __init__(self, repo, db, cache_env: dict | None = None):
+        self.repo = repo
+        self.db = db
+        self.env_fp = env_fingerprint(cache_env)
+        # rel -> ((st_size, st_mtime_ns), tree entry)
+        self._entry_memo: dict[str, tuple[tuple[int, int], dict]] = {}
+
+    # ------------------------------------------------------ key derivation
+    def execution_key(self, spec: RunSpec) -> str | None:
+        """The execution key for submitting ``spec`` now, or ``None`` when
+        an input cannot be resolved (missing literal, unreadable file) —
+        unresolvable specs are simply uncacheable and submit as novel."""
+        entries = self.input_entries(spec)
+        if entries is None:
+            return None
+        return spec.execution_key(entries, self.env_fp)
+
+    def execution_keys(self, specs: list[RunSpec]) -> list[str | None]:
+        return [self.execution_key(s) for s in specs]
+
+    def input_entries(self, spec: RunSpec) -> list[tuple[str, dict]] | None:
+        """Resolved ``(relpath, tree entry)`` pairs for every input file of
+        ``spec`` (directories walk to their files), or ``None`` if any
+        input is unresolvable."""
+        try:
+            rels = spec.expand_inputs(self.repo.root)
+        except (FileNotFoundError, OSError):
+            return None
+        out: list[tuple[str, dict]] = []
+        for rel in dict.fromkeys(rels):
+            files = self._files_under(rel)
+            if files is None:
+                return None
+            for f in files:
+                entry = self._entry(f)
+                if entry is None:
+                    return None
+                out.append((f, entry))
+        return out
+
+    def _files_under(self, rel: str) -> list[str] | None:
+        abspath = os.path.join(self.repo.root, rel)
+        if os.path.isdir(abspath):
+            found: list[str] = []
+            for dirpath, dirnames, files in os.walk(abspath):
+                dirnames[:] = sorted(d for d in dirnames if d != REPRO_DIR)
+                for f in sorted(files):
+                    found.append(
+                        os.path.relpath(os.path.join(dirpath, f), self.repo.root)
+                    )
+            return found
+        if os.path.isfile(abspath):
+            return [rel]
+        return None
+
+    def _entry(self, rel: str) -> dict | None:
+        abspath = os.path.join(self.repo.root, rel)
+        try:
+            st = os.stat(abspath)  # raw guard stat — see module docstring
+        except OSError:
+            return None
+        sig = (st.st_size, st.st_mtime_ns)
+        memo = self._entry_memo.get(rel)
+        if memo is not None and memo[0] == sig:
+            return memo[1]
+        try:
+            entry = self.repo.hash_path_entry(rel)  # charged read pass
+        except (OSError, ValueError):
+            return None
+        self._entry_memo[rel] = (sig, entry)
+        return entry
+
+    # ------------------------------------------------------------- lookup
+    def lookup(self, exec_keys: list[str | None]) -> dict[str, dict]:
+        return self.db.cache_lookup(exec_keys)
+
+    def record(self, rows: list[dict]) -> None:
+        self.db.cache_put(rows)
+
+    def bump(self, exec_keys: list[str]) -> None:
+        self.db.cache_bump(exec_keys)
+
+    # ------------------------------------------------------- fsck / prune
+    def check(self) -> list[tuple[dict, str]]:
+        """Fsck the index WITHOUT mutating it: for every cache row, the
+        recorded commit must exist in the object store and every recorded
+        annex key must be locatable. Returns ``(row, reason)`` for each
+        broken row; annex presence is ONE batched ``whereis_many`` over the
+        union of keys, not a per-row sweep."""
+        rows = self.db.cache_rows()
+        if not rows:
+            return []
+        union = sorted({k for r in rows for k in r["annex_keys"]})
+        located = self.repo.whereis_many(union) if union else {}
+        broken: list[tuple[dict, str]] = []
+        for r in rows:
+            if not self.repo.objects.has(r["commit_oid"]):
+                broken.append((r, f"missing commit {r['commit_oid'][:12]}"))
+                continue
+            lost = [k for k in r["annex_keys"] if not located.get(k)]
+            if lost:
+                broken.append((r, f"missing annex objects: {lost}"))
+        return broken
+
+    def evict_missing(self) -> list[str]:
+        """Prune rows whose recorded commit or annex objects no longer
+        exist (``Session.gc()`` hook). Returns the evicted keys."""
+        bad = [r["exec_key"] for r, _ in self.check()]
+        self.db.cache_evict(bad)
+        return bad

@@ -35,6 +35,7 @@ from .jobdb import JobDB, job_spec
 from .records import TITLE_SLURM, RunRecord, spec_of
 from .recovery import JournalHandle
 from .repo import REPRO_DIR, Repository
+from .runcache import RunCache
 from .spec import RunSpec, SpecError
 
 class ScheduleError(SpecError):
@@ -67,7 +68,9 @@ class SlurmScheduler:
     def __init__(self, repo: Repository, cluster: S.SlurmCluster,
                  cli_startup_s: float = 0.35,
                  auto_repack_threshold: int | None = None,
-                 ingest_workers: int = 0):
+                 ingest_workers: int = 0,
+                 run_cache: bool = True,
+                 cache_env: dict | None = None):
         self.repo = repo
         self.cluster = cluster
         self.cli_startup_s = cli_startup_s
@@ -82,6 +85,10 @@ class SlurmScheduler:
         # identical charges to the serial model).
         self.ingest_workers = ingest_workers
         self.db = JobDB(repo.repro_dir)
+        # §11 run cache: execution-key memoization of finished specs.
+        # run_cache=False disables lookup AND population; cache_env keys
+        # executions on an environment fingerprint on top of spec + inputs.
+        self.cache = RunCache(repo, self.db, cache_env) if run_cache else None
 
     def _charge_cli(self) -> None:
         if self.cli_startup_s:
@@ -107,14 +114,22 @@ class SlurmScheduler:
                 attempt += 1
 
     # ------------------------------------------------------------- submit
-    def submit(self, spec: RunSpec) -> int:
+    def submit(self, spec: RunSpec, refresh: bool = False) -> int:
         """Validate, conflict-check, stage, and submit one script spec.
         Returns the job DB id."""
-        return self.submit_many([spec])[0]
+        return self.submit_many([spec], refresh=refresh)[0]
 
-    def submit_many(self, specs: list[RunSpec]) -> list[int]:
+    def submit_many(self, specs: list[RunSpec], refresh: bool = False) -> list[int]:
         """Batched submission: N specs, ONE CLI-startup charge, ONE job-DB
         transaction, ONE shared §5.5 conflict pass (see ``JobDB.add_jobs``).
+
+        Run cache (§11): each spec's execution key (spec_id + resolved
+        input tree + env fingerprint) is looked up first; hits short-circuit
+        into a memoized provenance commit — their recorded output tree is
+        materialized from the object store/annex and the row closes as
+        ``memoized`` — while only novel specs reach sbatch. ``refresh=True``
+        bypasses the lookup (every spec re-executes) but still records the
+        batch's results so the cache stays warm.
 
         Specs are protected atomically before anything is handed to Slurm.
         If ``sbatch`` (or alt-dir staging) fails mid-batch, the failed job
@@ -145,26 +160,54 @@ class SlurmScheduler:
             if missing:
                 raise ScheduleError(f"input does not exist: {missing[0]}")
 
+        # §11: derive execution keys up front — uncacheable specs
+        # (unresolvable inputs, cache disabled) key as None and always
+        # submit as novel
+        if self.cache is not None:
+            exec_keys = self.cache.execution_keys(specs)
+        else:
+            exec_keys = [None] * len(specs)
+
         # conflict check + protection, atomic in the job DB (§5.3/§5.5):
         # one transaction, each output checked exactly once — BEFORE the
         # potentially expensive annex fetches, so a conflicting batch is
         # refused without moving any data
-        job_ids = self.db.add_jobs(specs)
+        job_ids = self.db.add_jobs(specs, exec_keys=exec_keys)
         fs = self.repo.fs
         fs.crash_point("submit:jobs-added")
+
+        # cache-hit short-circuit (§11): memoized specs never reach Slurm —
+        # their recorded result is republished as provenance right here and
+        # the rows close as 'memoized'; only novel specs continue to sbatch
+        hit_rows = (
+            self.cache.lookup(exec_keys)
+            if self.cache is not None and not refresh
+            else {}
+        )
+        if hit_rows:
+            self._publish_memoized([
+                (job_ids[i], specs[i], exec_keys[i], hit_rows[exec_keys[i]])
+                for i in range(len(specs))
+                if exec_keys[i] in hit_rows
+            ])
+        novel = [i for i in range(len(specs)) if exec_keys[i] not in hit_rows]
+        if not novel:
+            return job_ids
 
         # intent journal (DESIGN §10): each slurm id is journaled the moment
         # sbatch hands it out, so a hard crash before the batched
         # set_slurm_ids transaction no longer orphans running jobs —
         # Session.recover() replays the pairs instead of guessing
         jh = JournalHandle.begin(
-            fs, self.repo.repro_dir, "submit", {"job_ids": job_ids}
+            fs, self.repo.repro_dir, "submit",
+            {"job_ids": [job_ids[i] for i in novel]},
         )
 
         submitted: list[tuple[int, int]] = []
         unlocked = False  # did the currently failing spec get its outputs unlocked?
         try:
-            for idx, spec in enumerate(specs):
+            for idx in novel:
+                spec = specs[idx]
                 unlocked = False
                 inputs = self._fetch_inputs(spec)
                 # unlock outputs that already exist so the job may overwrite
@@ -185,11 +228,11 @@ class SlurmScheduler:
             # and their protected outputs are released (and re-locked, if
             # the failure happened after the unlock)
             self.db.set_slurm_ids(submitted)
-            failed_idx = len(submitted)
-            for idx in range(failed_idx, len(specs)):
+            failed = novel[len(submitted):]  # failing spec first, then the rest
+            for idx in failed:
                 self.db.close_job(job_ids[idx], status="submit-failed")
-            if unlocked:
-                for o in specs[failed_idx].outputs:
+            if unlocked and failed:
+                for o in specs[failed[0]].outputs:
                     self.repo.lock(o)
             jh.done()  # the DB now tells the whole story
             raise
@@ -221,6 +264,136 @@ class SlurmScheduler:
             array_n=spec.array_n, time_limit_s=spec.time_limit_s,
             env=dict(spec.env) or None,
         )
+
+    # ---------------------------------------------------- memoization (§11)
+    def _publish_memoized(
+        self, hits: list[tuple[int, RunSpec, str, dict]]
+    ) -> None:
+        """Publish memoized provenance for cache-hit specs without touching
+        Slurm. ``hits`` is ``[(job_id, spec, exec_key, cache_row)]``.
+
+        The protocol mirrors the batched finish but is tuned so a hit
+        charges ~one commit write: under the ref locks, every hit's commit
+        is chained in memory, then ONE batched journal append covers all of
+        them, then ONE ref publication moves the branch to the last commit,
+        then the rows close as ``memoized``. Exactly-once across crashes:
+        before the append the commits are unreachable garbage and
+        ``recover()`` republishes from the durable cache rows; after it,
+        ``_replay_memoize`` tells published from committed-only by walking
+        the ref chain back to the journaled base."""
+        repo = self.repo
+        fs = repo.fs
+        with repo.ref_lock, repo.file_lock("refs"):
+            branch = repo.current_branch()
+            base = repo.branch_head(branch)
+            base_tree = repo._tree_oid_of(base)
+            jh = JournalHandle.begin(
+                fs, repo.repro_dir, "memoize",
+                {
+                    "branch": branch,
+                    "base": base,
+                    "jobs": [
+                        {"job_id": job_id, "exec_key": key}
+                        for job_id, _, key, _ in hits
+                    ],
+                },
+            )
+            fs.crash_point("memoize:journal-written")
+            head_commit, head_tree = base, base_tree
+            lines: list[dict] = []
+            deferred: list[dict] = []
+            for job_id, spec, key, row in hits:
+                changes = self._materialize_cached(row, base)
+                message, spec_json = self._memoized_record(spec, row, key)
+                # allow_empty: a warm worktree leaves the tree identical to
+                # the base, but each hit still gets its provenance commit;
+                # defer: the whole chain lands as ONE pack below, so a hit
+                # charges no per-commit loose write
+                commit, tree = repo.commit_changes(
+                    changes, message=message, base_commit=head_commit,
+                    base_tree=head_tree, allow_empty=True, spec=spec_json,
+                    defer=deferred,
+                )
+                head_commit, head_tree = commit, tree
+                lines.append({"job_id": job_id, "commit": commit})
+            # durability order: commit objects first (one pack write), THEN
+            # the journal lines that name them, THEN the ref that makes
+            # them reachable — a crash between any two steps leaves only
+            # unreferenced objects or a replayable journal, never a
+            # published ref over missing commits
+            repo.objects.put_commits_packed(deferred)
+            jh.append_many(lines)
+            fs.crash_point("memoize:before-publish")
+            repo.set_branch(branch, head_commit)
+            fs.crash_point("memoize:after-publish")
+            for job_id, _, _, _ in hits:
+                self.db.close_job(job_id, status="memoized")
+            self.db.cache_bump([key for _, _, key, _ in hits])
+            fs.crash_point("memoize:after-close")
+        jh.done()
+
+    def _materialize_cached(self, row: dict, base_commit: str | None) -> dict:
+        """Changes dict for one memoized commit: every recorded output
+        entry, with worktree materialization only where the committed entry
+        or working copy differs from the record — a warm resubmit over an
+        unchanged repository materializes nothing. Materialization is the
+        checkout idiom: blob bytes from the object store, annex content by
+        copy when locally present, else a pointer file."""
+        repo = self.repo
+        changes: dict[str, dict] = {}
+        for rel, entry in sorted(row["output_tree"].items()):
+            changes[rel] = entry
+            abspath = os.path.join(repo.root, rel)
+            if (
+                base_commit is not None
+                and os.path.exists(abspath)
+                and repo.entry_at(base_commit, rel) == entry
+            ):
+                continue  # already live at the recorded content
+            if entry.get("t") == "blob":
+                repo.fs.write_bytes(abspath, repo.objects.get_blob(entry["oid"]))
+            else:
+                key = entry["key"]
+                if repo.annex.has(key):
+                    repo.annex.copy_to(key, abspath)
+                else:
+                    from .annex import make_pointer
+
+                    repo.fs.write_bytes(abspath, make_pointer(key))
+        return changes
+
+    def _memoized_record(
+        self, spec: RunSpec, row: dict, exec_key: str
+    ) -> tuple[str, dict]:
+        """Provenance message + spec JSON for a memoized run. The record
+        carries no slurm id (nothing was submitted — the §10 duplicate-
+        record fsck keys on slurm ids, so memoized replays can never read
+        as duplicates) and points at the original run's commit via
+        ``memoized_of``; the spec rides along verbatim, so ``spec_of`` /
+        ``rerun`` reconstruct the exact original spec (equal spec_id)."""
+        orig = row["commit_oid"]
+        spec_json = spec.to_json()
+        record = RunRecord(
+            cmd=spec.record_cmd,
+            dsid=self.repo.dsid,
+            inputs=list(spec.inputs),
+            outputs=sorted(row["output_tree"]),
+            exit=0,
+            pwd=spec.pwd,
+            spec=spec_json,
+            slurm_job_id=None,
+            extras={
+                "memoized": True,
+                "memoized_of": orig,
+                "exec_key": exec_key,
+                "script": spec.script,
+                "script_args": spec.script_args,
+            },
+        )
+        message = record.to_message(
+            f"cache hit: memoized replay of {orig[:12]}", kind=TITLE_SLURM
+        )
+        return message, spec_json
 
     # ----------------------------------------------------------- schedule
     def schedule(
@@ -465,6 +638,7 @@ class SlurmScheduler:
                     self._copy_back_alt_dir(spec, slurm_outputs)
         results: list[FinishResult] = []
         new_branches: list[str] = []
+        cache_rows: list[dict] = []  # §11: executions to memoize
         # ref_lock serializes threads; the file lock serializes processes
         # and survives (as a breakable stale lock) the holder's crash
         with repo.ref_lock, repo.file_lock("refs"):
@@ -553,6 +727,21 @@ class SlurmScheduler:
                         repo.fs.crash_point("finish:before-publish")
                         repo.set_branch(branch, commit)
                         repo.fs.crash_point("finish:after-publish")
+                if (
+                    self.cache is not None and staged is not None
+                    and state == S.COMPLETED and job.get("exec_key")
+                ):
+                    entries = staged[idx]
+                    cache_rows.append({
+                        "exec_key": job["exec_key"],
+                        "spec_id": spec.spec_id,
+                        "commit_oid": commit,
+                        "output_tree": entries,
+                        "annex_keys": sorted({
+                            e["key"] for e in entries.values()
+                            if e.get("t") == "annex"
+                        }),
+                    })
                 self.db.close_job(job["job_id"], status="finished")
                 repo.fs.crash_point("finish:after-close")
                 results.append(
@@ -569,6 +758,11 @@ class SlurmScheduler:
                 if journal is not None:
                     journal.append({"octopus": merge_oid})
                 repo.fs.crash_point("finish:after-octopus")
+        if cache_rows:
+            # recorded AFTER publication: a crash before this insert costs
+            # a future cache miss, never a wrong hit; INSERT OR REPLACE on
+            # the exec_key keeps §10 journal replay from double-inserting
+            self.db.cache_put(cache_rows)
         return results
 
     def _ingest_batch(self, prepared) -> list[dict]:
@@ -616,6 +810,19 @@ class SlurmScheduler:
                 if os.path.exists(os.path.join(repo.root, rel)):
                     expand(idx, rel, repo.root, False)
 
+        # readdirplus prime (§11 satellite): every task opens with one
+        # charged stat_size (annex routing). Where several staged files
+        # share a directory, one scan_dir enumeration primes all their
+        # sizes, so N per-file stat RPCs collapse into 1 listdir-cost op.
+        by_dir: dict[str, int] = {}
+        for idx, rel, src in tasks:
+            p = src if src is not None else os.path.join(repo.root, rel)
+            d = os.path.dirname(p)
+            by_dir[d] = by_dir.get(d, 0) + 1
+        for d, n in by_dir.items():
+            if n > 1 and os.path.isdir(d):
+                repo.fs.scan_dir(d)
+
         def ingest_one(task: tuple[int, str, str | None]):
             idx, rel, src = task
             repo.fs.crash_point("finish:mid-ingest")
@@ -629,13 +836,18 @@ class SlurmScheduler:
                     pass
             return idx, rel, repo._hash_working_file(rel)
 
-        if self.ingest_workers > 1 and len(tasks) > 1:
-            from concurrent.futures import ThreadPoolExecutor
+        try:
+            if self.ingest_workers > 1 and len(tasks) > 1:
+                from concurrent.futures import ThreadPoolExecutor
 
-            with ThreadPoolExecutor(max_workers=self.ingest_workers) as ex:
-                done = list(ex.map(ingest_one, tasks))
-        else:
-            done = [ingest_one(t) for t in tasks]
+                with ThreadPoolExecutor(max_workers=self.ingest_workers) as ex:
+                    done = list(ex.map(ingest_one, tasks))
+            else:
+                done = [ingest_one(t) for t in tasks]
+        finally:
+            # job payloads are written by external processes the FS layer
+            # never sees — no primed size may outlive this batch
+            repo.fs.stat_cache_clear()
         staged: list[dict] = [{} for _ in prepared]
         for idx, rel, entry in done:
             staged[idx][rel] = entry
@@ -726,7 +938,11 @@ class SlurmScheduler:
         specs = []
         for oid, rec in found:
             spec = spec_of(self.repo, oid)
-            changes: dict = {"message": f"reschedule of slurm job {rec.slurm_job_id}"}
+            label = (
+                f"memoized run {oid[:12]}" if rec.slurm_job_id is None
+                else f"slurm job {rec.slurm_job_id}"
+            )
+            changes: dict = {"message": f"reschedule of {label}"}
             if alt_dir != "__same__":
                 changes["alt_dir"] = alt_dir
             specs.append(spec.replace(**changes))
@@ -735,11 +951,18 @@ class SlurmScheduler:
     def _find_slurm_records(
         self, commitish: str | None, since: str | None
     ) -> list[tuple[str, RunRecord]]:
+        # a memoized record has no slurm id (nothing was submitted) but is
+        # every bit as reschedulable: it embeds the exact original spec
+        def is_slurm(rec: RunRecord | None) -> bool:
+            return rec is not None and (
+                rec.slurm_job_id is not None or rec.memoized
+            )
+
         if commitish is not None:
             oid = self.repo.resolve(commitish)
             commit = self.repo.objects.get_commit(oid)
             rec = RunRecord.from_message(commit["message"])
-            if rec is None or rec.slurm_job_id is None:
+            if not is_slurm(rec):
                 raise ScheduleError(f"{commitish} has no slurm reproducibility record")
             return [(oid, rec)]
         stop = self.repo.resolve(since) if since else None
@@ -748,7 +971,7 @@ class SlurmScheduler:
             if oid == stop:
                 break
             rec = RunRecord.from_message(commit["message"])
-            if rec is not None and rec.slurm_job_id is not None:
+            if is_slurm(rec):
                 found.append((oid, rec))
                 if since is None:
                     break  # only the most recent

@@ -49,11 +49,17 @@ class Session:
         max_workers: int = 8,
         auto_repack_threshold: int | None | str = "auto",
         ingest_workers: int = 0,
+        run_cache: bool = True,
+        cache_env: dict | None = None,
     ):
         self.repo = repo
         self.cli_startup_s = cli_startup_s
         self._max_workers = max_workers
         self.ingest_workers = ingest_workers
+        # §11 run cache: on by default; cache_env folds an environment
+        # fingerprint into every execution key
+        self.run_cache = run_cache
+        self.cache_env = cache_env
         self._cluster = cluster
         self._scheduler: SlurmScheduler | None = None
         self._owns_cluster = cluster is None
@@ -90,6 +96,7 @@ class Session:
                 self.repo, self.cluster, cli_startup_s=self.cli_startup_s,
                 auto_repack_threshold=self.auto_repack_threshold,
                 ingest_workers=self.ingest_workers,
+                run_cache=self.run_cache, cache_env=self.cache_env,
             )
         return self._scheduler
 
@@ -119,12 +126,27 @@ class Session:
     def head(self) -> str | None:
         return self.repo.head_commit()
 
-    def gc(self, delete_loose: bool = True) -> dict:
+    def gc(self, delete_loose: bool = True, prune_cache: bool = True) -> dict:
         """Compact the object store: migrate loose objects into a pack and
         drop the shard entry counts that parallel-FS metadata latency
         degrades with (DESIGN.md §8). Crash-safe — the pack is published
-        before any loose file is unlinked. Returns repack stats."""
-        return self.repo.objects.repack(delete_loose=delete_loose)
+        before any loose file is unlinked. ``prune_cache`` (default) also
+        evicts §11 run-cache rows whose recorded commit or annex objects no
+        longer exist, so the cache can never serve a hit it cannot
+        materialize. Returns repack stats (+ ``cache_evicted``)."""
+        stats = dict(self.repo.objects.repack(delete_loose=delete_loose) or {})
+        if prune_cache:
+            from .jobdb import JobDB
+            from .runcache import RunCache
+
+            db = (
+                self._scheduler.db if self._scheduler is not None
+                else JobDB(self.repo.repro_dir)
+            )
+            stats["cache_evicted"] = len(
+                RunCache(self.repo, db).evict_missing()
+            )
+        return stats
 
     # ------------------------------------------------------------ execution
     @staticmethod
@@ -150,14 +172,21 @@ class Session:
         return R.spec_of(self.repo, commitish)
 
     # ----------------------------------------------------------- scheduling
-    def submit(self, spec: RunSpec | None = None, **kwargs) -> int:
-        """Submit one script spec to the batch system (``slurm-schedule``)."""
-        return self.scheduler.submit(self._coerce(spec, kwargs))
+    def submit(
+        self, spec: RunSpec | None = None, refresh: bool = False, **kwargs
+    ) -> int:
+        """Submit one script spec to the batch system (``slurm-schedule``).
+        ``refresh=True`` bypasses the §11 run cache (forces execution)."""
+        return self.scheduler.submit(self._coerce(spec, kwargs), refresh=refresh)
 
-    def submit_many(self, specs: list[RunSpec]) -> list[int]:
+    def submit_many(
+        self, specs: list[RunSpec], refresh: bool = False
+    ) -> list[int]:
         """Submit a batch: one CLI-startup charge, one jobdb transaction,
-        one shared conflict pass for all specs."""
-        return self.scheduler.submit_many(specs)
+        one shared conflict pass for all specs. Cache-hit specs (§11)
+        short-circuit into memoized records without touching Slurm;
+        ``refresh=True`` bypasses the lookup."""
+        return self.scheduler.submit_many(specs, refresh=refresh)
 
     def finish(self, **kw) -> list[FinishResult]:
         """Commit results of finished jobs (``slurm-finish``)."""
@@ -175,15 +204,25 @@ class Session:
             unknown = [j for j, row in jobs.items() if row is None]
             if unknown:
                 raise ScheduleError(f"unknown job(s): {unknown}")
-            # a NULL slurm id (crash between add_jobs and set_slurm_ids)
-            # would block forever — fail fast like finish reports "UNKNOWN"
-            unsubmitted = [j for j, row in jobs.items() if row["slurm_id"] is None]
+            # terminal rows have nothing to wait on — in particular §11
+            # cache hits close as 'memoized' with no slurm id at all
+            open_rows = [
+                row for row in jobs.values() if row["status"] == "scheduled"
+            ]
+            # a NULL slurm id on an OPEN row (crash between add_jobs and
+            # set_slurm_ids) would block forever — fail fast like finish
+            # reports "UNKNOWN"
+            unsubmitted = [
+                row["job_id"] for row in open_rows if row["slurm_id"] is None
+            ]
             if unsubmitted:
                 raise ScheduleError(
                     f"job(s) {unsubmitted} have no slurm id (submission never "
                     "completed); close them via finish(close_failed_jobs=True)"
                 )
-            slurm_ids = [row["slurm_id"] for row in jobs.values()]
+            if not open_rows:
+                return
+            slurm_ids = [row["slurm_id"] for row in open_rows]
         self.cluster.wait(slurm_ids, timeout=timeout)
 
     def status(self) -> list[dict]:
@@ -225,6 +264,8 @@ def open(
     max_workers: int = 8,
     auto_repack_threshold: int | None | str = "auto",
     ingest_workers: int = 0,
+    run_cache: bool = True,
+    cache_env: dict | None = None,
     faults=None,
     **init_kwargs,
 ) -> Session:
@@ -232,7 +273,9 @@ def open(
     and return a :class:`Session` over it — the documented entry point.
     ``faults`` attaches a :class:`~repro.core.faults.FaultPlan` to the
     session's FS and (lazily created) cluster — the fault-injection harness
-    of DESIGN.md §10."""
+    of DESIGN.md §10. ``run_cache`` toggles §11 execution memoization
+    (``submit*(..., refresh=True)`` bypasses it per call); ``cache_env``
+    folds an environment fingerprint into every execution key."""
     if os.path.isdir(os.path.join(root, REPRO_DIR)):
         if init_kwargs:
             raise TypeError(
@@ -253,5 +296,6 @@ def open(
     return Session(
         repo, cluster=cluster, cli_startup_s=cli_startup_s,
         max_workers=max_workers, auto_repack_threshold=auto_repack_threshold,
-        ingest_workers=ingest_workers,
+        ingest_workers=ingest_workers, run_cache=run_cache,
+        cache_env=cache_env,
     )

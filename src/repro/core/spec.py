@@ -169,6 +169,35 @@ class RunSpec:
         """Content address: sha256 of the canonical bytes."""
         return sha256_bytes(self.canonical_bytes())
 
+    def execution_key(
+        self,
+        input_entries: list[tuple[str, dict]],
+        env_fingerprint: str = "",
+    ) -> str:
+        """Content address of one *execution* of this spec: sha256 over the
+        spec id, the resolved input tree (sorted ``(path, tree-entry)``
+        pairs — oids/annex keys, so same paths with different content key
+        differently), and an environment fingerprint. Two submissions with
+        equal execution keys are guaranteed to produce the same outputs
+        under the functional model, which is what licenses the §11 run
+        cache to answer the second one without touching Slurm.
+
+        The ``message`` label is part of ``spec_id`` and hence of the key —
+        deliberately: a reschedule/straggler resubmit rewrites the message
+        and must MISS so it really re-executes. Script *content* is keyed
+        only if the script is declared as an input.
+        """
+        payload = {
+            "spec_id": self.spec_id,
+            "inputs": [
+                [p, e] for p, e in sorted(input_entries, key=lambda pe: pe[0])
+            ],
+            "env": env_fingerprint,
+        }
+        return sha256_bytes(
+            json.dumps(payload, sort_keys=True, separators=(",", ":")).encode()
+        )
+
     @classmethod
     def from_json(cls, d: dict) -> "RunSpec":
         """Reconstruct (and re-validate) a spec from its JSON form."""

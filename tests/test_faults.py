@@ -50,6 +50,15 @@ REPACK_POINTS = [
     "repack:pack-published",
     "repack:mid-unlink",
 ]
+# §11 cache-hit publication path: these only fire on a WARM re-submission
+# (a clean first run never publishes memoized records), so they get their
+# own recording test below instead of joining the one-clean-run matrix
+MEMOIZE_POINTS = [
+    "memoize:journal-written",
+    "memoize:before-publish",
+    "memoize:after-publish",
+    "memoize:after-close",
+]
 
 
 def write(root, rel, data):
@@ -193,6 +202,66 @@ def test_repack_crash_matrix(tmp_path, point):
     s2.gc()
     assert s2.verify()["divergence"] == 0
     assert s2.repo.resolve("main")
+
+
+@pytest.mark.parametrize("point", MEMOIZE_POINTS)
+def test_memoize_crash_matrix(tmp_path, point):
+    """Kill the client inside the §11 cache-hit publication path: a cold
+    sweep warms the cache, an identical re-submission crashes at ``point``,
+    and recovery must land at zero divergence with every warm row closed
+    as memoized exactly once."""
+    plan = FaultPlan(seed=7, crash_at={point: 1})
+    root, s, specs = setup_session(tmp_path, plan)
+    cold_ids = s.submit_many(specs)  # memoize points never fire cold
+    s.wait()
+    s.finish()
+    head_cold = s.repo.head_commit()
+    cluster = s.cluster
+    with pytest.raises(CrashInjected):
+        s.submit_many(specs)  # 100% hits -> dies inside _publish_memoized
+    s2 = reboot(root, cluster)
+    s2.recover()
+    rep = s2.verify()
+    assert rep["divergence"] == 0, rep["issues"]
+    warm_rows = [
+        r for r in s2.scheduler.db.all_jobs() if r["job_id"] not in cold_ids
+    ]
+    assert len(warm_rows) == len(specs)
+    assert all(
+        r["status"] == "memoized" and r["slurm_id"] is None for r in warm_rows
+    ), warm_rows
+    # exactly one reachable memoized record per warm job, all ahead of the
+    # cold head
+    n_memo, oid = 0, s2.repo.head_commit()
+    while oid and oid != head_cold:
+        c = s2.repo.objects.get_commit(oid)
+        rec = RunRecord.from_message(c.get("message", ""))
+        assert rec is not None and rec.memoized, oid
+        n_memo += 1
+        parents = c.get("parents", [])
+        oid = parents[0] if parents else None
+    assert n_memo == len(specs)
+    # recovery is idempotent
+    rep2 = s2.recover()
+    assert rep2["journals_replayed"] == 0
+    assert rep2["memoized_republished"] == 0
+    cluster.shutdown()
+
+
+def test_memoize_crash_points_recorded(tmp_path):
+    """The warm-path twin of the clean-run coverage test: a cold sweep
+    plus one fully-memoized re-submission passes every MEMOIZE_POINTS
+    boundary."""
+    plan = FaultPlan(seed=0, record_points=True)
+    root, s, specs = setup_session(tmp_path, plan)
+    s.submit_many(specs)
+    s.wait()
+    s.finish()
+    s.submit_many(specs)
+    s.close()
+    log = set(plan.crash_point_log)
+    for point in MEMOIZE_POINTS:
+        assert point in log, f"{point} never passed on a warm re-submission"
 
 
 def test_crash_points_recorded_cover_matrix(tmp_path):

@@ -1,0 +1,269 @@
+"""Run-cache subsystem tests (DESIGN.md §11).
+
+The contract under test: a re-submitted spec whose execution key (spec_id +
+content-addressed input tree + environment fingerprint) matches a recorded
+run short-circuits into a memoized provenance commit that is *bit-identical*
+to executing it — same output tree entries, same worktree bytes, same
+reconstructed spec_id — while never touching Slurm. Plus the index
+plumbing: schema migration, fsck/repair, gc eviction, refresh bypass.
+"""
+import os
+import random
+import sqlite3
+
+import pytest
+
+import repro
+from repro.core.jobdb import JobDB
+from repro.core.records import RunRecord
+from repro.core.runcache import RunCache, env_fingerprint
+from repro.core.spec import RunSpec
+
+
+def write(root, rel, data):
+    p = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    mode = "wb" if isinstance(data, bytes) else "w"
+    with open(p, mode) as f:
+        f.write(data)
+
+
+def open_session(tmp_path, name="proj", **kw):
+    root = str(tmp_path / name)
+    os.makedirs(root, exist_ok=True)
+    return root, repro.open(root, create=True, annex_threshold=64, **kw)
+
+
+def _job(root, payload: str):
+    """An input file + a deterministic transform script over it."""
+    write(root, "in.dat", payload)
+    write(root, "job.sh", "#!/bin/bash\ncat in.dat in.dat > out.dat\n")
+    return RunSpec(script="job.sh", inputs=["in.dat"], outputs=["out.dat"])
+
+
+def _run_one(s, spec):
+    (jid,) = s.submit_many([spec])
+    s.wait([jid])
+    (res,) = s.finish(job_id=jid)
+    return jid, res
+
+
+# ----------------------------------------------------- hit replay property
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_cache_hit_replay_is_bit_identical(tmp_path, seed):
+    """Seeded property: for random annexed payloads, the memoized replay
+    reproduces the cold execution exactly — output tree entry, worktree
+    bytes, and reconstructed spec_id — with no Slurm submission."""
+    rng = random.Random(seed)
+    payload = "".join(rng.choice("abcdefgh\n") for _ in range(rng.randint(200, 600)))
+    root, s = open_session(tmp_path)
+    spec = _job(root, payload)
+    cold_id, cold = _run_one(s, spec)
+    assert cold.commit
+    out_path = os.path.join(root, "out.dat")
+    with open(out_path, "rb") as f:
+        bytes_cold = f.read()
+    entry_cold = s.repo.entry_at(cold.commit, "out.dat")
+    assert entry_cold["t"] == "annex"  # payload > threshold: annexed
+
+    os.unlink(out_path)  # force the hit to re-materialize from the store
+    warm_spec = _job(root, payload)  # fresh object: content addressing only
+    assert warm_spec.spec_id == spec.spec_id
+    (warm_id,) = s.submit_many([warm_spec])
+
+    row = s.scheduler.db.get(warm_id)
+    assert row["status"] == "memoized" and row["slurm_id"] is None
+    head = s.repo.head_commit()
+    assert head != cold.commit
+    assert s.repo.entry_at(head, "out.dat") == entry_cold
+    with open(out_path, "rb") as f:
+        assert f.read() == bytes_cold
+    commit = s.repo.objects.get_commit(head)
+    rec = RunRecord.from_message(commit["message"])
+    assert rec.memoized and rec.memoized_of == cold.commit
+    assert rec.slurm_job_id is None
+    assert s.spec_of(head).spec_id == spec.spec_id
+    assert s.verify()["divergence"] == 0
+    s.close()
+
+
+def test_input_change_misses(tmp_path):
+    root, s = open_session(tmp_path)
+    spec = _job(root, "p" * 300)
+    _run_one(s, spec)
+    # same spec_id, different input content -> different execution key
+    write(root, "in.dat", "q" * 300)
+    (jid,) = s.submit_many([_job(root, "q" * 300)])
+    row = s.scheduler.db.get(jid)
+    assert row["status"] == "scheduled" and row["slurm_id"] is not None
+    s.wait([jid])
+    (res,) = s.finish(job_id=jid)
+    assert res.commit
+    with open(os.path.join(root, "out.dat")) as f:
+        assert f.read() == "q" * 600
+    assert s.scheduler.db.cache_count() == 2
+    s.close()
+
+
+def test_refresh_bypasses_the_cache(tmp_path):
+    root, s = open_session(tmp_path)
+    spec = _job(root, "r" * 300)
+    _run_one(s, spec)
+    (jid,) = s.submit_many([_job(root, "r" * 300)], refresh=True)
+    row = s.scheduler.db.get(jid)
+    assert row["status"] == "scheduled" and row["slurm_id"] is not None
+    s.wait([jid])
+    (res,) = s.finish(job_id=jid)
+    assert res.commit
+    s.close()
+
+
+def test_run_cache_off_never_memoizes(tmp_path):
+    root, s = open_session(tmp_path, run_cache=False)
+    spec = _job(root, "n" * 300)
+    _run_one(s, spec)
+    assert s.scheduler.db.cache_count() == 0
+    (jid,) = s.submit_many([_job(root, "n" * 300)])
+    assert s.scheduler.db.get(jid)["slurm_id"] is not None
+    s.wait([jid])
+    s.finish(job_id=jid)
+    assert s.scheduler.db.cache_count() == 0
+    s.close()
+
+
+def test_env_fingerprint_keys_the_cache(tmp_path):
+    root, s = open_session(tmp_path, cache_env={"module": "gcc/12.2"})
+    spec = _job(root, "e" * 300)
+    _run_one(s, spec)
+    s.close()
+    # same repo, different declared environment -> miss
+    s2 = repro.open(root, cache_env={"module": "gcc/13.1"})
+    (jid,) = s2.submit_many([_job(root, "e" * 300)])
+    assert s2.scheduler.db.get(jid)["slurm_id"] is not None
+    s2.wait([jid])
+    s2.finish(job_id=jid)
+    # and back to the original environment -> hit
+    s2.close()
+    s3 = repro.open(root, cache_env={"module": "gcc/12.2"})
+    (jid3,) = s3.submit_many([_job(root, "e" * 300)])
+    assert s3.scheduler.db.get(jid3)["status"] == "memoized"
+    s3.close()
+
+
+def test_execution_key_properties():
+    spec = RunSpec(script="j.sh", outputs=["o"], inputs=["a", "b"])
+    e1 = [("a", {"t": "blob", "oid": "x"}), ("b", {"t": "blob", "oid": "y"})]
+    assert spec.execution_key(e1) == spec.execution_key(list(reversed(e1)))
+    e2 = [("a", {"t": "blob", "oid": "x"}), ("b", {"t": "blob", "oid": "z"})]
+    assert spec.execution_key(e1) != spec.execution_key(e2)
+    assert spec.execution_key(e1, "envA") != spec.execution_key(e1, "envB")
+    # a different message is a different spec_id, hence a different key —
+    # reschedule/straggler resubmissions deliberately MISS
+    other = RunSpec(script="j.sh", outputs=["o"], inputs=["a", "b"],
+                    message="retry")
+    assert other.execution_key(e1) != spec.execution_key(e1)
+    assert env_fingerprint(None) == "" == env_fingerprint({})
+    assert env_fingerprint({"a": 1}) == env_fingerprint({"a": "1"})
+
+
+# --------------------------------------------------------- schema migration
+def test_migration_upgrades_a_v1_db_exactly_once(tmp_path):
+    from repro.core.jobdb import _SCHEMA_V1
+
+    repro_dir = str(tmp_path / ".repro")
+    os.makedirs(repro_dir)
+    db_path = os.path.join(repro_dir, "jobdb.sqlite")
+    # hand-build a pre-versioning (PR 1 era) database: base schema, no
+    # PRAGMA user_version, no spec column, no runcache table
+    conn = sqlite3.connect(db_path)
+    conn.executescript(_SCHEMA_V1)
+    conn.execute(
+        "INSERT INTO jobs (slurm_id, script, submitted_at)"
+        " VALUES (7, 'x.sh', 0)"
+    )
+    conn.commit()
+    conn.close()
+
+    db = JobDB(repro_dir)
+    conn = sqlite3.connect(db_path)  # noqa: the db file is shared
+    assert conn.execute("PRAGMA user_version").fetchone()[0] == 3
+    cols = {r[1] for r in conn.execute("PRAGMA table_info(jobs)")}
+    assert {"spec", "exec_key"} <= cols
+    tables = {
+        r[0] for r in conn.execute(
+            "SELECT name FROM sqlite_master WHERE type='table'"
+        )
+    }
+    assert "runcache" in tables
+    # the pre-migration row survived
+    assert conn.execute("SELECT slurm_id FROM jobs").fetchone()[0] == 7
+    conn.close()
+    assert db.cache_count() == 0
+
+    # idempotent: reopening applies nothing further
+    db2 = JobDB(repro_dir)
+    conn = sqlite3.connect(db_path)
+    assert conn.execute("PRAGMA user_version").fetchone()[0] == 3
+    conn.close()
+
+
+def test_fresh_db_lands_at_current_version(tmp_path):
+    repro_dir = str(tmp_path / ".repro")
+    os.makedirs(repro_dir)
+    JobDB(repro_dir)
+    conn = sqlite3.connect(os.path.join(repro_dir, "jobdb.sqlite"))
+    assert conn.execute("PRAGMA user_version").fetchone()[0] == 3
+    conn.close()
+
+
+# ------------------------------------------------------- fsck + gc eviction
+def _fake_row(key="k" * 64, commit="c" * 64):
+    return {
+        "exec_key": key, "spec_id": "s" * 64, "commit_oid": commit,
+        "output_tree": {"out.dat": {"t": "blob", "oid": "b" * 64}},
+        "annex_keys": [],
+    }
+
+
+def test_verify_flags_and_repairs_broken_cache_rows(tmp_path):
+    root, s = open_session(tmp_path)
+    spec = _job(root, "v" * 300)
+    _run_one(s, spec)
+    db = s.scheduler.db
+    db.cache_put([_fake_row()])  # recorded commit does not exist
+    assert RunCache(s.repo, db).check()
+    rep = s.verify()
+    assert "broken-cache" in {i["kind"] for i in rep["issues"]}
+    assert rep["divergence"] >= 1
+    rep = s.verify(repair=True)
+    assert rep["divergence"] == 0
+    assert db.cache_count() == 1  # the genuine row survived
+    assert s.verify()["divergence"] == 0
+    # the genuine row still hits
+    (jid,) = s.submit_many([_job(root, "v" * 300)])
+    assert db.get(jid)["status"] == "memoized"
+    s.close()
+
+
+def test_gc_evicts_unmaterializable_rows(tmp_path):
+    root, s = open_session(tmp_path)
+    spec = _job(root, "g" * 300)
+    _run_one(s, spec)
+    db = s.scheduler.db
+    db.cache_put([_fake_row()])
+    stats = s.gc()
+    assert stats["cache_evicted"] == 1
+    assert db.cache_count() == 1
+    assert s.verify()["divergence"] == 0
+    s.close()
+
+
+def test_gc_prune_cache_off_leaves_rows(tmp_path):
+    root, s = open_session(tmp_path)
+    spec = _job(root, "h" * 300)
+    _run_one(s, spec)
+    s.scheduler.db.cache_put([_fake_row()])
+    stats = s.gc(prune_cache=False)
+    assert "cache_evicted" not in stats
+    assert s.scheduler.db.cache_count() == 2
+    s.close()
