@@ -1,0 +1,224 @@
+"""Checkpoint-campaign benchmark (DESIGN.md §12): what does chunking buy?
+
+A training campaign checkpoints near-identical state every step: optimizer
+moments drift, a few percent of each tensor changes, most bytes are the
+bytes of the previous step. Whole-object content addressing dedups only
+*identical* leaves — one flipped element re-ingests the whole tensor. The
+chunk tier cuts each leaf at content-defined boundaries, so a step ingests
+only the chunks the churn actually touched.
+
+  ckpt_whole    20-step campaign, chunking off: every save hashes and
+                writes each full leaf (dedup can only discard after the
+                bytes moved), so per-step ingest == state size.
+  ckpt_chunked  same campaign (same seed, same churn), chunk tier on:
+                after the first step, only changed chunks + the manifests
+                move.
+
+Each save is a commit through ``CheckpointManager`` (streamed npy leaves,
+pointer-v2 worktree, RunSpec-recorded). Afterwards every step is restored
+in a fresh clone (annexed content stays behind, so every byte is fetched +
+reassembled) and verified bit-identical against the in-memory state the
+campaign had at that step — bf16 included. The first restore is cold (full
+fetch); subsequent steps hit the clone's now-warm chunk store, so the
+fetch side shows the same delta behaviour as ingest. A cold restore of the
+final step is also timed serial vs. ``FETCH_WORKERS`` threads (reported as
+trajectory data; on the metadata-dominated striped profile the sim clock
+charges per-chunk metadata serially either way).
+
+The gate (benchmarks/run.py ``--check-ckpt``) holds three claims:
+  (a) chunked steady-state ingest <= 0.15x the unchunked per-step ingest
+      at ~3% churn,
+  (b) every step of the campaign restores bit-identical (incl. bf16),
+  (c) a warm delta-restore (previous step already local) moves <= 0.2x
+      the bytes of the cold restore.
+
+Rows are tagged ``bench="ckpt"`` and land in ``BENCH_ckpt.json``.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import tempfile
+
+import ml_dtypes
+import numpy as np
+
+from repro.core.chunks import ChunkParams
+from repro.core.fsio import FS, GPFS_STRIPED, SimClock
+from repro.core.repo import Repository
+from repro.train.checkpoint import CheckpointManager, _flatten
+
+from .common import cleanup, timer
+
+N_STEPS = 20
+CHURN = 0.03
+FETCH_WORKERS = 8
+
+# chunk geometry tuned to the leaf sizes below: ~16 KiB average chunks keep
+# the changed-chunk footprint of a 3% contiguous churn region small relative
+# to a ~1.5 MiB leaf
+CHUNK_THRESHOLD = 256 << 10
+CHUNK_PARAMS = ChunkParams(min_size=8 << 10, avg_bits=14, max_size=64 << 10)
+
+
+def _make_state(rng) -> dict:
+    """Sharded params + Adam moments: two f32 layer shards, one bf16 embed
+    shard, one frozen shard, and m/v moments per layer — ~11 MiB total."""
+    f32 = lambda shape: rng.standard_normal(shape, dtype=np.float32)
+    params = {
+        "layer0": f32((384, 1024)),
+        "layer1": f32((384, 1024)),
+        "embed": f32((768, 1024)).astype(ml_dtypes.bfloat16),
+        "frozen": f32((256, 1024)),
+    }
+    opt_state = {
+        "m": {"layer0": f32((384, 1024)), "layer1": f32((384, 1024))},
+        "v": {"layer0": f32((384, 1024)), "layer1": f32((384, 1024))},
+        "step": np.int32(0),
+    }
+    return {"params": params, "opt_state": opt_state}
+
+
+def _churn(state: dict, rng, frac: float = CHURN) -> None:
+    """Overwrite a random contiguous ~frac slice of every mutable leaf —
+    the per-step drift of a training run ('frozen' never changes)."""
+    for path, leaf in _flatten(state).items():
+        if "frozen" in path:
+            continue
+        if not isinstance(leaf, np.ndarray) or leaf.ndim == 0:
+            continue
+        flat = leaf.reshape(-1)
+        n = max(1, int(flat.size * frac))
+        off = int(rng.integers(0, flat.size - n + 1))
+        fresh = rng.standard_normal(n, dtype=np.float32)
+        flat[off:off + n] = fresh.astype(leaf.dtype)
+    state["opt_state"]["step"] = np.int32(
+        int(state["opt_state"]["step"]) + 1
+    )
+
+
+def _digest(state: dict) -> dict:
+    """Per-leaf (dtype, shape, sha256-of-bytes) — the bit-identity oracle."""
+    out = {}
+    for path, leaf in _flatten(state).items():
+        arr = np.asarray(leaf)
+        out[path] = (
+            str(arr.dtype), arr.shape,
+            hashlib.sha256(arr.tobytes()).hexdigest(),
+        )
+    return out
+
+
+def _measure_restore(repo: Repository, root: str, tag: str, workers: int):
+    """Cold-restore the latest checkpoint in a fresh clone on its own
+    clock; returns (sim seconds, wall seconds, restored digest)."""
+    clock = SimClock()
+    clone = Repository.clone(
+        repo, os.path.join(root, f"clone_{tag}"),
+        fs=FS(GPFS_STRIPED, clock),
+    )
+    ckpt = CheckpointManager(clone, fetch_workers=workers)
+    s0 = clock.snapshot()
+    with timer() as t:
+        state, _ = ckpt.restore()
+    return clock.snapshot() - s0, t["s"], _digest(state)
+
+
+def _verify_all_steps(repo: Repository, root: str, digests: dict):
+    """Restore every step of the campaign in ONE clone (newest first, so
+    the first restore is cold and the rest hit the warm local store) and
+    check bit-identity against the saved digests. Returns
+    (all_ok, cold_restore_bytes, delta_restore_bytes)."""
+    clock = SimClock()
+    clone = Repository.clone(
+        repo, os.path.join(root, "clone_verify"), fs=FS(GPFS_STRIPED, clock),
+    )
+    ckpt = CheckpointManager(clone, fetch_workers=FETCH_WORKERS)
+    by_step = {step: oid for oid, step in ckpt.checkpoints()}
+    all_ok = len(by_step) == len(digests)
+    cold_bytes = delta_bytes = None
+    for step in sorted(by_step, reverse=True):
+        b0 = clock.bytes_written
+        state, _ = ckpt.restore(by_step[step])
+        moved = clock.bytes_written - b0
+        if cold_bytes is None:
+            cold_bytes = moved
+        elif delta_bytes is None:
+            delta_bytes = moved
+        all_ok &= _digest(state) == digests[step]
+    return all_ok, cold_bytes or 0, delta_bytes or 0
+
+
+def _campaign(case: str, chunked: bool, n_steps: int = N_STEPS) -> dict:
+    root = tempfile.mkdtemp(prefix=f"bench_ckpt_{case}_")
+    clock = SimClock()
+    kwargs = (
+        dict(chunk_threshold=CHUNK_THRESHOLD, chunk_params=CHUNK_PARAMS)
+        if chunked else {}
+    )
+    repo = Repository.init(
+        os.path.join(root, "repo"), profile=GPFS_STRIPED, clock=clock,
+        annex_threshold=64 << 10, **kwargs,
+    )
+    try:
+        rng = np.random.default_rng(7)
+        state = _make_state(rng)
+        ckpt = CheckpointManager(repo)
+        state_bytes = sum(
+            np.asarray(v).nbytes for v in _flatten(state).values()
+        )
+
+        digests = {}
+        with timer() as t:
+            ckpt.save(1, state["params"], state["opt_state"], data_step=1)
+            digests[1] = _digest(state)
+            full_bytes = clock.bytes_written
+            full_sim = clock.snapshot()
+            for step in range(2, n_steps + 1):
+                _churn(state, rng)
+                ckpt.save(step, state["params"], state["opt_state"],
+                          data_step=step)
+                digests[step] = _digest(state)
+        steady_bytes = (clock.bytes_written - full_bytes) / (n_steps - 1)
+        steady_sim = (clock.snapshot() - full_sim) / (n_steps - 1)
+
+        all_ok, cold_bytes, delta_bytes = _verify_all_steps(
+            repo, root, digests
+        )
+        ser_sim, ser_wall, d_ser = _measure_restore(repo, root, "serial", 1)
+        par_sim, par_wall, d_par = _measure_restore(
+            repo, root, "parallel", FETCH_WORKERS
+        )
+        all_ok &= d_ser == digests[n_steps] and d_par == digests[n_steps]
+        return {
+            "bench": "ckpt", "case": case, "repo_files": 0,
+            "n_steps": n_steps, "churn": CHURN,
+            "state_bytes": state_bytes,
+            "full_ingest_bytes": full_bytes,
+            "steady_bytes_per_step": steady_bytes,
+            "full_ingest_sim_s": full_sim,
+            "steady_sim_s_per_step": steady_sim,
+            "cold_restore_bytes": cold_bytes,
+            "delta_restore_bytes": delta_bytes,
+            "restore_serial_sim_s": ser_sim,
+            "restore_parallel_sim_s": par_sim,
+            "restore_serial_wall_s": ser_wall,
+            "restore_parallel_wall_s": par_wall,
+            "fetch_workers": FETCH_WORKERS,
+            "restore_bitwise_ok": all_ok,
+            "wall_s_total": t["s"],
+        }
+    finally:
+        cleanup(root)
+
+
+def run(n_steps: int = N_STEPS) -> list[dict]:
+    return [
+        _campaign("ckpt_whole", chunked=False, n_steps=n_steps),
+        _campaign("ckpt_chunked", chunked=True, n_steps=n_steps),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -42,7 +42,14 @@ the cold sweep on the sim clock, (b) cached specs submit nothing to Slurm
 (warm submissions == the novel count), and (c) every memoized provenance
 record reconstructs to a spec with the original ``spec_id``.
 
-``python -m benchmarks.run --check-all`` runs all six gates in one
+``python -m benchmarks.run --check-ckpt`` runs the checkpoint-campaign
+benchmark (a 20-step campaign at ~3% per-step churn, chunked vs whole-object
+annex), writes ``BENCH_ckpt.json``, and fails unless (a) chunked steady-state
+per-step ingest is <= 0.15x the unchunked per-step ingest, (b) every step of
+the campaign restores bit-identical (incl. bf16), and (c) a warm
+delta-restore moves <= 0.2x the bytes of the cold restore.
+
+``python -m benchmarks.run --check-all`` runs all seven gates in one
 invocation and exits non-zero if any failed.
 """
 from __future__ import annotations
@@ -57,6 +64,7 @@ BENCH_PACK_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_pack.json
 BENCH_INGEST_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_ingest.json")
 BENCH_FAULTS_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_faults.json")
 BENCH_CACHE_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_cache.json")
+BENCH_CKPT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_ckpt.json")
 
 
 def _write_rows_json(
@@ -323,6 +331,89 @@ def check_cache() -> None:
         raise SystemExit(1)
 
 
+def _write_ckpt_json(rows: list[dict]) -> None:
+    out_rows = [
+        {
+            "case": r["case"],
+            "n_steps": r["n_steps"],
+            "churn": r["churn"],
+            "state_bytes": r["state_bytes"],
+            "full_ingest_bytes": r["full_ingest_bytes"],
+            "steady_bytes_per_step": r["steady_bytes_per_step"],
+            "full_ingest_sim_s": r["full_ingest_sim_s"],
+            "steady_sim_s_per_step": r["steady_sim_s_per_step"],
+            "cold_restore_bytes": r["cold_restore_bytes"],
+            "delta_restore_bytes": r["delta_restore_bytes"],
+            "restore_serial_sim_s": r["restore_serial_sim_s"],
+            "restore_parallel_sim_s": r["restore_parallel_sim_s"],
+            "fetch_workers": r["fetch_workers"],
+            "restore_bitwise_ok": r["restore_bitwise_ok"],
+            "wall_s_total": r["wall_s_total"],
+        }
+        for r in rows
+        if r["bench"] == "ckpt"
+    ]
+    path = os.path.normpath(BENCH_CKPT_JSON)
+    with open(path, "w") as f:
+        json.dump(out_rows, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path} ({len(out_rows)} rows)", file=sys.stderr)
+
+
+def _ckpt_claims(rows: list[dict]) -> list[tuple[str, bool, str]]:
+    ckpt = {r["case"]: r for r in rows if r["bench"] == "ckpt"}
+    if "ckpt_whole" not in ckpt or "ckpt_chunked" not in ckpt:
+        return []
+    whole, chunked = ckpt["ckpt_whole"], ckpt["ckpt_chunked"]
+    ratio = chunked["steady_bytes_per_step"] / whole["steady_bytes_per_step"]
+    delta_ratio = (
+        chunked["delta_restore_bytes"] / chunked["cold_restore_bytes"]
+        if chunked["cold_restore_bytes"] else 1.0
+    )
+    return [
+        (
+            f"chunked annex: {chunked['churn']:.0%}-churn campaign ingests"
+            " <= 0.15x the whole-object bytes per step",
+            ratio <= 0.15,
+            f"whole={whole['steady_bytes_per_step'] / 2**20:.2f}MiB/step"
+            f" chunked={chunked['steady_bytes_per_step'] / 2**20:.2f}MiB/step"
+            f" ({ratio:.3f}x)",
+        ),
+        (
+            "chunked annex: every campaign step restores bit-identical"
+            " (incl. bf16)",
+            bool(whole["restore_bitwise_ok"])
+            and bool(chunked["restore_bitwise_ok"]),
+            f"{whole['n_steps']} whole + {chunked['n_steps']} chunked steps"
+            " digest-verified",
+        ),
+        (
+            "chunked annex: warm delta-restore moves <= 0.2x the cold"
+            " restore's bytes",
+            delta_ratio <= 0.2,
+            f"cold={chunked['cold_restore_bytes'] / 2**20:.2f}MiB"
+            f" delta={chunked['delta_restore_bytes'] / 2**20:.2f}MiB"
+            f" ({delta_ratio:.3f}x)",
+        ),
+    ]
+
+
+def check_ckpt() -> None:
+    """Checkpoint-campaign gate: the chunk tier must turn a ~3%-churn
+    campaign into delta-sized ingests and fetches, without ever giving up
+    bit-identical restore."""
+    from . import bench_ckpt
+
+    rows = bench_ckpt.run()
+    _write_ckpt_json(rows)
+    ok = True
+    for name, passed, detail in _ckpt_claims(rows):
+        ok &= passed
+        print(f"# [{'PASS' if passed else 'FAIL'}] {name}: {detail}")
+    if not ok:
+        raise SystemExit(1)
+
+
 def _write_schedule_json(rows: list[dict]) -> None:
     batch_rows = [
         {
@@ -440,7 +531,7 @@ def check_schedule() -> None:
 
 def main() -> None:
     from . import (
-        bench_cache, bench_conflicts, bench_faults, bench_finish,
+        bench_cache, bench_ckpt, bench_conflicts, bench_faults, bench_finish,
         bench_ingest, bench_octopus, bench_schedule,
     )
 
@@ -457,6 +548,8 @@ def main() -> None:
     rows += bench_faults.run()
     print("# running bench_cache (run cache, §11) ...", file=sys.stderr)
     rows += bench_cache.run()
+    print("# running bench_ckpt (chunked data plane, §12) ...", file=sys.stderr)
+    rows += bench_ckpt.run()
     print("# running bench_conflicts (§5.5) ...", file=sys.stderr)
     rows += bench_conflicts.run()
     print("# running bench_octopus (Fig. 6 / A2) ...", file=sys.stderr)
@@ -468,6 +561,7 @@ def main() -> None:
     _write_ingest_json(rows)
     _write_faults_json(rows)
     _write_cache_json(rows)
+    _write_ckpt_json(rows)
 
     print("name,us_per_call,derived")
     claims = []
@@ -498,6 +592,12 @@ def main() -> None:
             name = f"cache/{r['case']}/{r['n_jobs']}jobs"
             us = r["wall_s_total"] * 1e6 / r["n_jobs"]
             derived = f"sim={r['sim_s_total']:.3f}s_total"
+        elif r["bench"] == "ckpt":
+            name = f"ckpt/{r['case']}/{r['n_steps']}steps"
+            us = r["wall_s_total"] * 1e6 / r["n_steps"]
+            derived = (
+                f"steady={r['steady_bytes_per_step'] / 2**20:.2f}MiB_per_step"
+            )
         elif r["bench"] == "conflict_check":
             name = f"conflicts/{r['scheduled_jobs']}jobs"
             us = r["wall_us_per_check"]
@@ -528,6 +628,7 @@ def main() -> None:
     claims += _ingest_claims(rows)
     claims += _faults_claims(rows)
     claims += _cache_claims(rows)
+    claims += _ckpt_claims(rows)
     conf = {r["scheduled_jobs"]: r for r in rows if r["bench"] == "conflict_check"}
     claims.append(("§5.5: conflict check ~O(1) in scheduled jobs",
                    conf[50_000]["wall_us_per_check"] < 20 * conf[100]["wall_us_per_check"],
@@ -547,12 +648,13 @@ def main() -> None:
 if __name__ == "__main__":
     args = sys.argv[1:]
     if "--check-all" in args:
-        # all six gates in one invocation; report every failure, then exit
+        # all seven gates in one invocation; report every failure, then exit
         failed = []
         for name, gate in (
             ("finish", check_finish), ("schedule", check_schedule),
             ("pack", check_pack), ("ingest", check_ingest),
             ("faults", check_faults), ("cache", check_cache),
+            ("ckpt", check_ckpt),
         ):
             print(f"# --check-{name} ...", file=sys.stderr)
             try:
@@ -582,6 +684,9 @@ if __name__ == "__main__":
         ran_gate = True
     if "--check-cache" in args:
         check_cache()
+        ran_gate = True
+    if "--check-ckpt" in args:
+        check_ckpt()
         ran_gate = True
     if not ran_gate:
         main()

@@ -1,0 +1,98 @@
+"""Checkpoint campaign walkthrough: training state as versioned data.
+
+A tiny "training loop" saves three checkpoints through the chunked annex
+(DESIGN.md §12), then restores the middle one — demonstrating:
+
+  1. every checkpoint is a commit: `CheckpointManager.save` streams each
+     leaf into the annex as a `.npy` artifact and commits pointers + a
+     manifest with a machine-actionable record (the RunSpec rides in the
+     commit object itself)
+  2. content-defined chunking makes step-over-step saves delta-sized:
+     with ~3% of each tensor changing per step, step 2 and 3 ingest only
+     the chunks the churn touched (watch `bytes_written` per save)
+  3. restore is by commit — `checkpoints()` lists (commit, step), and
+     restoring the *middle* checkpoint returns state bit-identical to
+     what was saved, bf16 included
+
+Run:  PYTHONPATH=src python examples/train_campaign.py
+"""
+import os
+import tempfile
+
+import ml_dtypes
+import numpy as np
+
+from repro.core import records as R
+from repro.core.chunks import ChunkParams
+from repro.core.fsio import GPFS_STRIPED, SimClock
+from repro.core.repo import Repository
+from repro.train.checkpoint import CheckpointManager
+
+
+def main() -> None:
+    work = tempfile.mkdtemp(prefix="repro_campaign_")
+    clock = SimClock()
+    repo = Repository.init(
+        os.path.join(work, "project"),
+        profile=GPFS_STRIPED, clock=clock,
+        annex_threshold=64 << 10,
+        chunk_threshold=256 << 10,
+        chunk_params=ChunkParams(min_size=8 << 10, avg_bits=14,
+                                 max_size=64 << 10),
+    )
+    print(f"== repository at {repo.root} (chunk tier on)")
+
+    # -- a sharded model: one f32 layer, one bf16 embedding, Adam moments
+    rng = np.random.default_rng(0)
+    params = {
+        "layer": rng.standard_normal((512, 1024), dtype=np.float32),
+        "embed": rng.standard_normal((512, 1024), dtype=np.float32)
+        .astype(ml_dtypes.bfloat16),
+    }
+    opt_state = {
+        "m": {"layer": np.zeros((512, 1024), np.float32)},
+        "step": np.int32(0),
+    }
+
+    ckpt = CheckpointManager(repo)
+    saved_embed = {}
+    for step in (1, 2, 3):
+        if step > 1:
+            # ~3% of each tensor drifts per step — the rest is the bytes
+            # of the previous checkpoint
+            for leaf in (params["layer"], params["embed"],
+                         opt_state["m"]["layer"]):
+                flat = leaf.reshape(-1)
+                n = flat.size // 32
+                off = int(rng.integers(0, flat.size - n))
+                flat[off:off + n] = rng.standard_normal(
+                    n, dtype=np.float32).astype(leaf.dtype)
+            opt_state["step"] = np.int32(step)
+        b0 = clock.bytes_written
+        oid = ckpt.save(step, params, opt_state, data_step=step)
+        saved_embed[step] = np.asarray(params["embed"]).copy()
+        print(f"== step {step}: commit {oid[:12]} "
+              f"ingested {(clock.bytes_written - b0) / 2**20:.2f} MiB")
+
+    # -- the campaign is ordinary history: (commit, step), newest first
+    cps = ckpt.checkpoints()
+    print("== checkpoints:", [(oid[:8], step) for oid, step in cps])
+
+    # -- restore the MIDDLE checkpoint by its commit
+    middle_oid = dict((step, oid) for oid, step in cps)[2]
+    state, manifest = ckpt.restore(middle_oid)
+    assert manifest["step"] == 2
+    restored = np.asarray(state["params"]["embed"])
+    assert restored.dtype == ml_dtypes.bfloat16
+    assert restored.tobytes() == saved_embed[2].tobytes()
+    assert int(state["opt_state"]["step"]) == 2
+    spec = R.spec_of(repo, middle_oid)  # the commit carries its RunSpec
+    print("== restored step 2 bit-identical (bf16 embed verified), "
+          f"spec: {spec.cmd!r}")
+    print(f"== modeled FS time for the whole campaign: "
+          f"{clock.snapshot():.2f}s")
+    print("== OK")
+
+
+if __name__ == "__main__":
+    main()

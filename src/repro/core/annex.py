@@ -27,37 +27,113 @@ degraded shard directory, and re-ingest of duplicate content short-circuits
 before moving bytes. ``drop`` discards from the set; a *foreign* process
 dropping content this store has observed can make non-``fresh`` probes
 stale, which is why numcopies-critical checks pass ``fresh=True``.
+
+Chunk tier (DESIGN.md §12)
+--------------------------
+A *chunked* object is stored as a **manifest** — a small annex object on
+the whole-content key path, recognizable by an in-band magic header — that
+lists the content-defined chunk keys (``SHA256C-…``, cut by
+:mod:`~repro.core.chunks`) whose concatenation is the content. Chunks are
+ordinary content-addressed objects in the same shard layout, shared by
+every manifest that references them: re-ingesting a checkpoint where 3% of
+the bytes moved writes ~3% of the chunks plus one new manifest. ``read``/
+``copy_to`` reassemble transparently; crash ordering is chunks first,
+manifest last, so a killed ingest leaves only unreferenced chunks for
+``sweep_orphan_chunks`` (wired into ``Session.gc()``). A manifest can be
+told apart from a plain object without reading it: the stored byte size
+differs from the size embedded in the key.
 """
 from __future__ import annotations
 
 import hashlib
+import json
 import os
 import threading
 import time
 import uuid
 
+from .chunks import ChunkParams, Cutter
 from .faults import is_crash, owner_is_dead
 from .fsio import FS
-from .hashing import make_annex_key, parse_annex_key, verify_annex_key
+from .hashing import (
+    chunk_key_for_bytes,
+    is_chunk_key,
+    make_annex_key,
+    make_chunk_key,
+    parse_annex_key,
+    verify_annex_key,
+)
 
 POINTER_PREFIX = b"#%REPRO-ANNEX%#"
 _POINTER_MAX = 256
 KNOWN_KEY_CAP = 1 << 20  # bound the probe-skip set for long-lived processes
 
+CHUNK_MAGIC = b"#%REPRO-CHUNKS%#"
+_CHUNK_FLUSH = 8 << 20  # pending chunk bytes buffered per has_many+write flush
 
-def make_pointer(key: str) -> bytes:
+
+def make_pointer(key: str, chunked: bool = False) -> bytes:
+    """Pointer v1: ``#%REPRO-ANNEX%# <key>\\n``. Pointer v2 appends a
+    ``chunked`` flag token so a checkout that later materializes the file
+    knows to reassemble. v1 parsers that take the first token keep working."""
     parse_annex_key(key)  # validate
-    return POINTER_PREFIX + b" " + key.encode() + b"\n"
+    flag = b" chunked" if chunked else b""
+    return POINTER_PREFIX + b" " + key.encode() + flag + b"\n"
 
 
 def parse_pointer(data: bytes) -> str | None:
-    """Return the annex key if ``data`` is a pointer file, else None."""
+    """Return the annex key if ``data`` is a pointer file (v1 or v2),
+    else None."""
+    parsed = parse_pointer_full(data)
+    return None if parsed is None else parsed[0]
+
+
+def parse_pointer_full(data: bytes) -> tuple[str, bool] | None:
+    """Return ``(key, chunked)`` if ``data`` is a pointer file, else None."""
     if len(data) > _POINTER_MAX or not data.startswith(POINTER_PREFIX):
         return None
     try:
-        return data[len(POINTER_PREFIX):].strip().decode()
+        fields = data[len(POINTER_PREFIX):].split()
+        if not fields:
+            return None
+        return fields[0].decode(), b"chunked" in fields[1:]
     except UnicodeDecodeError:
         return None
+
+
+def encode_chunk_manifest(key: str, chunk_keys: list[str],
+                          params: ChunkParams | None) -> bytes:
+    """Manifest bytes stored *at the whole-content key path*. The embedded
+    ``key`` must match the path's key — that is what lets ``read`` treat
+    magic-prefixed real content as ordinary bytes (a file that is a valid
+    manifest *for its own key* would have to contain its own sha256, a
+    fixed point nobody can construct)."""
+    body = {
+        "v": 1,
+        "key": key,
+        "chunks": list(chunk_keys),
+        "cutter": params.to_json() if params is not None else None,
+    }
+    return (
+        CHUNK_MAGIC + b"\n"
+        + json.dumps(body, sort_keys=True, separators=(",", ":")).encode()
+    )
+
+
+def parse_chunk_manifest(data: bytes, key: str | None = None) -> dict | None:
+    """Decode manifest bytes; None if ``data`` is not a manifest, or claims
+    a different key than ``key`` (then it is ordinary content)."""
+    if not data.startswith(CHUNK_MAGIC + b"\n"):
+        return None
+    try:
+        body = json.loads(data[len(CHUNK_MAGIC) + 1:])
+    except (UnicodeDecodeError, json.JSONDecodeError):
+        return None
+    if not isinstance(body, dict) or "key" not in body or "chunks" not in body:
+        return None
+    if key is not None and body["key"] != key:
+        return None
+    return body
 
 
 class AnnexStore:
@@ -69,10 +145,20 @@ class AnnexStore:
     """
 
     def __init__(self, root: str, fs: FS, name: str = "local",
-                 sweep_on_open: bool = True):
+                 sweep_on_open: bool = True,
+                 chunk_params: ChunkParams | None = None,
+                 chunk_threshold: int | None = None):
         self.root = root
         self.fs = fs
         self.name = name
+        # chunk tier configuration: params govern the cutter, threshold
+        # routes in-memory puts (``put_bytes``) at/above it through the
+        # chunked path. ``chunk_aware`` additionally arms the manifest
+        # probe in ``copy_to`` — repos that never enabled chunking keep
+        # their exact legacy meta-op accounting.
+        self.chunk_params = chunk_params
+        self.chunk_threshold = chunk_threshold
+        self.chunk_aware = chunk_params is not None
         self._known_lock = threading.Lock()
         self._known: set[str] = set()
         if sweep_on_open and os.path.isdir(root):
@@ -186,11 +272,11 @@ class AnnexStore:
         self.fs.rename(tmp, self._path(key))
         self._mark_known(key)
 
-    def put_bytes(self, key: str, data: bytes) -> None:
-        if not verify_annex_key(key, data):
-            raise ValueError(f"content does not match key {key}")
-        if self.has(key):
-            return
+    def _publish_raw(self, key: str, data: bytes) -> None:
+        """tmp-write + atomic rename of pre-verified bytes onto ``key``.
+        Shared by ``put_bytes``, chunk publication, and manifest
+        publication (manifest bytes do not hash to their key — the chunk
+        contents do, which the read path verifies end to end)."""
         tmp = self._tmp_path()
         try:
             self.fs.write_bytes(tmp, data)
@@ -200,6 +286,28 @@ class AnnexStore:
                 raise  # a dead process runs no cleanup: the tmp leaks
             self.fs.unlink(tmp)
             raise
+
+    def put_bytes(self, key: str, data: bytes) -> None:
+        if not verify_annex_key(key, data):
+            raise ValueError(f"content does not match key {key}")
+        if self.has(key):
+            return
+        if (
+            self.chunk_threshold is not None
+            and self.chunk_params is not None
+            and not is_chunk_key(key)
+            and len(data) >= self.chunk_threshold
+        ):
+            # in-memory publication of a large payload (e.g. run-cache
+            # materialization): store it chunked instead of double-buffering
+            # a whole second object — shared chunks are skipped, and the
+            # content round-trips through the same manifest read path
+            stored = self._ingest_chunked(memoryview(data)[i:i + (1 << 20)]
+                                          for i in range(0, len(data), 1 << 20))
+            if stored != key:  # pragma: no cover - verify above makes this unreachable
+                raise IOError(f"chunked put produced {stored}, expected {key}")
+            return
+        self._publish_raw(key, data)
 
     def _hash_while_write(self, src: str, chunk_size: int) -> tuple[str, str, int]:
         """The single-pass pump shared by ``put_file``/``ingest_file``:
@@ -232,8 +340,12 @@ class AnnexStore:
         if self.has(key):
             return
         tmp, hx, size = self._hash_while_write(src, 1 << 20)
+        rebuilt = (
+            make_chunk_key(hx, size) if is_chunk_key(key)
+            else make_annex_key(hx, size)
+        )
         try:
-            if make_annex_key(hx, size) != key:
+            if rebuilt != key:
                 raise IOError(f"content of {src} does not match key {key}")
             self._commit(tmp, key)
         except BaseException as e:
@@ -242,12 +354,22 @@ class AnnexStore:
             self.fs.unlink(tmp)
             raise
 
-    def ingest_file(self, src: str, chunk_size: int = 1 << 20) -> str:
+    def ingest_file(self, src: str, chunk_size: int = 1 << 20,
+                    chunked: bool = False) -> str:
         """Single-pass ingest: hash ``src`` while writing the annex object.
         The object is written to a tmp name (the key isn't known until the
         hash is) and renamed onto the key path; duplicate content (key
         already known or present) discards the tmp instead, leaving exactly
-        one object. Returns the key."""
+        one object. Returns the key.
+
+        ``chunked=True`` routes through the chunk tier: the same single
+        charged read pass feeds the content-defined cutter, chunk hashes,
+        and the whole-content hash; ``has_many``-batched presence checks
+        skip chunks the store already holds, so only the delta's bytes are
+        written before the manifest is published on the key path."""
+        if chunked:
+            with self.fs.open_read(src, chunk_size) as chunks:
+                return self._ingest_chunked(chunks)
         tmp, hx, size = self._hash_while_write(src, chunk_size)
         key = make_annex_key(hx, size)
         try:
@@ -263,21 +385,208 @@ class AnnexStore:
             raise
         return key
 
+    def put_stream(self, blocks, chunked: bool = False) -> str:
+        """Ingest from an in-memory iterator of byte blocks — the write
+        path for content that never existed as a file (checkpoint leaves
+        streaming off the device). Only the write side charges the FS cost
+        model; the source is process memory. Returns the key."""
+        if chunked:
+            return self._ingest_chunked(blocks)
+        h = hashlib.sha256()
+        tmp = self._tmp_path()
+
+        def hashing():
+            for b in blocks:
+                h.update(b)
+                yield b
+
+        try:
+            size = self.fs.write_chunks(tmp, hashing())
+        except BaseException as e:
+            if is_crash(e):
+                raise
+            self.fs.unlink(tmp)
+            raise
+        key = make_annex_key(h.hexdigest(), size)
+        try:
+            if self.has(key):
+                self.fs.unlink(tmp)
+                return key
+            self._commit(tmp, key)
+        except BaseException as e:
+            if is_crash(e):
+                raise
+            self.fs.unlink(tmp)
+            raise
+        return key
+
+    def _ingest_chunked(self, blocks) -> str:
+        """Chunk-tier ingest pump: cut + hash + write in one pass.
+
+        Chunks are accumulated into bounded batches; each batch does one
+        ``has_many`` presence pass (known-key set answers steady-state
+        probes in memory) and writes only the misses, each tmp+rename
+        published so a concurrent identical ingest stays idempotent.
+        The manifest lands last — a crash anywhere before that leaves
+        only unreferenced chunks (``sweep_orphan_chunks``) and no partial
+        object on the key path."""
+        if self.chunk_params is None:
+            raise ValueError(f"store {self.name} has no chunk params configured")
+        cutter = Cutter(self.chunk_params)
+        full = hashlib.sha256()
+        total = 0
+        chunk_keys: list[str] = []
+        pending: list[tuple[str, bytes]] = []
+        pending_bytes = 0
+        published = 0
+
+        def flush():
+            nonlocal pending, pending_bytes, published
+            if not pending:
+                return
+            present = self.has_many([k for k, _ in pending])
+            for ck, data in pending:
+                if ck in present:
+                    continue
+                self._publish_raw(ck, data)
+                present.add(ck)  # batch-internal dedup of identical chunks
+                published += 1
+                if published == 1:
+                    self.fs.crash_point("chunk:mid-publish")
+            pending = []
+            pending_bytes = 0
+
+        def take(chunk: bytes):
+            nonlocal pending_bytes
+            ck = chunk_key_for_bytes(chunk)
+            chunk_keys.append(ck)
+            pending.append((ck, chunk))
+            pending_bytes += len(chunk)
+            if pending_bytes >= _CHUNK_FLUSH:
+                flush()
+
+        for block in blocks:
+            if not block:
+                continue
+            full.update(block)
+            total += len(block)
+            for chunk in cutter.feed(block):
+                take(chunk)
+        for chunk in cutter.finish():
+            take(chunk)
+        flush()
+        key = make_annex_key(full.hexdigest(), total)
+        self.fs.crash_point("chunk:before-manifest")
+        if not self.has(key):
+            self._publish_raw(
+                key, encode_chunk_manifest(key, chunk_keys, self.chunk_params)
+            )
+        return key
+
     # -- reads / deletion ----------------------------------------------
     def read(self, key: str) -> bytes:
         data = self.fs.read_bytes(self._path(key))
+        mf = parse_chunk_manifest(data, key)
+        if mf is not None:
+            parts = []
+            for ck in mf["chunks"]:
+                cd = self.fs.read_bytes(self._path(ck))
+                if not verify_annex_key(ck, cd):
+                    raise IOError(
+                        f"chunk corruption for {ck} (of {key}) in store {self.name}"
+                    )
+                parts.append(cd)
+            data = b"".join(parts)
         if not verify_annex_key(key, data):
             raise IOError(f"annex corruption for {key} in store {self.name}")
         self._mark_known(key)
         return data
 
+    def manifest_of(self, key: str) -> list[str] | None:
+        """Chunk keys of ``key`` if it is stored chunked here, else None.
+        Probes by size first — a manifest is the one object whose stored
+        byte count differs from the size its key embeds — so plain objects
+        cost a single stat, never a read."""
+        if is_chunk_key(key):
+            return None
+        content_size, _ = parse_annex_key(key)
+        path = self._path(key)
+        if self.fs.stat_size(path) == content_size:
+            return None
+        mf = parse_chunk_manifest(self.fs.read_bytes(path), key)
+        if mf is None:
+            raise IOError(
+                f"annex corruption for {key} in store {self.name}: stored size "
+                f"differs from key size but content is not a chunk manifest"
+            )
+        return list(mf["chunks"])
+
+    def put_manifest(self, key: str, chunk_keys: list[str]) -> None:
+        """Publish a manifest for ``key`` referencing chunks this store
+        already holds — the replication path (push/fetch move chunks
+        individually, then bind them with a locally encoded manifest)."""
+        if self.has(key):
+            return
+        self._publish_raw(key, encode_chunk_manifest(key, chunk_keys, self.chunk_params))
+
     def copy_to(self, key: str, dst: str) -> None:
-        self.fs.copy_file(self._path(key), dst)
+        """Materialize ``key`` at ``dst`` — streamed reassembly for chunked
+        objects, plain charged copy otherwise. The manifest probe is armed
+        only on chunk-aware stores so repositories that never enabled
+        chunking keep their exact legacy meta-op accounting."""
+        chunks = self.manifest_of(key) if self.chunk_aware else None
+        if chunks is None:
+            self.fs.copy_file(self._path(key), dst)
+            return
+
+        def gen():
+            for ck in chunks:
+                cd = self.fs.read_bytes(self._path(ck))
+                if not verify_annex_key(ck, cd):
+                    raise IOError(
+                        f"chunk corruption for {ck} (of {key}) in store {self.name}"
+                    )
+                yield cd
+
+        self.fs.write_chunks(dst, gen())
 
     def drop(self, key: str) -> None:
         with self._known_lock:
             self._known.discard(key)
         self.fs.unlink(self._path(key))
+
+    def sweep_orphan_chunks(self) -> int:
+        """Drop chunk-tier objects no manifest in this store references.
+
+        Orphans are what a crashed chunked ingest leaves behind (chunks
+        publish before the manifest) and what ``drop`` of a chunked key
+        strands (the manifest goes; shared chunks cannot). This is a full
+        charged enumeration + one stat per whole-content key, so it lives
+        with the other offline maintenance in ``Session.gc()`` — never on
+        the ingest path. Concurrent chunked ingests would race it exactly
+        like ``repack``; run it quiesced. Returns the count swept."""
+        names = self.keys()
+        chunk_keys = {k for k in names if is_chunk_key(k)}
+        if not chunk_keys:
+            return 0
+        referenced: set[str] = set()
+        for k in names:
+            if is_chunk_key(k):
+                continue
+            try:
+                chunks = self.manifest_of(k)
+            except (OSError, ValueError):
+                continue  # corrupt or foreign entry: verify()'s problem
+            if chunks:
+                referenced.update(chunks)
+        swept = 0
+        for ck in chunk_keys - referenced:
+            try:
+                self.drop(ck)
+                swept += 1
+            except OSError:
+                pass  # a racing sweeper got it first
+        return swept
 
     def keys(self) -> list[str]:
         # full enumeration goes through FS like every other store op, so

@@ -14,6 +14,13 @@ _CHUNK = 1 << 20
 
 ANNEX_KEY_RE = re.compile(r"^SHA256-s(?P<size>\d+)--(?P<hex>[0-9a-f]{64})$")
 
+# Chunk tier (DESIGN.md §12): sub-file pieces of a chunked object use their
+# own key namespace — SHA256C — so store sweeps / gc can tell data chunks
+# from whole-content objects without reading them. Verification is
+# identical: the key alone binds size + content.
+CHUNK_KEY_RE = re.compile(r"^SHA256C-s(?P<size>\d+)--(?P<hex>[0-9a-f]{64})$")
+_ANY_KEY_RE = re.compile(r"^SHA256C?-s(?P<size>\d+)--(?P<hex>[0-9a-f]{64})$")
+
 
 def sha256_bytes(data: bytes) -> str:
     return hashlib.sha256(data).hexdigest()
@@ -54,9 +61,23 @@ def annex_key_for_file(path: str, fs=None) -> str:
     return make_annex_key(hx, size)
 
 
+def make_chunk_key(hx: str, size: int) -> str:
+    return f"SHA256C-s{size}--{hx}"
+
+
+def chunk_key_for_bytes(data: bytes) -> str:
+    return make_chunk_key(sha256_bytes(data), len(data))
+
+
+def is_chunk_key(key: str) -> bool:
+    return key.startswith("SHA256C-")
+
+
 def parse_annex_key(key: str) -> tuple[int, str]:
-    """Return (size, hex) or raise ValueError."""
-    m = ANNEX_KEY_RE.match(key)
+    """Return (size, hex) or raise ValueError. Accepts both whole-content
+    (``SHA256-``) and chunk-tier (``SHA256C-``) keys — they share storage
+    layout and verification."""
+    m = _ANY_KEY_RE.match(key)
     if not m:
         raise ValueError(f"not a valid annex key: {key!r}")
     return int(m.group("size")), m.group("hex")

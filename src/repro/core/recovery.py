@@ -539,6 +539,8 @@ _DIVERGENCE_KINDS = {
     "broken-ref",
     "missing-commit",
     "missing-annex",
+    "missing-chunk",
+    "broken-manifest",
     "duplicate-record",
     "orphan-job",
     "orphan-protection",
@@ -631,6 +633,54 @@ def verify(session: "Session", repair: bool = False) -> dict:
                             repo.annex.put_file(key, abspath)
                             rec["repaired"] = True
                             repaired.append(rec)
+                    except Exception:
+                        pass
+
+    # -- chunk tier (§12): a store holding a manifest must hold its chunks --
+    # (that is the invariant read/copy_to depend on — chunk presence in
+    # *some other* store doesn't make this store's manifest readable)
+    if annex_keys and repo.annex.chunk_aware:
+        stores = [repo.annex, *repo._remotes]
+        for key, path in sorted(annex_keys.items()):
+            for store in stores:
+                if not store.has(key):
+                    continue
+                try:
+                    chunks = store.manifest_of(key)
+                except (OSError, ValueError) as e:
+                    issue("broken-manifest", f"{key} in {store.name}: {e}",
+                          key=key, store=store.name)
+                    continue
+                if not chunks:
+                    continue
+                for ck in sorted(set(chunks) - store.has_many(chunks)):
+                    rec = issue(
+                        "missing-chunk",
+                        f"{store.name} lacks chunk {ck} of {key} ({path})",
+                        key=key, chunk=ck, store=store.name, path=path,
+                    )
+                    if not repair:
+                        continue
+                    # safe repairs only: copy the chunk from a store that
+                    # still has it, else re-cut an intact worktree copy
+                    # (the returned key proves the content was genuine)
+                    try:
+                        src = next(
+                            (s for s in stores if s is not store and s.has(ck)),
+                            None,
+                        )
+                        if src is not None:
+                            store.put_file(ck, src._path(ck))
+                            rec["repaired"] = True
+                            repaired.append(rec)
+                        elif store is repo.annex:
+                            abspath = os.path.join(repo.root, path)
+                            if os.path.isfile(abspath) and (
+                                repo.annex.ingest_file(abspath, chunked=True)
+                                == key
+                            ):
+                                rec["repaired"] = True
+                                repaired.append(rec)
                     except Exception:
                         pass
 

@@ -23,7 +23,14 @@ import threading
 import time
 import uuid
 
-from .annex import _POINTER_MAX, AnnexStore, make_pointer, parse_pointer
+from .annex import (
+    _POINTER_MAX,
+    AnnexStore,
+    make_pointer,
+    parse_pointer,
+    parse_pointer_full,
+)
+from .chunks import ChunkParams
 from .conflicts import proper_prefixes
 from .fsio import FS, NULL_FS, FSProfile, SimClock
 from .hashing import annex_key_for_bytes, make_annex_key
@@ -54,9 +61,20 @@ class Repository:
         self.ref_lock = threading.RLock()
         self.config = json.loads(self.fs.read_bytes(cfg_path))
         self.objects = ObjectStore(os.path.join(self.repro_dir, "objects"), self.fs)
-        self.annex = AnnexStore(os.path.join(self.repro_dir, "annex", "objects"), self.fs)
+        # chunk-tier config (DESIGN §12) is repo-wide and persisted, so every
+        # session — and every store of this repo, remotes included — agrees
+        # on cutter parameters and on whether manifests may exist at all
+        cp = self.config.get("chunk_params")
+        self._chunk_params = ChunkParams.from_json(cp) if cp else None
+        self._chunk_threshold = self.config.get("chunk_threshold")
+        store_kw = dict(
+            chunk_params=self._chunk_params, chunk_threshold=self._chunk_threshold
+        )
+        self.annex = AnnexStore(
+            os.path.join(self.repro_dir, "annex", "objects"), self.fs, **store_kw
+        )
         self._remotes: list[AnnexStore] = [
-            AnnexStore(p, self.fs, name=f"remote{i}")
+            AnnexStore(p, self.fs, name=f"remote{i}", **store_kw)
             for i, p in enumerate(self.config.get("annex_remotes", []))
         ]
 
@@ -71,6 +89,8 @@ class Repository:
         annex_patterns: tuple[str, ...] = (),
         dsid: str | None = None,
         faults=None,
+        chunk_threshold: int | None = None,
+        chunk_params: "ChunkParams | dict | None" = None,
     ) -> "Repository":
         fs = FS(profile, clock, faults=faults)
         root = os.path.abspath(root)
@@ -78,11 +98,17 @@ class Repository:
         os.makedirs(os.path.join(repro_dir, "objects"), exist_ok=True)
         os.makedirs(os.path.join(repro_dir, "refs", "heads"), exist_ok=True)
         os.makedirs(os.path.join(repro_dir, "annex", "objects"), exist_ok=True)
+        if isinstance(chunk_params, dict):
+            chunk_params = ChunkParams.from_json(chunk_params)
+        if chunk_threshold is not None and chunk_params is None:
+            chunk_params = ChunkParams()  # chunking on with default cutter
         cfg = {
             "dsid": dsid or str(uuid.uuid4()),
             "annex_threshold": annex_threshold,
             "annex_patterns": list(annex_patterns),
             "annex_remotes": [],
+            "chunk_threshold": chunk_threshold,
+            "chunk_params": chunk_params.to_json() if chunk_params else None,
         }
         fs.write_bytes(os.path.join(repro_dir, "config.json"), json.dumps(cfg).encode())
         fs.write_bytes(os.path.join(repro_dir, "HEAD"), b"main")
@@ -100,6 +126,8 @@ class Repository:
             annex_threshold=src.config["annex_threshold"],
             annex_patterns=tuple(src.config.get("annex_patterns", ())),
             dsid=src.config["dsid"],
+            chunk_threshold=src.config.get("chunk_threshold"),
+            chunk_params=src.config.get("chunk_params"),
         )
         if fs is not None:
             repo.fs = fs
@@ -145,7 +173,13 @@ class Repository:
             self.config["annex_remotes"].append(store_root)
             self._save_config()
             self._remotes.append(
-                AnnexStore(store_root, self.fs, name=f"remote{len(self._remotes)}")
+                AnnexStore(
+                    store_root,
+                    self.fs,
+                    name=f"remote{len(self._remotes)}",
+                    chunk_params=self._chunk_params,
+                    chunk_threshold=self._chunk_threshold,
+                )
             )
 
     def file_lock(self, name: str, ttl_s: float = 600.0) -> FileLock:
@@ -351,16 +385,34 @@ class Repository:
             fnmatch.fnmatch(relpath, pat) for pat in self.config.get("annex_patterns", ())
         )
 
+    def _should_chunk(self, size: int) -> bool:
+        """Chunk-tier routing (DESIGN §12): content at/above the configured
+        ``chunk_threshold`` is stored as a chunk manifest. Off (None) unless
+        a repo opted in at init — entries, pointers, and dedup accounting of
+        non-chunked repositories are byte-identical to the legacy path."""
+        return (
+            self._chunk_threshold is not None
+            and self._chunk_params is not None
+            and size >= self._chunk_threshold
+        )
+
+    @staticmethod
+    def _annex_entry(key: str, chunked: bool) -> dict:
+        e = {"t": "annex", "key": key}
+        if chunked:
+            e["chunked"] = True
+        return e
+
     def _entry_for_data(self, relpath: str, data: bytes) -> dict:
         """Tree entry for small in-memory content (pointer passthrough,
         annex-by-pattern, or blob)."""
-        key = parse_pointer(data)
-        if key is not None:  # pointer file: content not present, key known
-            return {"t": "annex", "key": key}
+        parsed = parse_pointer_full(data)
+        if parsed is not None:  # pointer file: content not present, key known
+            return self._annex_entry(*parsed)
         if self._should_annex(relpath, len(data)):
             key = annex_key_for_bytes(data)
-            self.annex.put_bytes(key, data)
-            return {"t": "annex", "key": key}
+            self.annex.put_bytes(key, data)  # chunk-routes above the threshold
+            return self._annex_entry(key, self._should_chunk(len(data)))
         return {"t": "blob", "oid": self.objects.put_blob(data)}
 
     def _hash_working_file(self, relpath: str, single_pass: bool = True) -> dict:
@@ -379,7 +431,10 @@ class Repository:
             return self._entry_for_data(relpath, self.fs.read_bytes(abspath))
         size = self.fs.stat_size(abspath)
         if size > _POINTER_MAX and self._should_annex(relpath, size):
-            return {"t": "annex", "key": self.annex.ingest_file(abspath)}
+            chunked = self._should_chunk(size)
+            return self._annex_entry(
+                self.annex.ingest_file(abspath, chunked=chunked), chunked
+            )
         return self._entry_for_data(relpath, self.fs.read_bytes(abspath))
 
     def hash_path_entry(self, relpath: str) -> dict:
@@ -391,13 +446,17 @@ class Repository:
         size = self.fs.stat_size(abspath)
         if size > _POINTER_MAX and self._should_annex(relpath, size):
             hx, sz = self.fs.hash_file(abspath)
-            return {"t": "annex", "key": make_annex_key(hx, sz)}
+            # the chunked flag mirrors what staging would produce, so
+            # rerun's entry comparison never sees a spurious difference
+            return self._annex_entry(make_annex_key(hx, sz), self._should_chunk(sz))
         data = self.fs.read_bytes(abspath)
-        key = parse_pointer(data)
-        if key is not None:
-            return {"t": "annex", "key": key}
+        parsed = parse_pointer_full(data)
+        if parsed is not None:
+            return self._annex_entry(*parsed)
         if self._should_annex(relpath, len(data)):
-            return {"t": "annex", "key": annex_key_for_bytes(data)}
+            return self._annex_entry(
+                annex_key_for_bytes(data), self._should_chunk(len(data))
+            )
         return {"t": "blob", "oid": self.objects.oid_for("blob", data)}
 
     def ingest_external_file(self, src: str, relpath: str) -> dict:
@@ -414,7 +473,10 @@ class Repository:
         size = self.fs.stat_size(src)
         entry = None
         if size > _POINTER_MAX and self._should_annex(relpath, size):
-            entry = {"t": "annex", "key": self.annex.ingest_file(src)}
+            chunked = self._should_chunk(size)
+            entry = self._annex_entry(
+                self.annex.ingest_file(src, chunked=chunked), chunked
+            )
         else:
             entry = self._entry_for_data(relpath, self.fs.read_bytes(src))
         try:
@@ -675,9 +737,11 @@ class Repository:
                 # remote content needs an explicit annex_get.
                 key = entry["key"]
                 if self.annex.has(key):
-                    self.annex.copy_to(key, abspath)
+                    self.annex.copy_to(key, abspath)  # reassembles if chunked
                 else:
-                    self.fs.write_bytes(abspath, make_pointer(key))
+                    self.fs.write_bytes(
+                        abspath, make_pointer(key, chunked=entry.get("chunked", False))
+                    )
 
     # -- history ------------------------------------------------------------
     def log(self, start: str | None = None):
@@ -798,14 +862,47 @@ class Repository:
             raise KeyError(f"{path} is not an annexed file")
         return entry["key"]
 
+    def annex_fetch_key(self, key: str, chunked: bool = False) -> AnnexStore:
+        """Ensure the *local* store holds ``key``, fetching from any remote
+        that has it. Chunked objects fetch as a delta: a ``has_many``
+        pre-pass finds which chunks are already local (shared with earlier
+        checkpoints), only the misses move — streamed, verified per chunk —
+        and a manifest referencing them is published locally. Returns the
+        local store."""
+        if self.annex.has(key):
+            return self.annex
+        store = self._find_store(key)
+        if store is None:
+            raise FileNotFoundError(f"no store has {key}")
+        chunks = store.manifest_of(key) if (chunked or store.chunk_aware) else None
+        if chunks is None:
+            # whole object: streamed verified copy, never a memory buffer
+            self.annex.put_file(key, store._path(key))
+            return self.annex
+        local = self.annex.has_many(chunks)
+        for ck in chunks:
+            if ck not in local:
+                self.annex.put_file(ck, store._path(ck))
+                local.add(ck)  # duplicate chunk keys in one manifest
+        self.annex.put_manifest(key, chunks)
+        return self.annex
+
     def annex_get(self, path: str) -> bool:
         """Ensure the worktree file at ``path`` has real content (datalad get).
         Returns True if a fetch occurred."""
         abspath = os.path.join(self.root, path)
         data = self.fs.read_bytes(abspath)
-        key = parse_pointer(data)
-        if key is None:
+        parsed = parse_pointer_full(data)
+        if parsed is None:
             return False  # already content
+        key, chunked = parsed
+        if chunked or self.annex.chunk_aware:
+            # chunk-tier route: delta-fetch into the local store, then a
+            # streamed reassembly into the worktree — whole-object bytes
+            # never transit memory
+            self.annex_fetch_key(key, chunked=chunked)
+            self.annex.copy_to(key, abspath)
+            return True
         store = self._find_store(key)
         if store is None:
             raise FileNotFoundError(f"no store has {key} for {path}")
@@ -829,8 +926,13 @@ class Repository:
             raise RuntimeError(
                 f"refusing to drop last copy of {path} ({key}); use force=True"
             )
-        self.fs.write_bytes(abspath, make_pointer(key))
+        chunked = False
+        if self.annex.chunk_aware and self.annex.has(key):
+            chunked = self.annex.manifest_of(key) is not None
+        self.fs.write_bytes(abspath, make_pointer(key, chunked=chunked))
         if self.annex.has(key):
+            # a chunked drop removes the manifest; shared chunks stay for
+            # other manifests and are reclaimed by gc's orphan sweep
             self.annex.drop(key)
 
     def annex_push(self, store: AnnexStore, keys: list[str] | None = None) -> int:
@@ -846,9 +948,23 @@ class Repository:
         remote = store.has_many(keys)
         n = 0
         for key in keys:
-            if key in local and key not in remote:
+            if key not in local or key in remote:
+                continue
+            chunks = self.annex.manifest_of(key) if self.annex.chunk_aware else None
+            if chunks is not None:
+                # chunked object: move only the chunks the remote lacks,
+                # then bind them there with a freshly encoded manifest
+                # (manifest bytes don't hash to the key, so put_file
+                # can't carry them)
+                remote_chunks = store.has_many(chunks)
+                for ck in chunks:
+                    if ck not in remote_chunks:
+                        store.put_file(ck, self.annex._path(ck))
+                        remote_chunks.add(ck)
+                store.put_manifest(key, chunks)
+            else:
                 store.put_file(key, self.annex._path(key))
-                n += 1
+            n += 1
         return n
 
     # -- lock/unlock -------------------------------------------------------------

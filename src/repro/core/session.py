@@ -126,15 +126,21 @@ class Session:
     def head(self) -> str | None:
         return self.repo.head_commit()
 
-    def gc(self, delete_loose: bool = True, prune_cache: bool = True) -> dict:
+    def gc(self, delete_loose: bool = True, prune_cache: bool = True,
+           sweep_chunks: bool = True) -> dict:
         """Compact the object store: migrate loose objects into a pack and
         drop the shard entry counts that parallel-FS metadata latency
         degrades with (DESIGN.md §8). Crash-safe — the pack is published
         before any loose file is unlinked. ``prune_cache`` (default) also
         evicts §11 run-cache rows whose recorded commit or annex objects no
         longer exist, so the cache can never serve a hit it cannot
-        materialize. Returns repack stats (+ ``cache_evicted``)."""
+        materialize, and ``sweep_chunks`` drops chunk-tier objects (§12) no
+        manifest references — what a crashed chunked ingest or a dropped
+        chunked key leaves behind. Returns repack stats (+ ``cache_evicted``,
+        ``chunks_swept``)."""
         stats = dict(self.repo.objects.repack(delete_loose=delete_loose) or {})
+        if sweep_chunks and self.repo.annex.chunk_aware:
+            stats["chunks_swept"] = self.repo.annex.sweep_orphan_chunks()
         if prune_cache:
             from .jobdb import JobDB
             from .runcache import RunCache

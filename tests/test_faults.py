@@ -279,6 +279,101 @@ def test_crash_points_recorded_cover_matrix(tmp_path):
         assert point in log, f"{point} never passed in a clean run"
 
 
+# --------------------------------------- §12 chunked checkpoint crash matrix
+# chunk:* fire inside a chunked annex ingest (chunks publish before the
+# manifest); ckpt:* bracket the CheckpointManager commit. These need a
+# chunk-enabled repo and a checkpoint save, so they get their own env.
+CKPT_POINTS = [
+    "chunk:mid-publish",
+    "chunk:before-manifest",
+    "ckpt:leaves-written",
+    "ckpt:after-commit",
+]
+
+
+def ckpt_env(tmp_path, plan=None):
+    from repro.core.chunks import ChunkParams
+
+    root = str(tmp_path / "proj")
+    os.makedirs(root, exist_ok=True)
+    s = repro.open(
+        root, create=True, faults=plan, annex_threshold=64,
+        chunk_threshold=1 << 12,
+        chunk_params=ChunkParams(min_size=1 << 9, avg_bits=10,
+                                 max_size=1 << 13),
+    )
+    return root, s
+
+
+def ckpt_state(seed=0):
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    # one leaf above the chunk threshold, one 0-d below it
+    params = {"w": rng.standard_normal((64, 128), dtype=np.float32)}
+    opt_state = {"m": rng.standard_normal((64, 128), dtype=np.float32),
+                 "step": np.int32(0)}
+    return params, opt_state
+
+
+def ckpt_manager(repo):
+    from repro.train.checkpoint import CheckpointManager
+
+    return CheckpointManager(repo)
+
+
+@pytest.mark.parametrize("point", CKPT_POINTS)
+def test_ckpt_crash_matrix(tmp_path, point):
+    """Kill a checkpoint save at every §12 boundary: the commit is
+    all-or-nothing, recovery lands at zero divergence, a crashed chunked
+    ingest strands only unreferenced chunks (gc sweeps them), and the
+    interrupted save replays cleanly."""
+    import numpy as np
+
+    plan = FaultPlan(seed=7, crash_at={point: 1})
+    root, s = ckpt_env(tmp_path, plan)
+    params, opt_state = ckpt_state()
+    with pytest.raises(CrashInjected):
+        ckpt_manager(s.repo).save(1, params, opt_state, data_step=1)
+    s2 = Session(Repository(root, fs=FS(NULL_FS)))
+    s2.recover()
+    assert s2.verify()["divergence"] == 0
+    ckpt2 = ckpt_manager(s2.repo)
+    committed = ckpt2.checkpoints()
+    if point == "ckpt:after-commit":
+        # the commit landed before the crash: the checkpoint is fully usable
+        assert [step for _, step in committed] == [1]
+    else:
+        # no partial checkpoint commit is ever visible
+        assert committed == []
+        swept = s2.gc()["chunks_swept"]
+        if point.startswith("chunk:"):
+            # the dead ingest published chunks but never the manifest
+            assert swept > 0, point
+        ckpt2.save(1, params, opt_state, data_step=1)
+    state, manifest = ckpt2.restore()
+    assert manifest["step"] == 1
+    assert np.array_equal(np.asarray(state["params"]["w"]), params["w"])
+    assert np.array_equal(np.asarray(state["opt_state"]["m"]), opt_state["m"])
+    assert s2.verify()["divergence"] == 0
+    # gc after recovery+resave leaves no orphans behind
+    assert s2.gc()["chunks_swept"] == 0
+    s2.close()
+
+
+def test_ckpt_crash_points_recorded(tmp_path):
+    """A clean chunked checkpoint save passes every CKPT_POINTS boundary —
+    the matrix above cannot silently rot."""
+    plan = FaultPlan(seed=0, record_points=True)
+    root, s = ckpt_env(tmp_path, plan)
+    params, opt_state = ckpt_state()
+    ckpt_manager(s.repo).save(1, params, opt_state)
+    log = set(plan.crash_point_log)
+    for point in CKPT_POINTS:
+        assert point in log, f"{point} never passed in a clean checkpoint save"
+    s.close()
+
+
 # ------------------------------------------------------- transient faults
 def run_workload(tmp_path, sub, plan=None):
     root, s, specs = setup_session(tmp_path / sub, plan, n_jobs=2)

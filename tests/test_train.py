@@ -122,6 +122,63 @@ def test_async_checkpoint(repo):
     assert leaves_equal(state["params"], params)
 
 
+def test_async_checkpoint_failure_is_reraised(repo):
+    """A write failure on the async worker surfaces at the next sync point
+    (wait() or the next save_async) instead of being swallowed."""
+    params = {"w": np.ones(4, np.float32)}
+    opt_state = {"step": np.int32(0)}
+    ckpt = CheckpointManager(repo)
+    orig_write = ckpt._write
+
+    def failing(*a, **k):
+        raise RuntimeError("injected write failure")
+
+    ckpt._write = failing
+    ckpt.save_async(1, params, opt_state)
+    with pytest.raises(RuntimeError, match="injected write failure"):
+        ckpt.wait()
+    ckpt.wait()  # the failure was consumed by the re-raise, not sticky
+    # the same failure also surfaces from a back-to-back save_async
+    ckpt.save_async(2, params, opt_state)
+    with pytest.raises(RuntimeError, match="injected write failure"):
+        ckpt.save_async(3, params, opt_state)
+    # after recovery the manager is fully usable
+    ckpt._write = orig_write
+    ckpt.save_async(4, params, opt_state)
+    ckpt.wait()
+    state, manifest = ckpt.restore()
+    assert manifest["step"] == 4
+    assert np.array_equal(np.asarray(state["params"]["w"]), params["w"])
+
+
+def test_checkpoints_cache_is_incremental(repo, monkeypatch):
+    """checkpoints() is cached by ref tip: an unchanged HEAD reads zero
+    commits, an advanced HEAD walks only the commits added since — so
+    latest() in a long campaign never re-scans the whole log."""
+    params = {"w": np.arange(8, dtype=np.float32)}
+    opt_state = {"step": np.int32(0)}
+    ckpt = CheckpointManager(repo)
+    for step in (1, 2, 3):
+        ckpt.save(step, params, opt_state)
+    assert [s for _, s in ckpt.checkpoints()] == [3, 2, 1]
+
+    calls = []
+    orig = repo.objects.get_commit
+    monkeypatch.setattr(
+        repo.objects, "get_commit",
+        lambda oid: (calls.append(oid) or orig(oid)),
+    )
+    assert [s for _, s in ckpt.checkpoints()] == [3, 2, 1]
+    assert calls == []  # unchanged head: answered from cache
+    ckpt.save(4, params, opt_state)
+    calls.clear()
+    assert [s for _, s in ckpt.checkpoints()] == [4, 3, 2, 1]
+    assert len(calls) == 1  # only the commit added since the last call
+    # a fresh manager (cold cache) agrees — the cache is an optimization,
+    # not a source of truth
+    assert CheckpointManager(repo).checkpoints() == ckpt.checkpoints()
+
+
 def test_preemption_resume_bitwise_identical(tmp_path):
     """Kill-and-resume == uninterrupted run, bit for bit (deterministic data
     + init + optimizer). This is the paper's reproducibility property applied
