@@ -1,0 +1,208 @@
+"""Remote annex tier benchmark (DESIGN.md §13): what does the transfer
+protocol cost over a realistic link, and what does chunk-level delta push
+buy a multisite campaign?
+
+Two campaigns on the WAN preset (30 ms RTT, 1 Gb/s up / 2 Gb/s down, four
+parallel streams per direction):
+
+  push_cold         N fresh chunked objects pushed to an empty site: every
+                    chunk moves, plus one manifest bind and one batched
+                    presence round trip per object set.
+  push_incremental  ~3% contiguous churn per object, re-saved, re-pushed:
+                    the batched presence pre-pass skips every unchanged
+                    chunk, so only the churn footprint moves.
+  pull_cold         the same content restored into an emptied local annex
+                    (drop + gc, content only on the site) over a clean
+                    link.
+  pull_degraded     the same cold restore over a degraded link: seeded
+                    transient request errors and sub-timeout stalls on
+                    every direction. The transfer must *complete* — every
+                    key restored — with the retry count bounded by the
+                    fault model's per-operation budget.
+
+The local filesystem is the null profile, so sim seconds isolate the
+link: round trips, bandwidth, stalls, and backoff charges.
+
+The gate (benchmarks/run.py ``--check-remote``) holds two claims:
+  (a) the incremental push moves <= 0.2x the cold push's bytes at ~3%
+      churn,
+  (b) the degraded-network pull completes (all keys restored) within the
+      bounded retry budget (<= max_retries per remote operation).
+
+Rows are tagged ``bench="remote"`` and land in ``BENCH_remote.json``.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+import repro
+from repro.core import NetFaultRule, NetworkFaultModel
+from repro.core.chunks import ChunkParams
+from repro.core.fsio import SimClock
+
+from .common import cleanup, timer
+
+N_OBJS = 16
+OBJ_BYTES = 128 << 10
+CHURN = 0.03
+
+# ~8 KiB average chunks: a 3% contiguous churn region of a 128 KiB object
+# touches a handful of chunks, not the object
+CHUNK_THRESHOLD = 16 << 10
+CHUNK_PARAMS = ChunkParams(min_size=2 << 10, avg_bits=13, max_size=32 << 10)
+
+MAX_RETRIES = 4
+
+
+def _open(root, clock=None, net_faults=None, create=False):
+    kw = dict(
+        annex_threshold=1 << 10, chunk_threshold=CHUNK_THRESHOLD,
+        chunk_params=CHUNK_PARAMS,
+    ) if create else {}  # an existing repo's stored config wins
+    return repro.open(
+        root, create=create, clock=clock, net_faults=net_faults, **kw
+    )
+
+
+def _write_objs(proj, blobs):
+    for i, blob in enumerate(blobs):
+        with open(os.path.join(proj, f"obj{i:03d}.dat"), "wb") as f:
+            f.write(blob)
+
+
+def _row(case, n_objs, rep, sim_s, wall_s, **extra):
+    return {
+        "bench": "remote", "case": case, "n_objs": n_objs,
+        "bytes_moved": rep.get("bytes_sent", rep.get("bytes_received", 0)),
+        "chunks_moved": rep.get("chunks_sent", rep.get("chunks_fetched", 0)),
+        "retries": rep.get("retries", 0),
+        "failovers": rep.get("failovers", 0),
+        "sim_s": sim_s, "wall_s": wall_s,
+        **extra,
+    }
+
+
+def _push_campaign(n_objs: int) -> list[dict]:
+    root = tempfile.mkdtemp(prefix="bench_remote_push_")
+    proj = os.path.join(root, "proj")
+    os.makedirs(proj)
+    clock = SimClock()
+    try:
+        rng = np.random.default_rng(11)
+        blobs = [
+            bytearray(rng.integers(0, 256, OBJ_BYTES, dtype=np.uint8)
+                      .tobytes())
+            for _ in range(n_objs)
+        ]
+        s = _open(proj, clock=clock, create=True)
+        _write_objs(proj, blobs)
+        s.save(message="v1")
+        s.add_remote(os.path.join(root, "siteA"), name="siteA", net="wan")
+
+        s0 = clock.snapshot()
+        with timer() as t:
+            cold = s.push()[0]
+        rows = [_row("push_cold", n_objs, cold, clock.snapshot() - s0,
+                     t["s"], total_bytes=n_objs * OBJ_BYTES)]
+
+        # ~3% contiguous churn per object, the checkpoint-campaign shape
+        for blob in blobs:
+            n = max(1, int(len(blob) * CHURN))
+            off = int(rng.integers(0, len(blob) - n + 1))
+            blob[off:off + n] = rng.integers(0, 256, n, dtype=np.uint8) \
+                .tobytes()
+        _write_objs(proj, blobs)
+        s.save(message="v2")
+        s0 = clock.snapshot()
+        with timer() as t:
+            inc = s.push()[0]
+        rows.append(_row("push_incremental", n_objs, inc,
+                         clock.snapshot() - s0, t["s"], churn=CHURN,
+                         cold_bytes=cold["bytes_sent"]))
+        s.close()
+        return rows
+    finally:
+        cleanup(root)
+
+
+def _drain_local(s):
+    """Empty the local annex: drop every HEAD path (replica-verified), then
+    sweep the orphaned chunks — the cold-restore starting state."""
+    paths = sorted(
+        p for p, e in s.repo.tree_of(s.head()).items()
+        if e.get("t") == "annex"
+    )
+    for p in paths:
+        s.drop(p)
+    s.gc()
+
+
+def _pull_campaign(n_objs: int) -> list[dict]:
+    root = tempfile.mkdtemp(prefix="bench_remote_pull_")
+    proj = os.path.join(root, "proj")
+    os.makedirs(proj)
+    clock = SimClock()
+    try:
+        rng = np.random.default_rng(13)
+        blobs = [
+            rng.integers(0, 256, OBJ_BYTES, dtype=np.uint8).tobytes()
+            for _ in range(n_objs)
+        ]
+        s = _open(proj, clock=clock, create=True)
+        _write_objs(proj, blobs)
+        s.save(message="v1")
+        s.add_remote(os.path.join(root, "siteA"), name="siteA", net="wan")
+        s.push()
+        _drain_local(s)
+        s.close()
+
+        # clean link baseline
+        s = _open(proj, clock=clock)
+        s0 = clock.snapshot()
+        with timer() as t:
+            clean = s.pull()
+        rows = [_row("pull_cold", n_objs, clean, clock.snapshot() - s0,
+                     t["s"], total_bytes=n_objs * OBJ_BYTES)]
+        assert clean["keys_fetched"] == n_objs
+        _drain_local(s)
+        s.close()
+
+        # degraded link: seeded transient errors + sub-timeout stalls on
+        # every request direction, retried with seeded backoff
+        model = NetworkFaultModel(
+            seed=7,
+            rules=[
+                NetFaultRule(op="*", kind="error", p=0.05),
+                NetFaultRule(op="recv", kind="stall", stall_s=0.2, p=0.05),
+            ],
+            max_retries=MAX_RETRIES,
+        )
+        s = _open(proj, clock=clock, net_faults=model)
+        s0 = clock.snapshot()
+        with timer() as t:
+            deg = s.pull()
+        # per-operation retry budget: every chunk transfer, manifest op and
+        # presence batch retries at most MAX_RETRIES times
+        ops = deg["chunks_fetched"] + 4 * n_objs
+        rows.append(_row(
+            "pull_degraded", n_objs, deg, clock.snapshot() - s0, t["s"],
+            completed=deg["keys_fetched"] == n_objs,
+            retry_budget=MAX_RETRIES * ops,
+            clean_sim_s=rows[0]["sim_s"],
+        ))
+        s.close()
+        return rows
+    finally:
+        cleanup(root)
+
+
+def run(n_objs: int = N_OBJS) -> list[dict]:
+    return _push_campaign(n_objs) + _pull_campaign(n_objs)
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -49,7 +49,14 @@ per-step ingest is <= 0.15x the unchunked per-step ingest, (b) every step of
 the campaign restores bit-identical (incl. bf16), and (c) a warm
 delta-restore moves <= 0.2x the bytes of the cold restore.
 
-``python -m benchmarks.run --check-all`` runs all seven gates in one
+``python -m benchmarks.run --check-remote`` runs the remote annex tier
+benchmark (a 16-object chunked campaign pushed/pulled over the simulated
+WAN link, clean and degraded), writes ``BENCH_remote.json``, and fails
+unless (a) the incremental push at ~3% churn moves <= 0.2x the cold push's
+bytes and (b) the degraded-network pull completes — every key restored —
+within the bounded per-operation retry budget.
+
+``python -m benchmarks.run --check-all`` runs all eight gates in one
 invocation and exits non-zero if any failed.
 """
 from __future__ import annotations
@@ -65,6 +72,7 @@ BENCH_INGEST_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_ingest.
 BENCH_FAULTS_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_faults.json")
 BENCH_CACHE_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_cache.json")
 BENCH_CKPT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_ckpt.json")
+BENCH_REMOTE_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_remote.json")
 
 
 def _write_rows_json(
@@ -414,6 +422,75 @@ def check_ckpt() -> None:
         raise SystemExit(1)
 
 
+def _write_remote_json(rows: list[dict]) -> None:
+    out_rows = [
+        {
+            "case": r["case"],
+            "n_objs": r["n_objs"],
+            "bytes_moved": r["bytes_moved"],
+            "chunks_moved": r["chunks_moved"],
+            "retries": r["retries"],
+            "failovers": r["failovers"],
+            "sim_s": r["sim_s"],
+            "wall_s": r["wall_s"],
+        }
+        for r in rows
+        if r["bench"] == "remote"
+    ]
+    path = os.path.normpath(BENCH_REMOTE_JSON)
+    with open(path, "w") as f:
+        json.dump(out_rows, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path} ({len(out_rows)} rows)", file=sys.stderr)
+
+
+def _remote_claims(rows: list[dict]) -> list[tuple[str, bool, str]]:
+    rem = {r["case"]: r for r in rows if r["bench"] == "remote"}
+    claims = []
+    if "push_cold" in rem and "push_incremental" in rem:
+        cold, inc = rem["push_cold"], rem["push_incremental"]
+        ratio = (
+            inc["bytes_moved"] / cold["bytes_moved"]
+            if cold["bytes_moved"] else 1.0
+        )
+        claims.append((
+            f"remote tier: incremental push at {inc['churn']:.0%} churn"
+            " moves <= 0.2x the cold push's bytes",
+            ratio <= 0.2,
+            f"cold={cold['bytes_moved'] / 2**20:.2f}MiB"
+            f" ({cold['chunks_moved']} chunks)"
+            f" incremental={inc['bytes_moved'] / 2**20:.2f}MiB"
+            f" ({inc['chunks_moved']} chunks, {ratio:.3f}x)",
+        ))
+    if "pull_degraded" in rem:
+        deg = rem["pull_degraded"]
+        claims.append((
+            "remote tier: degraded-network pull completes within the"
+            " bounded retry budget",
+            bool(deg["completed"]) and deg["retries"] <= deg["retry_budget"],
+            f"{deg['n_objs']} keys restored, {deg['retries']} retries"
+            f" (budget {deg['retry_budget']}),"
+            f" sim {deg['sim_s']:.1f}s vs clean {deg['clean_sim_s']:.1f}s",
+        ))
+    return claims
+
+
+def check_remote() -> None:
+    """Remote annex tier gate: chunk-level delta push must keep a churn
+    campaign's transfer delta-sized, and the retry/backoff machinery must
+    carry a pull through a degraded link without unbounded retries."""
+    from . import bench_remote
+
+    rows = bench_remote.run()
+    _write_remote_json(rows)
+    ok = True
+    for name, passed, detail in _remote_claims(rows):
+        ok &= passed
+        print(f"# [{'PASS' if passed else 'FAIL'}] {name}: {detail}")
+    if not ok:
+        raise SystemExit(1)
+
+
 def _write_schedule_json(rows: list[dict]) -> None:
     batch_rows = [
         {
@@ -532,7 +609,7 @@ def check_schedule() -> None:
 def main() -> None:
     from . import (
         bench_cache, bench_ckpt, bench_conflicts, bench_faults, bench_finish,
-        bench_ingest, bench_octopus, bench_schedule,
+        bench_ingest, bench_octopus, bench_remote, bench_schedule,
     )
 
     rows = []
@@ -550,6 +627,8 @@ def main() -> None:
     rows += bench_cache.run()
     print("# running bench_ckpt (chunked data plane, §12) ...", file=sys.stderr)
     rows += bench_ckpt.run()
+    print("# running bench_remote (remote tier, §13) ...", file=sys.stderr)
+    rows += bench_remote.run()
     print("# running bench_conflicts (§5.5) ...", file=sys.stderr)
     rows += bench_conflicts.run()
     print("# running bench_octopus (Fig. 6 / A2) ...", file=sys.stderr)
@@ -562,6 +641,7 @@ def main() -> None:
     _write_faults_json(rows)
     _write_cache_json(rows)
     _write_ckpt_json(rows)
+    _write_remote_json(rows)
 
     print("name,us_per_call,derived")
     claims = []
@@ -598,6 +678,10 @@ def main() -> None:
             derived = (
                 f"steady={r['steady_bytes_per_step'] / 2**20:.2f}MiB_per_step"
             )
+        elif r["bench"] == "remote":
+            name = f"remote/{r['case']}/{r['n_objs']}objs"
+            us = r["wall_s"] * 1e6 / r["n_objs"]
+            derived = f"moved={r['bytes_moved'] / 2**20:.2f}MiB"
         elif r["bench"] == "conflict_check":
             name = f"conflicts/{r['scheduled_jobs']}jobs"
             us = r["wall_us_per_check"]
@@ -629,6 +713,7 @@ def main() -> None:
     claims += _faults_claims(rows)
     claims += _cache_claims(rows)
     claims += _ckpt_claims(rows)
+    claims += _remote_claims(rows)
     conf = {r["scheduled_jobs"]: r for r in rows if r["bench"] == "conflict_check"}
     claims.append(("§5.5: conflict check ~O(1) in scheduled jobs",
                    conf[50_000]["wall_us_per_check"] < 20 * conf[100]["wall_us_per_check"],
@@ -648,13 +733,13 @@ def main() -> None:
 if __name__ == "__main__":
     args = sys.argv[1:]
     if "--check-all" in args:
-        # all seven gates in one invocation; report every failure, then exit
+        # all eight gates in one invocation; report every failure, then exit
         failed = []
         for name, gate in (
             ("finish", check_finish), ("schedule", check_schedule),
             ("pack", check_pack), ("ingest", check_ingest),
             ("faults", check_faults), ("cache", check_cache),
-            ("ckpt", check_ckpt),
+            ("ckpt", check_ckpt), ("remote", check_remote),
         ):
             print(f"# --check-{name} ...", file=sys.stderr)
             try:
@@ -687,6 +772,9 @@ if __name__ == "__main__":
         ran_gate = True
     if "--check-ckpt" in args:
         check_ckpt()
+        ran_gate = True
+    if "--check-remote" in args:
+        check_remote()
         ran_gate = True
     if not ran_gate:
         main()

@@ -12,7 +12,11 @@ Only the lightweight core is imported here; the modeling subpackages
 explicitly by their users.
 """
 from .core.faults import FaultPlan, FaultRule
+from .core.remote import NetFaultRule, NetProfile, NetworkFaultModel
 from .core.session import Session, open  # noqa: A004 (module-level `open` is the API)
 from .core.spec import RunSpec, SpecError
 
-__all__ = ["Session", "open", "RunSpec", "SpecError", "FaultPlan", "FaultRule"]
+__all__ = [
+    "Session", "open", "RunSpec", "SpecError", "FaultPlan", "FaultRule",
+    "NetFaultRule", "NetProfile", "NetworkFaultModel",
+]

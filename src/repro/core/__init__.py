@@ -18,13 +18,23 @@ from .faults import (
     FaultPlan,
     FaultRule,
     InjectedIOError,
+    InjectedNetworkError,
     InjectedSlurmError,
+    RemoteUnavailable,
     is_crash,
 )
 from .fsio import FS, GPFS, LOCAL_XFS, NULL_FS, FSProfile, SimClock
 from .hashing import annex_key_for_bytes, annex_key_for_file, verify_annex_key
 from .jobdb import JobDB, job_spec
 from .records import RunFailed, RunRecord, rerun, run, run_spec, spec_of
+from .remote import (
+    LAN,
+    WAN,
+    NetFaultRule,
+    NetProfile,
+    NetworkFaultModel,
+    RemoteStore,
+)
 from .recovery import FileLock, JournalHandle, LockHeld
 from .repo import ConflictError, Repository
 from .scheduler import FinishResult, ScheduleError, SlurmScheduler
@@ -37,11 +47,14 @@ __all__ = [
     "OutputConflict", "ProtectedOutputs", "WildcardOutputError",
     "normalize", "proper_prefixes",
     "CrashInjected", "FaultPlan", "FaultRule",
-    "InjectedIOError", "InjectedSlurmError", "is_crash",
+    "InjectedIOError", "InjectedNetworkError", "InjectedSlurmError",
+    "RemoteUnavailable", "is_crash",
     "FS", "GPFS", "LOCAL_XFS", "NULL_FS", "FSProfile", "SimClock",
     "annex_key_for_bytes", "annex_key_for_file", "verify_annex_key",
     "JobDB", "job_spec",
     "RunFailed", "RunRecord", "rerun", "run", "run_spec", "spec_of",
+    "LAN", "WAN", "NetFaultRule", "NetProfile", "NetworkFaultModel",
+    "RemoteStore",
     "FileLock", "JournalHandle", "LockHeld",
     "ConflictError", "Repository",
     "FinishResult", "ScheduleError", "SlurmScheduler",

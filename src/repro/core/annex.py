@@ -483,6 +483,31 @@ class AnnexStore:
             )
         return key
 
+    # -- inter-store transfer -------------------------------------------
+    def receive_file(self, key: str, src_fs: FS, src_path: str) -> bool:
+        """Accept one object from another store's file (the push unit).
+        Same-filesystem base case: ``put_file`` charges both the read and
+        the write on this store's FS, preserving the legacy accounting of
+        co-located remotes. Network stores override with a gated, per-
+        direction-charged implementation (``src_fs`` carries the client
+        side's read costs there). Returns False when already present —
+        no bytes move."""
+        del src_fs  # same-FS base case: put_file reads on self.fs
+        if self.has(key):
+            return False
+        self.put_file(key, src_path)
+        return True
+
+    def fetch_into(self, key: str, dst: "AnnexStore") -> bool:
+        """Move one object from this store into ``dst`` (the fetch unit).
+        Base case charges the copy on ``dst``'s FS like the legacy fetch
+        path always did; network stores override to charge the download on
+        the link instead. Returns False when ``dst`` already holds it."""
+        if dst.has(key):
+            return False
+        dst.put_file(key, self._path(key))
+        return True
+
     # -- reads / deletion ----------------------------------------------
     def read(self, key: str) -> bytes:
         data = self.fs.read_bytes(self._path(key))

@@ -130,6 +130,38 @@ class InjectedSlurmError(RuntimeError):
         self.transient = transient
 
 
+class InjectedNetworkError(IOError):
+    """A network fault from a :class:`~repro.core.remote.NetworkFaultModel`.
+
+    ``reason`` is one of ``error`` (transient request failure), ``timeout``
+    (a stall exceeded the transfer timeout) or ``disconnect`` (the link died
+    mid-stream — the remote-side tmp of the in-flight transfer is stranded
+    and must wait for the owner-stamped sweep). All three are transient:
+    the bounded seeded retry loop may re-issue the transfer."""
+
+    def __init__(self, op: str, remote: str, reason: str = "error",
+                 transient: bool = True):
+        super().__init__(
+            5, f"injected network {reason} during {op} on remote {remote!r}")
+        self.op = op
+        self.remote = remote
+        self.reason = reason
+        self.transient = transient
+
+
+class RemoteUnavailable(RuntimeError):
+    """A whole-remote outage: the site is down, not just the request.
+
+    Non-transient by design — retrying the same remote is pointless; the
+    caller marks the store unavailable and fails over to the next replica
+    (or surfaces the error if the remote was an explicit push target)."""
+
+    def __init__(self, remote: str, why: str = "outage"):
+        super().__init__(f"remote {remote!r} unavailable ({why})")
+        self.remote = remote
+        self.transient = False
+
+
 def is_crash(exc: BaseException) -> bool:
     return isinstance(exc, CrashInjected)
 

@@ -87,10 +87,21 @@ CREATE INDEX IF NOT EXISTS idx_runcache_spec ON runcache(spec_id);
 ALTER TABLE jobs ADD COLUMN exec_key TEXT;
 """
 
+_SCHEMA_V4 = """
+CREATE TABLE IF NOT EXISTS annex_locations (
+    key     TEXT NOT NULL,
+    remote  TEXT NOT NULL,
+    seen_at REAL NOT NULL,
+    PRIMARY KEY (key, remote)
+);
+CREATE INDEX IF NOT EXISTS idx_locations_remote ON annex_locations(remote);
+"""
+
 _MIGRATIONS: tuple[tuple[int, str], ...] = (
     (1, _SCHEMA_V1),  # base schema (pre-spec)
     (2, _SCHEMA_V2),  # canonical spec stored per row (PR 2)
     (3, _SCHEMA_V3),  # run-cache index + execution key per row (PR 7)
+    (4, _SCHEMA_V4),  # remote-location bookkeeping for the annex tier (PR 9)
 )
 
 
@@ -110,6 +121,8 @@ class JobDB:
         }
         if "jobs" not in tables:
             return 0
+        if "annex_locations" in tables:
+            return 4
         if "runcache" in tables:
             return 3
         cols = {r[1] for r in c.execute("PRAGMA table_info(jobs)")}
@@ -398,6 +411,53 @@ class JobDB:
         return self._conn().execute(
             "SELECT COUNT(*) FROM runcache"
         ).fetchone()[0]
+
+    # -- remote-location bookkeeping (DESIGN §13) -----------------------
+    # Rows are *hints* recorded after a transfer verifiably completed:
+    # whereis uses them as the cheap first answer, verify() cross-checks
+    # them against fresh probes, and nothing numcopies-critical ever
+    # trusts them — drops re-probe the remotes, always.
+    def locations_record(self, remote: str, keys: list[str]) -> None:
+        if not keys:
+            return
+        now = time.time()
+        with self._conn() as c:
+            c.executemany(
+                "INSERT OR REPLACE INTO annex_locations (key, remote, seen_at)"
+                " VALUES (?, ?, ?)",
+                [(k, remote, now) for k in keys],
+            )
+
+    def locations_forget(self, remote: str, keys: list[str] | None = None) -> None:
+        with self._conn() as c:
+            if keys is None:
+                c.execute("DELETE FROM annex_locations WHERE remote=?", (remote,))
+            else:
+                c.executemany(
+                    "DELETE FROM annex_locations WHERE key=? AND remote=?",
+                    [(k, remote) for k in keys],
+                )
+
+    def locations_of(self, keys: list[str]) -> dict[str, list[str]]:
+        """key -> sorted remote names last seen holding it (hint tier)."""
+        out: dict[str, list[str]] = {k: [] for k in keys}
+        c = self._conn()
+        for k in keys:
+            rows = c.execute(
+                "SELECT remote FROM annex_locations WHERE key=? ORDER BY remote",
+                (k,),
+            ).fetchall()
+            out[k] = [r[0] for r in rows]
+        return out
+
+    def locations_all(self) -> list[tuple[str, str]]:
+        """Every (key, remote) row — verify()'s cross-check sweep."""
+        return [
+            (r[0], r[1])
+            for r in self._conn().execute(
+                "SELECT key, remote FROM annex_locations ORDER BY key, remote"
+            )
+        ]
 
 
 def job_spec(job: dict) -> RunSpec:

@@ -47,7 +47,7 @@ import socket
 import time
 from typing import TYPE_CHECKING
 
-from .faults import owner_is_dead
+from .faults import InjectedNetworkError, RemoteUnavailable, owner_is_dead
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids import cycles
     from .fsio import FS
@@ -287,6 +287,9 @@ def recover(
         "jobs_refinished": 0,
         "jobs_closed_unsubmitted": 0,
         "protection_released": 0,
+        "pushes_resumed": 0,
+        "pulls_resumed": 0,
+        "remote_keys_resent": 0,
         "errors": [],
     }
     # 1. stale locks — before journal replay, which needs to take them
@@ -314,6 +317,10 @@ def recover(
             ok = _replay_finish(session, header, entries, report)
         elif header.get("kind") == "memoize":
             ok = _replay_memoize(session, header, entries, report)
+        elif header.get("kind") == "push":
+            ok = _replay_push(session, header, entries, report)
+        elif header.get("kind") == "pull":
+            ok = _replay_pull(session, header, entries, report)
         if ok:
             fs.unlink(path)
             report["journals_replayed"] += 1
@@ -533,6 +540,62 @@ def _replay_memoize(session: "Session", header: dict, entries: list[dict],
     return True
 
 
+def _replay_push(session: "Session", header: dict, entries: list[dict],
+                 report: dict) -> bool:
+    """Exactly-once push replay (DESIGN §13). The push journal records the
+    intent (remote + key list) before byte one and appends one entry per
+    key fully landed on the remote (manifest bound last). Replay simply
+    re-runs the push over the *whole* key list: the batched fresh presence
+    pre-pass skips every journaled key and — for the key the crash
+    interrupted mid-object — every chunk that already landed, so only the
+    chunks absent from the remote are re-sent and nothing duplicates.
+    Returns False (journal kept) when the remote is currently unreachable;
+    a remote that vanished from the config retires the journal with an
+    error recorded."""
+    from .remote import push_keys
+
+    repo = session.repo
+    keys = list(header.get("keys", ()))
+    done = {e["key"] for e in entries if "key" in e}
+    try:
+        store = repo.remote_by_name(header.get("remote"))
+    except KeyError:
+        report["errors"].append(
+            f"push replay: remote {header.get('remote')!r} no longer configured"
+        )
+        return True  # nothing to resume against
+    try:
+        r = push_keys(repo, store, keys, journal=False,
+                      db=session.scheduler.db)
+    except (InjectedNetworkError, RemoteUnavailable) as e:
+        report["errors"].append(f"push replay to {store.name}: {e}")
+        return False  # keep the journal for a later recover()
+    report["pushes_resumed"] += 1
+    report["remote_keys_resent"] += max(0, r["keys_sent"] - (len(keys) - len(done)))
+    return True
+
+
+def _replay_pull(session: "Session", header: dict, entries: list[dict],
+                 report: dict) -> bool:
+    """Exactly-once pull replay: re-run the pull over the journaled key
+    list — keys already local (journaled or landed just before the crash)
+    are skipped by pull's missing-only filter, chunks already local by its
+    presence pre-pass. Returns False (journal kept) when no replica can
+    currently serve a key."""
+    from .remote import pull_keys
+
+    repo = session.repo
+    del entries  # completed keys are detected locally, not from the journal
+    try:
+        pull_keys(repo, list(header.get("keys", ())), journal=False,
+                  db=session.scheduler.db)
+    except (InjectedNetworkError, RemoteUnavailable, FileNotFoundError) as e:
+        report["errors"].append(f"pull replay: {e}")
+        return False
+    report["pulls_resumed"] += 1
+    return True
+
+
 # -- verify (fsck) -----------------------------------------------------------
 
 _DIVERGENCE_KINDS = {
@@ -545,6 +608,7 @@ _DIVERGENCE_KINDS = {
     "orphan-job",
     "orphan-protection",
     "broken-cache",
+    "remote-manifest-divergence",
 }
 
 
@@ -640,8 +704,20 @@ def verify(session: "Session", repair: bool = False) -> dict:
     # (that is the invariant read/copy_to depend on — chunk presence in
     # *some other* store doesn't make this store's manifest readable)
     if annex_keys and repo.annex.chunk_aware:
-        stores = [repo.annex, *repo._remotes]
+        stores = [
+            s for s in [repo.annex, *repo._remotes]
+            if getattr(s, "available", True)  # a dead site can't be fsck'd
+        ]
         for key, path in sorted(annex_keys.items()):
+            # local truth for the §13 remote-manifest fsck: what the local
+            # store says the chunk list of this key is (None when the local
+            # copy is absent or stored whole)
+            truth: list[str] | None = None
+            if repo.annex.has(key):
+                try:
+                    truth = repo.annex.manifest_of(key)
+                except (OSError, ValueError):
+                    pass  # flagged as broken-manifest in the loop below
             for store in stores:
                 if not store.has(key):
                     continue
@@ -651,6 +727,35 @@ def verify(session: "Session", repair: bool = False) -> dict:
                     issue("broken-manifest", f"{key} in {store.name}: {e}",
                           key=key, store=store.name)
                     continue
+                if (
+                    store is not repo.annex
+                    and chunks is not None
+                    and truth is not None
+                    and chunks != truth
+                ):
+                    # same key => same content => same cutter output: a
+                    # remote manifest that disagrees with local truth is
+                    # corruption, not a legitimate alternative encoding
+                    rec = issue(
+                        "remote-manifest-divergence",
+                        f"{store.name} manifest for {key} disagrees with "
+                        f"local truth ({len(chunks)} vs {len(truth)} chunks)",
+                        key=key, store=store.name,
+                    )
+                    if repair:
+                        try:
+                            for ck in truth:
+                                if not store.has(ck):
+                                    store.receive_file(
+                                        ck, repo.annex.fs, repo.annex._path(ck)
+                                    )
+                            store.drop(key)
+                            store.put_manifest(key, truth)
+                            rec["repaired"] = True
+                            repaired.append(rec)
+                            chunks = truth
+                        except Exception:
+                            pass
                 if not chunks:
                     continue
                 for ck in sorted(set(chunks) - store.has_many(chunks)):
@@ -670,7 +775,12 @@ def verify(session: "Session", repair: bool = False) -> dict:
                             None,
                         )
                         if src is not None:
-                            store.put_file(ck, src._path(ck))
+                            # route through the transfer methods so network
+                            # stores charge the link, not the local profile
+                            if src is repo.annex:
+                                store.receive_file(ck, src.fs, src._path(ck))
+                            else:
+                                src.fetch_into(ck, store)
                             rec["repaired"] = True
                             repaired.append(rec)
                         elif store is repo.annex:
@@ -722,6 +832,50 @@ def verify(session: "Session", repair: bool = False) -> dict:
             db.cache_evict([row["exec_key"]])
             rec["repaired"] = True
             repaired.append(rec)
+
+    # -- remote-location hints (jobdb v4): cross-check vs fresh probes ----
+    # Location rows are derived state recorded after verified transfers —
+    # like the known-key set, they are hints: disagreement is a *warning*
+    # (repair refreshes the rows), never divergence, because nothing
+    # numcopies-critical ever trusts them.
+    loc_rows = db.locations_all()
+    if loc_rows:
+        from .remote import RemoteStore
+
+        by_remote: dict[str, list[str]] = {}
+        for key, rname in loc_rows:
+            by_remote.setdefault(rname, []).append(key)
+        store_names = {s.name for s in repo._remotes}
+        for rname, loc_keys in sorted(by_remote.items()):
+            if rname not in store_names:
+                rec = issue(
+                    "stale-location",
+                    f"{len(loc_keys)} location rows for unknown remote {rname!r}",
+                    remote=rname, count=len(loc_keys),
+                )
+                if repair:
+                    db.locations_forget(rname)
+                    rec["repaired"] = True
+                    repaired.append(rec)
+                continue
+            store = repo.remote_by_name(rname)
+            if isinstance(store, RemoteStore) and not store.available:
+                continue  # a dead site can't be cross-checked; hints stay
+            try:
+                present = store.has_many(loc_keys, fresh=True)
+            except Exception:
+                continue  # unreachable right now: leave the hints alone
+            gone = sorted(set(loc_keys) - present)
+            if gone:
+                rec = issue(
+                    "stale-location",
+                    f"{rname} no longer holds {len(gone)} recorded key(s)",
+                    remote=rname, count=len(gone),
+                )
+                if repair:
+                    db.locations_forget(rname, gone)
+                    rec["repaired"] = True
+                    repaired.append(rec)
 
     # -- crash litter (warnings: recover() owns these) -------------------
     for path in list_journals(fs, repo.repro_dir):

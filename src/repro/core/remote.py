@@ -1,0 +1,743 @@
+"""Remote annex tier (DESIGN.md §13): simulated sites over an unreliable net.
+
+The paper's reproducibility story stops at one filesystem; real campaigns
+replicate outputs across sites and archives over links that drop requests,
+stall, disconnect mid-stream, and occasionally take a whole site down. This
+module makes the remote a first-class, *simulated* store so the transfer
+protocol can be property-tested the same way the crash machinery is (§10):
+every byte and every round trip is charged on the shared
+:class:`~repro.core.fsio.SimClock`, and every network failure is a seeded,
+replayable event.
+
+Three layers:
+
+:class:`NetProfile`
+    Latency + per-direction bandwidth of one site link, mapped onto an
+    :class:`~repro.core.fsio.FSProfile` (``meta_op_s`` = request round trip,
+    ``write_bw`` = upload, ``read_bw`` = download, per-stream caps honored
+    by §9's stream pools) so the remote's backing store charges network
+    costs with the exact machinery the local filesystems use.
+
+:class:`NetworkFaultModel`
+    Seeded declarative schedule of network faults per remote: transient
+    request errors, stalls charged against the profile's per-transfer
+    timeout, mid-stream disconnects (which strand the remote-side tmp —
+    the dead link cannot clean it), and whole-remote outages that mark the
+    site unavailable. Bounded retry/backoff lives in :func:`net_retry`,
+    mirroring ``FS._fault``'s transient loop: each attempt's backoff is a
+    seeded exponential charge on the clock.
+
+:class:`RemoteStore`
+    An :class:`~repro.core.annex.AnnexStore` whose FS is the network link —
+    so it inherits the owner-stamped tmp discipline (a crashed push leaves
+    ``tmp-pid-token-*`` litter that the sweep-on-open reclaims), idempotent
+    tmp+rename publication, and the manifest/chunk layout. On top it adds
+    batched one-round-trip presence queries (``has_many``), gated
+    per-direction transfers with payload accounting, and an availability
+    flag that pull failover consults.
+
+Transfers move *chunks*, not objects: :func:`push_keys` / :func:`pull_keys`
+do a batched presence pre-pass per remote, journal their intent (PR 6
+discipline, ``remote:*`` crash points) so a killed client resumes with only
+the missing chunks re-sent, and a dead remote fails pull over to the next
+replica instead of erroring.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import random
+import threading
+from dataclasses import dataclass
+
+from .annex import AnnexStore, encode_chunk_manifest
+from .faults import InjectedNetworkError, RemoteUnavailable, is_crash
+from .fsio import FS, FSProfile, SimClock
+from .hashing import is_chunk_key, make_annex_key, make_chunk_key
+
+# -- network profiles --------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class NetProfile:
+    """One site link: request latency + per-direction aggregate bandwidth
+    (bytes/second), optional per-stream caps for §9's stream pools, a
+    per-transfer stall timeout, and the server-side cost of one key probe
+    inside a batched presence query."""
+
+    name: str
+    latency_s: float
+    up_bw: float  # client -> remote (push), AGGREGATE across streams
+    down_bw: float  # remote -> client (pull), AGGREGATE across streams
+    up_stream_bw: float | None = None
+    down_stream_bw: float | None = None
+    timeout_s: float = 30.0
+    probe_s: float = 1e-5
+
+    def to_fs_profile(self) -> FSProfile:
+        """The link as an FSProfile: every meta op is a round trip, reads
+        are downloads, writes are uploads. Directory-entry degradation is
+        a parallel-FS artifact, not a network one — disabled."""
+        return FSProfile(
+            name=f"net-{self.name}",
+            meta_op_s=self.latency_s,
+            read_bw=self.down_bw,
+            write_bw=self.up_bw,
+            degrade_threshold=0,
+            dir_degrade=0.0,
+            read_stream_bw=self.down_stream_bw,
+            write_stream_bw=self.up_stream_bw,
+        )
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "latency_s": self.latency_s,
+            "up_bw": self.up_bw,
+            "down_bw": self.down_bw,
+            "up_stream_bw": self.up_stream_bw,
+            "down_stream_bw": self.down_stream_bw,
+            "timeout_s": self.timeout_s,
+            "probe_s": self.probe_s,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "NetProfile":
+        return cls(**d)
+
+
+# Same machine-room: 10 GbE, sub-ms round trips.
+LAN = NetProfile(name="lan", latency_s=2e-4, up_bw=1.25e9, down_bw=1.25e9)
+# Cross-site archive link: ~30 ms RTT, 1 Gb/s up / 2 Gb/s down aggregate,
+# one TCP stream drives a quarter of it (parallel streams pay off).
+WAN = NetProfile(
+    name="wan",
+    latency_s=0.03,
+    up_bw=1.25e8,
+    down_bw=2.5e8,
+    up_stream_bw=1.25e8 / 4,
+    down_stream_bw=2.5e8 / 4,
+    timeout_s=60.0,
+)
+
+_PRESETS = {"lan": LAN, "wan": WAN}
+
+
+def coerce_net(net) -> NetProfile:
+    """Accept a preset name, a config dict, a NetProfile, or None (LAN)."""
+    if net is None:
+        return LAN
+    if isinstance(net, NetProfile):
+        return net
+    if isinstance(net, str):
+        try:
+            return _PRESETS[net]
+        except KeyError:
+            raise ValueError(f"unknown net profile {net!r}") from None
+    if isinstance(net, dict):
+        return NetProfile.from_json(net)
+    raise TypeError(f"cannot build a NetProfile from {type(net).__name__}")
+
+
+# -- network fault model -----------------------------------------------------
+
+
+@dataclass
+class NetFaultRule:
+    """One declarative network fault. ``op`` is the request direction the
+    rule watches: ``send`` (push-side mutation), ``recv`` (download),
+    ``query`` (presence/metadata), or ``*``. ``remote`` filters by site
+    name (None = any). ``kind``:
+
+    error        transient request failure (retried with seeded backoff),
+    stall        the request hangs ``stall_s`` — charged up to the
+                 profile's ``timeout_s``; at/over the timeout the transfer
+                 times out (transient),
+    disconnect   the link dies mid-stream: fires per transferred block,
+                 stranding the remote-side tmp of an in-flight upload,
+    outage       the whole site goes down — every later request raises
+                 :class:`~repro.core.faults.RemoteUnavailable` until
+                 revived.
+
+    Triggering mirrors :class:`~repro.core.faults.FaultRule`: ``nth`` /
+    ``every`` / seeded ``p`` / always, capped by ``times``."""
+
+    op: str
+    remote: str | None = None
+    kind: str = "error"
+    nth: int | None = None
+    every: int | None = None
+    p: float | None = None
+    times: int | None = None
+    stall_s: float = 0.0
+    calls: int = 0
+    fires: int = 0
+
+
+class NetworkFaultModel:
+    """Seeded, declarative network fault schedule shared by every
+    :class:`RemoteStore` of a session. Thread-safe like
+    :class:`~repro.core.faults.FaultPlan` — counters and the rng mutate
+    under one lock. Also owns the retry policy: ``max_retries`` transient
+    attempts per transfer, each preceded by a seeded-jitter exponential
+    backoff charge (:meth:`backoff_s`) — same seed, same total charge."""
+
+    def __init__(
+        self,
+        seed: int = 0,
+        rules: list[NetFaultRule] | tuple = (),
+        max_retries: int = 4,
+        backoff_base_s: float = 0.05,
+    ):
+        self.rng = random.Random(seed)
+        self.rules = list(rules)
+        self.max_retries = max_retries
+        self.backoff_base_s = backoff_base_s
+        self._dead: set[str] = set()
+        self._lock = threading.Lock()
+
+    # -- availability ---------------------------------------------------
+    def is_available(self, remote: str) -> bool:
+        with self._lock:
+            return remote not in self._dead
+
+    def mark_dead(self, remote: str) -> None:
+        with self._lock:
+            self._dead.add(remote)
+
+    def revive(self, remote: str) -> None:
+        with self._lock:
+            self._dead.discard(remote)
+
+    # -- retry policy ---------------------------------------------------
+    def backoff_s(self, attempt: int) -> float:
+        """Exponential backoff with seeded jitter in [1x, 2x) — bounded,
+        deterministic per seed (the determinism test's contract)."""
+        with self._lock:
+            jitter = 1.0 + self.rng.random()
+        return self.backoff_base_s * (2 ** attempt) * jitter
+
+    # -- firing ---------------------------------------------------------
+    def _fire(self, rule: NetFaultRule) -> bool:
+        with self._lock:
+            rule.calls += 1
+            if rule.times is not None and rule.fires >= rule.times:
+                return False
+            if rule.nth is not None:
+                fire = rule.calls == rule.nth
+            elif rule.every is not None:
+                fire = rule.calls % rule.every == 0
+            elif rule.p is not None:
+                fire = self.rng.random() < rule.p
+            else:
+                fire = True
+            if fire:
+                rule.fires += 1
+            return fire
+
+    def _match(self, rule: NetFaultRule, op: str, remote: str) -> bool:
+        if rule.op not in ("*", op):
+            return False
+        return rule.remote is None or rule.remote == remote
+
+    def on_request(self, op: str, remote: str, clock: SimClock,
+                   timeout_s: float) -> None:
+        """Gate one remote request (before its round trip is charged)."""
+        if not self.is_available(remote):
+            raise RemoteUnavailable(remote)
+        for rule in self.rules:
+            if rule.kind == "disconnect" or not self._match(rule, op, remote):
+                continue
+            if not self._fire(rule):
+                continue
+            if rule.kind == "outage":
+                self.mark_dead(remote)
+                raise RemoteUnavailable(remote)
+            if rule.kind == "stall":
+                # the client genuinely waits — but never past its timeout
+                clock.charge(min(rule.stall_s, timeout_s))
+                if rule.stall_s >= timeout_s:
+                    raise InjectedNetworkError(op, remote, reason="timeout")
+                continue
+            raise InjectedNetworkError(op, remote, reason="error")
+
+    def on_stream(self, op: str, remote: str) -> None:
+        """Mid-stream gate, consulted per transferred block: disconnects
+        only — the request-level faults already fired before byte one."""
+        for rule in self.rules:
+            if rule.kind != "disconnect" or not self._match(rule, op, remote):
+                continue
+            if self._fire(rule):
+                raise InjectedNetworkError(op, remote, reason="disconnect")
+
+
+# -- the remote store --------------------------------------------------------
+
+
+class RemoteStore(AnnexStore):
+    """A simulated remote site: an annex store reached over a network link.
+
+    The backing store is real (correctness is tested on real bytes); the
+    *costs* are the link's — the store's FS carries the NetProfile, so meta
+    ops charge round trips and transfers charge per-direction bandwidth
+    through §9's stream pools. The same FS's incarnation token stamps the
+    remote-side tmp files, so a crashed client's half-uploaded objects are
+    provably dead and swept on the next open (``sweep_on_open=True``, the
+    PR 6 discipline) — a crashed push never leaks partial objects."""
+
+    def __init__(
+        self,
+        root: str,
+        clock: SimClock | None = None,
+        name: str = "site",
+        net: "NetProfile | dict | str | None" = None,
+        chunk_params=None,
+        chunk_threshold: int | None = None,
+        fault_model: NetworkFaultModel | None = None,
+        faults=None,
+        sweep_on_open: bool = True,
+    ):
+        self.net = coerce_net(net)
+        self.fault_model = fault_model
+        self._marked_dead = False
+        # payload accounting (client perspective; single transfer loop)
+        self.bytes_sent = 0
+        self.bytes_received = 0
+        self.transfers = 0
+        self.retries = 0
+        fs = FS(self.net.to_fs_profile(), clock, faults=faults)
+        super().__init__(
+            root, fs, name=name, sweep_on_open=sweep_on_open,
+            chunk_params=chunk_params, chunk_threshold=chunk_threshold,
+        )
+
+    # -- availability ---------------------------------------------------
+    @property
+    def available(self) -> bool:
+        if self._marked_dead:
+            return False
+        return self.fault_model is None or self.fault_model.is_available(self.name)
+
+    def mark_unavailable(self) -> None:
+        self._marked_dead = True
+
+    def mark_available(self) -> None:
+        self._marked_dead = False
+        if self.fault_model is not None:
+            self.fault_model.revive(self.name)
+
+    # -- fault gates ----------------------------------------------------
+    def _gate(self, op: str) -> None:
+        if self._marked_dead:
+            raise RemoteUnavailable(self.name, "marked unavailable")
+        if self.fs.faults is not None:
+            # a dead client issues no requests: crash poisoning applies to
+            # the network exactly as it does to the filesystem
+            self.fs.faults._check_crashed()
+        if self.fault_model is not None:
+            self.fault_model.on_request(
+                op, self.name, self.fs.clock, self.net.timeout_s
+            )
+
+    def _gate_stream(self, op: str) -> None:
+        if self.fault_model is not None:
+            self.fault_model.on_stream(op, self.name)
+
+    # -- batched presence ------------------------------------------------
+    def has_many(self, keys, fresh: bool = False) -> set[str]:
+        """ONE round trip for the whole batch — the server answers N key
+        probes at its local per-key cost — instead of one RTT per key.
+        This is the presence primitive every numcopies-critical caller and
+        every transfer pre-pass routes through; ``fresh=True`` bypasses the
+        known-key set and asks the site."""
+        keys = list(keys)
+        present: set[str] = set()
+        misses: list[str] = []
+        for key in keys:
+            if not fresh and self._is_known(key):
+                present.add(key)
+            else:
+                misses.append(key)
+        if not misses:
+            return present
+        self._gate("query")
+        self.fs.clock.charge_meta(
+            len(misses), self.net.latency_s + self.net.probe_s * len(misses)
+        )
+        for key in misses:
+            # server-side stat: the per-key cost is in the batch charge
+            # above, not one client round trip each
+            if os.path.exists(self._path(key)):
+                present.add(key)
+                self._mark_known(key)
+        return present
+
+    # -- gated single-object ops ----------------------------------------
+    def has(self, key: str, fresh: bool = False) -> bool:
+        if not fresh and self._is_known(key):
+            return True
+        self._gate("query")
+        return super().has(key, fresh=fresh)
+
+    def read(self, key: str) -> bytes:
+        self._gate("recv")
+        return super().read(key)
+
+    def copy_to(self, key: str, dst: str) -> None:
+        self._gate("recv")
+        super().copy_to(key, dst)
+
+    def manifest_of(self, key: str) -> list[str] | None:
+        self._gate("query")
+        return super().manifest_of(key)
+
+    def put_manifest(self, key: str, chunk_keys: list[str]) -> None:
+        self._gate("send")
+        if self.has(key):
+            return
+        self._publish_raw(
+            key, encode_chunk_manifest(key, chunk_keys, self.chunk_params)
+        )
+
+    def drop(self, key: str) -> None:
+        self._gate("send")
+        super().drop(key)
+
+    # -- transfers -------------------------------------------------------
+    def receive_file(self, key: str, src_fs: FS, src_path: str) -> bool:
+        """Upload one object into this remote: a streamed charged read from
+        the client's store plus a charged upload through the link, verified
+        against the key before the remote-side tmp is published. A
+        mid-stream disconnect strands the remote tmp (a dead link runs no
+        remote cleanup) — the owner-stamped sweep on the next open reclaims
+        it. Returns False when the remote already holds the key."""
+        self._gate("send")
+        if self.has(key):
+            return False
+        h = hashlib.sha256()
+        tmp = self._tmp_path()
+        try:
+            with src_fs.open_read(src_path, 1 << 20) as chunks:
+
+                def pump():
+                    for c in chunks:
+                        self._gate_stream("send")
+                        h.update(c)
+                        self.bytes_sent += len(c)
+                        yield c
+
+                size = self.fs.write_chunks(tmp, pump())
+        except BaseException as e:
+            if is_crash(e) or getattr(e, "reason", None) == "disconnect":
+                raise  # dead client or dead link: the remote tmp leaks
+            self.fs.unlink(tmp)
+            raise
+        rebuilt = (
+            make_chunk_key(h.hexdigest(), size) if is_chunk_key(key)
+            else make_annex_key(h.hexdigest(), size)
+        )
+        try:
+            if rebuilt != key:
+                raise IOError(f"content of {src_path} does not match key {key}")
+            self._commit(tmp, key)
+        except BaseException as e:
+            if is_crash(e):
+                raise
+            self.fs.unlink(tmp)
+            raise
+        self.transfers += 1
+        return True
+
+    def fetch_into(self, key: str, dst: AnnexStore) -> bool:
+        """Download one object from this remote into ``dst``: a charged
+        download through the link plus a charged local write, verified
+        before ``dst``'s tmp is published. Client-side cleanup survives a
+        dead link — only a client crash leaks the local tmp."""
+        self._gate("recv")
+        if dst.has(key):
+            return False
+        h = hashlib.sha256()
+        tmp = dst._tmp_path()
+        try:
+            with self.fs.open_read(self._path(key), 1 << 20) as chunks:
+
+                def pump():
+                    for c in chunks:
+                        self._gate_stream("recv")
+                        h.update(c)
+                        self.bytes_received += len(c)
+                        yield c
+
+                size = dst.fs.write_chunks(tmp, pump())
+            rebuilt = (
+                make_chunk_key(h.hexdigest(), size) if is_chunk_key(key)
+                else make_annex_key(h.hexdigest(), size)
+            )
+            if rebuilt != key:
+                raise IOError(
+                    f"remote {self.name} returned corrupt content for {key}"
+                )
+            dst._commit(tmp, key)
+        except BaseException as e:
+            if is_crash(e):
+                raise
+            dst.fs.unlink(tmp)
+            raise
+        self.transfers += 1
+        return True
+
+
+# -- bounded seeded retry ----------------------------------------------------
+
+
+def net_retry(store: AnnexStore, fn, what: str, report: dict | None = None):
+    """Bounded retry/backoff around one remote operation.
+
+    Transient network faults (request errors, timeouts, mid-stream
+    disconnects) are retried up to the fault model's ``max_retries``; each
+    attempt waits a seeded exponential backoff charged on the SimClock —
+    the client genuinely waits, and the charge is deterministic per seed.
+    ``RemoteUnavailable`` (and exhausted retries) propagate: the caller
+    decides between failover (pull) and surfacing the error (push). Works
+    on plain same-filesystem stores too — no fault model, no retries."""
+    model = getattr(store, "fault_model", None)
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except InjectedNetworkError as e:
+            max_r = model.max_retries if model is not None else 0
+            if not e.transient or attempt >= max_r:
+                raise
+            store.fs.clock.charge(model.backoff_s(attempt))
+            attempt += 1
+            if isinstance(store, RemoteStore):
+                store.retries += 1
+            if report is not None:
+                report["retries"] = report.get("retries", 0) + 1
+
+
+def _store_has(store: AnnexStore, keys, fresh: bool = True,
+               report: dict | None = None) -> set[str]:
+    return net_retry(
+        store, lambda: store.has_many(keys, fresh=fresh),
+        f"presence on {store.name}", report,
+    )
+
+
+# -- chunk-level transfer orchestration --------------------------------------
+
+
+def head_annex_keys(repo) -> list[str]:
+    """Every annex key referenced by the current HEAD tree — the 'local
+    truth' set push/fetch default to."""
+    head = repo.head_commit()
+    if head is None:
+        return []
+    return sorted(
+        {
+            e["key"]
+            for e in repo.tree_of(head).values()
+            if e.get("t") == "annex"
+        }
+    )
+
+
+def push_keys(repo, store: AnnexStore, keys: list[str] | None = None,
+              journal: bool = True, db=None) -> dict:
+    """Resumable chunk-level push of ``keys`` (default: HEAD's annex keys)
+    to one remote.
+
+    Protocol: one batched fresh presence pass over the whole-content keys
+    (objects the remote holds never transfer again), then per missing key a
+    batched chunk presence pass and one upload per missing chunk, manifest
+    bound last — the remote never exposes a manifest whose chunks it lacks.
+    Intent is journaled first (kind ``push``); a killed client's journal is
+    replayed by ``recover()``, whose presence pre-pass re-sends only the
+    chunks absent from the remote (exactly-once, PR 6 discipline)."""
+    if keys is None:
+        keys = head_annex_keys(repo)
+    keys = list(keys)
+    report = {
+        "remote": store.name, "keys": len(keys), "keys_sent": 0,
+        "keys_skipped": 0, "chunks_sent": 0, "bytes_sent": 0, "retries": 0,
+    }
+    if isinstance(store, RemoteStore) and not store.available:
+        raise RemoteUnavailable(store.name, "marked unavailable")
+    if not keys:
+        return report
+    fs = repo.fs
+    b0 = getattr(store, "bytes_sent", 0)
+    jh = None
+    if journal:
+        from .recovery import JournalHandle
+
+        jh = JournalHandle.begin(
+            fs, repo.repro_dir, "push", {"remote": store.name, "keys": keys}
+        )
+        fs.crash_point("remote:push-journal-written")
+    sent_any = False
+    have = _store_has(store, keys, fresh=True, report=report)
+    for key in keys:
+        if key in have:
+            report["keys_skipped"] += 1
+            if jh is not None:
+                jh.append({"key": key, "skipped": True})
+            continue
+        chunks = repo.annex.manifest_of(key) if repo.annex.chunk_aware else None
+        if chunks is None:
+            net_retry(
+                store,
+                lambda k=key: store.receive_file(
+                    k, repo.annex.fs, repo.annex._path(k)
+                ),
+                f"push {key}", report,
+            )
+            report["chunks_sent"] += 1
+            if not sent_any:
+                sent_any = True
+                fs.crash_point("remote:push-mid-object")
+        else:
+            present = _store_has(store, chunks, fresh=True, report=report)
+            for ck in chunks:
+                if ck in present:
+                    continue
+                net_retry(
+                    store,
+                    lambda k=ck: store.receive_file(
+                        k, repo.annex.fs, repo.annex._path(k)
+                    ),
+                    f"push chunk {ck}", report,
+                )
+                present.add(ck)
+                report["chunks_sent"] += 1
+                if not sent_any:
+                    sent_any = True
+                    fs.crash_point("remote:push-mid-object")
+            fs.crash_point("remote:push-before-manifest")
+            net_retry(
+                store,
+                lambda k=key, c=chunks: store.put_manifest(k, c),
+                f"push manifest {key}", report,
+            )
+        report["keys_sent"] += 1
+        if jh is not None:
+            jh.append({"key": key})
+        fs.crash_point("remote:push-after-key")
+    if jh is not None:
+        jh.done()
+        fs.crash_point("remote:push-done")
+    report["bytes_sent"] = getattr(store, "bytes_sent", 0) - b0
+    if db is not None:
+        db.locations_record(store.name, keys)
+    return report
+
+
+def pull_keys(repo, keys: list[str] | None = None, journal: bool = True,
+              db=None, stores: list[AnnexStore] | None = None) -> dict:
+    """Resumable chunk-level pull of ``keys`` (default: HEAD's annex keys)
+    into the local annex, with replica failover.
+
+    Per key the first *available* replica that holds it is asked for its
+    manifest; missing chunks download individually (batched local presence
+    pre-pass — warm chunks never move), and the local manifest is bound
+    last. A replica that goes dead mid-pull (outage, or transient retries
+    exhausted) is marked unavailable and the key fails over to the next
+    one; only when no replica can serve does the pull raise. Intent is
+    journaled (kind ``pull``) for crash resume."""
+    if keys is None:
+        keys = head_annex_keys(repo)
+    keys = [k for k in keys if not repo.annex.has(k)]
+    report = {
+        "keys": len(keys), "keys_fetched": 0, "chunks_fetched": 0,
+        "bytes_received": 0, "retries": 0, "failovers": 0, "sources": {},
+    }
+    if not keys:
+        return report
+    fs = repo.fs
+    candidates = list(stores) if stores is not None else list(repo._remotes)
+    b0 = sum(getattr(s, "bytes_received", 0) for s in candidates)
+    jh = None
+    if journal:
+        from .recovery import JournalHandle
+
+        jh = JournalHandle.begin(fs, repo.repro_dir, "pull", {"keys": keys})
+        fs.crash_point("remote:pull-journal-written")
+    state = {"fetched_any": False}
+    for key in keys:
+        src = _pull_one(repo, key, candidates, report, state)
+        report["keys_fetched"] += 1
+        report["sources"][key] = src
+        if jh is not None:
+            jh.append({"key": key, "from": src})
+        fs.crash_point("remote:pull-after-key")
+    if jh is not None:
+        jh.done()
+        fs.crash_point("remote:pull-done")
+    report["bytes_received"] = (
+        sum(getattr(s, "bytes_received", 0) for s in candidates) - b0
+    )
+    if db is not None:
+        by_src: dict[str, list[str]] = {}
+        for key, src in report["sources"].items():
+            by_src.setdefault(src, []).append(key)
+        for src, ks in by_src.items():
+            db.locations_record(src, ks)
+    return report
+
+
+def _pull_one(repo, key: str, stores: list[AnnexStore], report: dict,
+              state: dict) -> str:
+    """Fetch one key from the first available replica that holds it,
+    failing over on remote death. Returns the serving store's name."""
+    fs = repo.fs
+    last_err: BaseException | None = None
+    for store in stores:
+        if isinstance(store, RemoteStore) and not store.available:
+            continue
+        try:
+            if key not in _store_has(store, [key], fresh=True, report=report):
+                continue  # this replica never had it: not a failure
+            chunks = (
+                net_retry(store, lambda: store.manifest_of(key),
+                          f"manifest {key}", report)
+                if store.chunk_aware else None
+            )
+            if chunks is None:
+                net_retry(
+                    store,
+                    lambda: store.fetch_into(key, repo.annex),
+                    f"pull {key}", report,
+                )
+                report["chunks_fetched"] += 1
+                if not state["fetched_any"]:
+                    state["fetched_any"] = True
+                    fs.crash_point("remote:pull-mid-object")
+            else:
+                local = repo.annex.has_many(chunks)
+                for ck in chunks:
+                    if ck in local:
+                        continue
+                    net_retry(
+                        store,
+                        lambda k=ck: store.fetch_into(k, repo.annex),
+                        f"pull chunk {ck}", report,
+                    )
+                    local.add(ck)
+                    report["chunks_fetched"] += 1
+                    if not state["fetched_any"]:
+                        state["fetched_any"] = True
+                        fs.crash_point("remote:pull-mid-object")
+                repo.annex.put_manifest(key, chunks)
+            return store.name
+        except (InjectedNetworkError, RemoteUnavailable) as e:
+            # graceful degradation: this replica is dead to us (outage, or
+            # its transient-retry budget is spent) — fail over
+            last_err = e
+            if isinstance(store, RemoteStore):
+                store.mark_unavailable()
+            report["failovers"] += 1
+            continue
+    if last_err is not None:
+        raise last_err
+    raise FileNotFoundError(f"no available replica holds {key}")

@@ -36,6 +36,7 @@ from .fsio import FS, NULL_FS, FSProfile, SimClock
 from .hashing import annex_key_for_bytes, make_annex_key
 from .objects import ObjectStore, canonical_json
 from .recovery import LOCKS_DIR, FileLock
+from .remote import NetworkFaultModel, RemoteStore, coerce_net, net_retry
 
 REPRO_DIR = ".repro"
 DEFAULT_ANNEX_THRESHOLD = 64 * 1024  # bytes; files >= this are annexed
@@ -46,13 +47,15 @@ class ConflictError(Exception):
 
 
 class Repository:
-    def __init__(self, root: str, fs: FS | None = None):
+    def __init__(self, root: str, fs: FS | None = None,
+                 net_faults: NetworkFaultModel | None = None):
         self.root = os.path.abspath(root)
         self.repro_dir = os.path.join(self.root, REPRO_DIR)
         cfg_path = os.path.join(self.repro_dir, "config.json")
         if not os.path.exists(cfg_path):
             raise FileNotFoundError(f"not a repro repository: {root}")
         self.fs = fs or FS(NULL_FS)
+        self.net_faults = net_faults
         # serializes ref read-modify-publish sequences across threads
         # sharing this Repository (concurrent finish batches, §9); an RLock
         # because merge_octopus publishes from inside a holder's section.
@@ -77,6 +80,18 @@ class Repository:
             AnnexStore(p, self.fs, name=f"remote{i}", **store_kw)
             for i, p in enumerate(self.config.get("annex_remotes", []))
         ]
+        # network remote tier (DESIGN §13): simulated sites on their own
+        # charged link, sharing this repo's clock and fault plan (a client
+        # crash kills its connections too). Opening each store sweeps the
+        # owner-stamped transfer tmps a crashed push left behind.
+        self._remotes.extend(
+            RemoteStore(
+                r["root"], clock=self.fs.clock, name=r["name"],
+                net=r.get("net"), fault_model=net_faults,
+                faults=self.fs.faults, **store_kw,
+            )
+            for r in self.config.get("remotes", [])
+        )
 
     # ------------------------------------------------------------------
     @classmethod
@@ -91,6 +106,8 @@ class Repository:
         faults=None,
         chunk_threshold: int | None = None,
         chunk_params: "ChunkParams | dict | None" = None,
+        numcopies: int = 1,
+        net_faults: NetworkFaultModel | None = None,
     ) -> "Repository":
         fs = FS(profile, clock, faults=faults)
         root = os.path.abspath(root)
@@ -107,12 +124,14 @@ class Repository:
             "annex_threshold": annex_threshold,
             "annex_patterns": list(annex_patterns),
             "annex_remotes": [],
+            "remotes": [],
+            "numcopies": numcopies,
             "chunk_threshold": chunk_threshold,
             "chunk_params": chunk_params.to_json() if chunk_params else None,
         }
         fs.write_bytes(os.path.join(repro_dir, "config.json"), json.dumps(cfg).encode())
         fs.write_bytes(os.path.join(repro_dir, "HEAD"), b"main")
-        return cls(root, fs)
+        return cls(root, fs, net_faults=net_faults)
 
     @classmethod
     def clone(cls, src: "Repository", dst_root: str, fs: FS | None = None) -> "Repository":
@@ -152,6 +171,12 @@ class Repository:
             os.path.join(src.repro_dir, "HEAD"), os.path.join(repo.repro_dir, "HEAD")
         )
         repo.add_annex_remote(src.annex.root)
+        # a clone knows the campaign's sites: carry the remote tier and the
+        # retention policy over, rebuilt against the clone's own clock/fs
+        repo.config["numcopies"] = src.config.get("numcopies", 1)
+        repo._save_config()
+        for r in src.config.get("remotes", []):
+            repo.add_remote(r["root"], name=r["name"], net=r.get("net"))
         head = repo.head_commit()
         if head:
             repo.checkout(head)
@@ -181,6 +206,53 @@ class Repository:
                     chunk_threshold=self._chunk_threshold,
                 )
             )
+
+    def add_remote(self, store_root: str, name: str | None = None,
+                   net=None) -> RemoteStore:
+        """Register a network remote (DESIGN §13): an annex store reached
+        over a :class:`~repro.core.remote.NetProfile` link ('lan', 'wan', a
+        profile dict, or a NetProfile). Persisted in the config so every
+        later session — and every clone — rebuilds the same site list."""
+        store_root = os.path.abspath(store_root)
+        net = coerce_net(net)
+        existing = {r["name"] for r in self.config.setdefault("remotes", [])}
+        if name is None:
+            i = len(existing)
+            while f"site{i}" in existing:
+                i += 1
+            name = f"site{i}"
+        elif name in existing:
+            raise ValueError(f"remote {name!r} already configured")
+        self.config["remotes"].append(
+            {"name": name, "root": store_root, "net": net.to_json()}
+        )
+        self._save_config()
+        store = RemoteStore(
+            store_root, clock=self.fs.clock, name=name, net=net,
+            fault_model=self.net_faults, faults=self.fs.faults,
+            chunk_params=self._chunk_params,
+            chunk_threshold=self._chunk_threshold,
+        )
+        self._remotes.append(store)
+        return store
+
+    def remote_by_name(self, name: str) -> AnnexStore:
+        for s in self._remotes:
+            if s.name == name:
+                return s
+        raise KeyError(f"no remote named {name!r}")
+
+    @property
+    def remote_stores(self) -> list[RemoteStore]:
+        """The network remotes only (the legacy co-located stores are
+        plain AnnexStores and never fault)."""
+        return [s for s in self._remotes if isinstance(s, RemoteStore)]
+
+    @property
+    def numcopies(self) -> int:
+        """Retention policy: how many *verified* replicas must exist
+        elsewhere before the local copy may be dropped."""
+        return int(self.config.get("numcopies", 1))
 
     def file_lock(self, name: str, ttl_s: float = 600.0) -> FileLock:
         """Cross-process advisory lock under ``.repro/locks/`` (DESIGN §10).
@@ -824,14 +896,21 @@ class Repository:
         return None
 
     def whereis(self, key: str) -> list[str]:
-        return [s.name for s in [self.annex, *self._remotes] if s.has(key)]
+        return [
+            s.name for s in [self.annex, *self._remotes]
+            if getattr(s, "available", True) and s.has(key)
+        ]
 
     def whereis_many(self, keys: list[str]) -> dict[str, list[str]]:
         """Batched ``whereis``: one ``has_many`` per store (per-key probes
         behind each store's known-key set), never a ``keys()`` sweep — so
         locating a handful of keys doesn't charge a listdir of every shard
-        in every store."""
-        stores = [self.annex, *self._remotes]
+        in every store. A remote marked unavailable is skipped: an
+        unreachable replica can neither confirm nor deny a copy."""
+        stores = [
+            s for s in [self.annex, *self._remotes]
+            if getattr(s, "available", True)
+        ]
         present = {s.name: s.has_many(keys) for s in stores}
         return {
             key: [s.name for s in stores if key in present[s.name]]
@@ -876,13 +955,15 @@ class Repository:
             raise FileNotFoundError(f"no store has {key}")
         chunks = store.manifest_of(key) if (chunked or store.chunk_aware) else None
         if chunks is None:
-            # whole object: streamed verified copy, never a memory buffer
-            self.annex.put_file(key, store._path(key))
+            # whole object: streamed verified copy, never a memory buffer —
+            # routed through the store so a network remote charges the
+            # download on its link, not on the local profile
+            store.fetch_into(key, self.annex)
             return self.annex
         local = self.annex.has_many(chunks)
         for ck in chunks:
             if ck not in local:
-                self.annex.put_file(ck, store._path(ck))
+                store.fetch_into(ck, self.annex)
                 local.add(ck)  # duplicate chunk keys in one manifest
         self.annex.put_manifest(key, chunks)
         return self.annex
@@ -911,20 +992,48 @@ class Repository:
         self.fs.write_bytes(abspath, content)
         return True
 
+    def verified_copies(self, key: str) -> list[str]:
+        """Names of the remotes holding ``key`` by *fresh* presence probe —
+        the only evidence a drop may rely on. Every check routes through
+        ``has_many(fresh=True)`` (one batched round trip per remote, never
+        the known-key set: a cached positive can be stale the moment a
+        foreign process drops its copy). A remote that is unavailable or
+        errors through its retry budget confirms nothing — an unreachable
+        replica cannot vouch for a copy."""
+        from .faults import InjectedNetworkError, RemoteUnavailable
+
+        confirmed = []
+        for s in self._remotes:
+            if isinstance(s, RemoteStore) and not s.available:
+                continue
+            try:
+                if key in net_retry(
+                    s, lambda s=s: s.has_many([key], fresh=True),
+                    f"numcopies probe on {s.name}",
+                ):
+                    confirmed.append(s.name)
+            except (InjectedNetworkError, RemoteUnavailable):
+                continue
+        return confirmed
+
     def annex_drop(self, path: str, force: bool = False) -> None:
         """Replace worktree content with a pointer and drop the local copy.
-        Refuses to drop the last copy unless forced (paper §2.6)."""
+        Refuses unless ``numcopies`` verified replicas exist elsewhere
+        (paper §2.6) — verified means a fresh probe *now*, per
+        :meth:`verified_copies`; nothing cached can authorize a drop."""
         abspath = os.path.join(self.root, path)
         data = self.fs.read_bytes(abspath)
         key = parse_pointer(data)
         if key is None:
             key = annex_key_for_bytes(data)
-        # numcopies check: fresh probes (never the known-key set) — a stale
-        # positive here would destroy the last copy
-        others = [s for s in self._remotes if s.has(key, fresh=True)]
-        if not others and not force:
+        need = self.numcopies
+        others = self.verified_copies(key)
+        if len(others) < need and not force:
             raise RuntimeError(
-                f"refusing to drop last copy of {path} ({key}); use force=True"
+                f"refusing to drop {path} ({key}): {len(others)} verified "
+                f"cop{'y' if len(others) == 1 else 'ies'} elsewhere "
+                f"({', '.join(others) or 'none'}), numcopies={need}; "
+                "use force=True"
             )
         chunked = False
         if self.annex.chunk_aware and self.annex.has(key):
@@ -959,11 +1068,11 @@ class Repository:
                 remote_chunks = store.has_many(chunks)
                 for ck in chunks:
                     if ck not in remote_chunks:
-                        store.put_file(ck, self.annex._path(ck))
+                        store.receive_file(ck, self.annex.fs, self.annex._path(ck))
                         remote_chunks.add(ck)
                 store.put_manifest(key, chunks)
             else:
-                store.put_file(key, self.annex._path(key))
+                store.receive_file(key, self.annex.fs, self.annex._path(key))
             n += 1
         return n
 

@@ -472,6 +472,7 @@ class SlurmScheduler:
         data_plane: str = "fused",
         job_ids: list[int] | None = None,
         journal: bool = True,
+        push_to: str | list[str] | None = None,
     ) -> list[FinishResult]:
         """``datalad slurm-finish``: commit results of finished jobs.
 
@@ -504,6 +505,12 @@ class SlurmScheduler:
         by ``Session.recover()`` (DESIGN §10); ``job_ids`` restricts the
         batch to specific job-DB rows (the recovery path uses this to
         re-finish precisely the jobs a crashed batch left open).
+
+        ``push_to`` names one or more configured remotes (DESIGN.md §13):
+        after the commits land, every annex key the batch introduced is
+        pushed there (journaled and resumable like any push — a crash
+        after the commits but mid-push leaves the commits intact and the
+        push replayable).
         """
         self._charge_cli()
         jobs = self.db.open_jobs()
@@ -574,7 +581,38 @@ class SlurmScheduler:
             jh.done()
         if to_commit:
             self.maybe_repack()
+        if push_to is not None and any(r.commit for r in results):
+            self._auto_push(push_to, results)
         return results
+
+    def _auto_push(self, push_to: str | list[str],
+                   results: list[FinishResult]) -> list[dict]:
+        """Push the annex keys the batch's commits introduced (diff against
+        each commit's first parent — O(changed), not O(tree)) to every
+        remote named in ``push_to``."""
+        from .remote import push_keys
+
+        names = [push_to] if isinstance(push_to, str) else list(push_to)
+        keys: set[str] = set()
+        for r in results:
+            if r.commit is None:
+                continue
+            commit = self.repo.objects.get_commit(r.commit)
+            parents = commit.get("parents", [])
+            base = (
+                self.repo.objects.get_commit(parents[0])["tree"]
+                if parents else None
+            )
+            for entry in self.repo._diff_trees(base, commit["tree"]).values():
+                if entry is not None and entry.get("t") == "annex":
+                    keys.add(entry["key"])
+        if not keys:
+            return []
+        return [
+            push_keys(self.repo, self.repo.remote_by_name(n), sorted(keys),
+                      db=self.db)
+            for n in names
+        ]
 
     def maybe_repack(self) -> dict | None:
         """Threshold-based compaction (DESIGN.md §8), amortized over finish

@@ -238,6 +238,109 @@ class Session:
             for job, state in self.scheduler.list_open_jobs()
         ]
 
+    # ---------------------------------------------------------- remote tier
+    def _db(self):
+        """The jobdb without forcing a cluster into existence (the remote
+        tier is data-plane only)."""
+        from .jobdb import JobDB
+
+        return (
+            self._scheduler.db if self._scheduler is not None
+            else JobDB(self.repo.repro_dir)
+        )
+
+    def add_remote(self, store_root: str, name: str | None = None,
+                   net=None):
+        """Register a simulated remote site (DESIGN.md §13): an annex store
+        reached over a network link ('lan', 'wan', a
+        :class:`~repro.core.remote.NetProfile`, or its dict form). The site
+        list persists in the repo config; returns the
+        :class:`~repro.core.remote.RemoteStore`."""
+        return self.repo.add_remote(store_root, name=name, net=net)
+
+    def push(self, remote: str | None = None, keys: list[str] | None = None,
+             journal: bool = True) -> list[dict]:
+        """Chunk-level resumable push of ``keys`` (default: every annex key
+        HEAD references) to ``remote`` (a name; default: every available
+        configured remote). Presence is pre-checked per remote in one
+        batched round trip, only missing chunks move, intent is journaled
+        so a killed push resumes via :meth:`recover`, and verified
+        transfers are recorded in the location index. Returns one report
+        dict per remote pushed."""
+        from .remote import push_keys
+
+        stores = (
+            [self.repo.remote_by_name(remote)] if remote is not None
+            else [s for s in self.repo.remote_stores if s.available]
+        )
+        if not stores:
+            raise ValueError("no (available) remotes configured")
+        db = self._db()
+        return [
+            push_keys(self.repo, s, keys, journal=journal, db=db)
+            for s in stores
+        ]
+
+    def pull(self, paths: list[str] | None = None,
+             keys: list[str] | None = None, journal: bool = True) -> dict:
+        """Chunk-level resumable pull into the local annex, with replica
+        failover — a dead remote is marked unavailable and the next one
+        serves. ``paths`` name worktree files (their HEAD annex keys are
+        pulled); ``keys`` pass keys directly; neither = every annex key
+        HEAD references. Locally present keys never move."""
+        from .remote import pull_keys
+
+        if paths is not None:
+            keys = list(keys or []) + [
+                self.repo.annex_key_at(p) for p in paths
+            ]
+        return pull_keys(self.repo, keys, journal=journal, db=self._db())
+
+    def fetch(self, missing_only: bool = True, journal: bool = True) -> dict:
+        """Ensure the local annex holds every key HEAD references, pulling
+        the missing ones from the configured replicas (cold-restore path).
+        ``missing_only`` is the contract (present keys are never
+        re-fetched); it exists as a parameter for API symmetry."""
+        del missing_only  # pull always skips locally present keys
+        return self.pull(journal=journal)
+
+    def drop(self, path: str, force: bool = False) -> None:
+        """Drop the local copy of an annexed file, leaving a pointer.
+        Refused unless ``numcopies`` *fresh-verified* replicas exist
+        elsewhere (never trusts cached presence); ``force=True``
+        overrides (DESIGN.md §13)."""
+        self.repo.annex_drop(path, force=force)
+
+    def whereis(self, paths: list[str] | None = None,
+                fresh: bool = False) -> dict[str, dict]:
+        """Per-key locations: ``{key: {"stores": [...], "recorded": [...]}}``
+        for ``paths`` (default: every annex key HEAD references).
+        ``stores`` are live probes across local + remotes (``fresh=True``
+        bypasses the known-key sets); ``recorded`` is the jobdb location
+        index — the cheap hint tier verify() cross-checks."""
+        from .remote import head_annex_keys
+
+        if paths is not None:
+            keys = [self.repo.annex_key_at(p) for p in paths]
+        else:
+            keys = head_annex_keys(self.repo)
+        recorded = self._db().locations_of(keys)
+        stores = [self.repo.annex, *self.repo._remotes]
+        live: dict[str, set[str]] = {}
+        for s in stores:
+            from .remote import RemoteStore
+
+            if isinstance(s, RemoteStore) and not s.available:
+                continue
+            live[s.name] = s.has_many(keys, fresh=fresh)
+        return {
+            k: {
+                "stores": [n for n in live if k in live[n]],
+                "recorded": recorded.get(k, []),
+            }
+            for k in keys
+        }
+
     # ------------------------------------------------------------- recovery
     def recover(self, close_unsubmitted: bool = True,
                 max_tmp_age_s: float | None = 3600.0) -> dict:
@@ -273,15 +376,19 @@ def open(
     run_cache: bool = True,
     cache_env: dict | None = None,
     faults=None,
+    net_faults=None,
     **init_kwargs,
 ) -> Session:
     """Open (or with ``create=True``, initialize) a repository at ``root``
     and return a :class:`Session` over it — the documented entry point.
     ``faults`` attaches a :class:`~repro.core.faults.FaultPlan` to the
     session's FS and (lazily created) cluster — the fault-injection harness
-    of DESIGN.md §10. ``run_cache`` toggles §11 execution memoization
-    (``submit*(..., refresh=True)`` bypasses it per call); ``cache_env``
-    folds an environment fingerprint into every execution key."""
+    of DESIGN.md §10. ``net_faults`` attaches a
+    :class:`~repro.core.remote.NetworkFaultModel` to every configured
+    remote — the §13 unreliable-network model. ``run_cache`` toggles §11
+    execution memoization (``submit*(..., refresh=True)`` bypasses it per
+    call); ``cache_env`` folds an environment fingerprint into every
+    execution key."""
     if os.path.isdir(os.path.join(root, REPRO_DIR)):
         if init_kwargs:
             raise TypeError(
@@ -290,10 +397,13 @@ def open(
             )
         from .fsio import FS
 
-        repo = Repository(root, fs=FS(profile, clock, faults=faults))
+        repo = Repository(
+            root, fs=FS(profile, clock, faults=faults), net_faults=net_faults
+        )
     elif create:
         repo = Repository.init(
-            root, profile=profile, clock=clock, faults=faults, **init_kwargs
+            root, profile=profile, clock=clock, faults=faults,
+            net_faults=net_faults, **init_kwargs
         )
     else:
         raise FileNotFoundError(

@@ -625,3 +625,148 @@ def test_verify_detects_and_repairs_orphans(tmp_path):
     assert db.get(orphan)["status"] == "closed-unsubmitted"
     assert s.verify()["divergence"] == 0
     s.close()
+
+
+# --------------------------------------------- remote transfer crash matrix
+# §13 transfer boundaries: push points fire in a clean chunked push, pull
+# points in a clean pull after the local copies are force-dropped.
+REMOTE_PUSH_POINTS = [
+    "remote:push-journal-written",
+    "remote:push-mid-object",
+    "remote:push-before-manifest",
+    "remote:push-after-key",
+    "remote:push-done",
+]
+REMOTE_PULL_POINTS = [
+    "remote:pull-journal-written",
+    "remote:pull-mid-object",
+    "remote:pull-after-key",
+    "remote:pull-done",
+]
+
+
+def remote_env(tmp_path, plan=None):
+    """A chunk-enabled repo with one remote, one chunked file and one small
+    whole object saved at HEAD."""
+    from repro.core.chunks import ChunkParams
+
+    root = str(tmp_path / "proj")
+    os.makedirs(root, exist_ok=True)
+    s = repro.open(
+        root, create=True, faults=plan, annex_threshold=64,
+        chunk_threshold=1 << 12,
+        chunk_params=ChunkParams(min_size=1 << 9, avg_bits=10,
+                                 max_size=1 << 13),
+    )
+    rng = __import__("random").Random(42)
+    with open(os.path.join(root, "big.dat"), "wb") as f:
+        f.write(bytes(rng.randrange(256) for _ in range(1 << 15)))
+    write(root, "small.dat", "s" * 200)
+    s.save(message="seed")
+    s.add_remote(str(tmp_path / "siteA"), name="siteA", net="lan")
+    return root, s
+
+
+def head_keys_with_chunks(repo):
+    """Every HEAD annex key plus every chunk its local manifest names."""
+    from repro.core.remote import head_annex_keys
+
+    keys = set(head_annex_keys(repo))
+    for k in list(keys):
+        keys.update(repo.annex.manifest_of(k) or [])
+    return keys
+
+
+def assert_remote_converged(s2):
+    """Zero divergence, remote holds every HEAD key + chunk, no pending
+    journal, and a second recover() finds nothing to do."""
+    assert s2.verify()["divergence"] == 0
+    store = s2.repo.remote_by_name("siteA")
+    wanted = head_keys_with_chunks(s2.repo)
+    assert store.has_many(wanted, fresh=True) == wanted
+    assert list_journals(s2.repo.fs, s2.repo.repro_dir) == []
+    rep2 = s2.recover()
+    assert rep2["journals_replayed"] == 0
+    assert rep2["pushes_resumed"] == 0 and rep2["pulls_resumed"] == 0
+
+
+@pytest.mark.parametrize("point", REMOTE_PUSH_POINTS)
+def test_remote_push_crash_matrix(tmp_path, point):
+    """Kill the client at every push boundary: recovery resumes the journal
+    and converges to zero divergence — the remote ends with exactly the
+    HEAD content, no duplicate and no lost chunk."""
+    plan = FaultPlan(seed=7, crash_at={point: 1})
+    root, s = remote_env(tmp_path, plan)
+    with pytest.raises(CrashInjected):
+        s.push()
+    s2 = Session(Repository(root, fs=FS(NULL_FS)))
+    rep = s2.recover()
+    if point != "remote:push-done":
+        assert rep["pushes_resumed"] == 1
+    assert_remote_converged(s2)
+
+
+@pytest.mark.parametrize("point", REMOTE_PULL_POINTS)
+def test_remote_pull_crash_matrix(tmp_path, point):
+    """Kill the client at every pull boundary (cold-restore scenario: local
+    copies dropped, content only on the remote): recovery completes the
+    pull and the local annex converges to HEAD truth."""
+    root, s = remote_env(tmp_path)  # clean push first
+    s.push()
+    s.drop("big.dat", force=True)
+    s.drop("small.dat", force=True)
+    s.gc()  # sweep the dropped key's now-orphan chunks: a real cold pull
+    s.close()
+    plan = FaultPlan(seed=7, crash_at={point: 1})
+    s1 = Session(Repository(root, fs=FS(NULL_FS, faults=plan)))
+    with pytest.raises(CrashInjected):
+        s1.pull()
+    s2 = Session(Repository(root, fs=FS(NULL_FS)))
+    rep = s2.recover()
+    if point != "remote:pull-done":
+        assert rep["pulls_resumed"] == 1
+    assert_remote_converged(s2)
+    # every HEAD key is local again and reads back verified
+    for k in set(head_keys_with_chunks(s2.repo)):
+        assert s2.repo.annex.has(k, fresh=True)
+    s2.repo.annex_get("small.dat")
+    with open(os.path.join(root, "small.dat")) as f:
+        assert f.read() == "s" * 200
+
+
+def test_remote_crash_points_recorded(tmp_path):
+    """A clean push + drop + pull passes every remote:* boundary — the two
+    matrices above cannot silently rot."""
+    plan = FaultPlan(seed=0, record_points=True)
+    root, s = remote_env(tmp_path, plan)
+    s.push()
+    s.drop("big.dat", force=True)
+    s.gc()  # sweep orphan chunks so the pull transfers, not just re-binds
+    s.pull()
+    log = set(plan.crash_point_log)
+    for point in REMOTE_PUSH_POINTS + REMOTE_PULL_POINTS:
+        assert point in log, f"{point} never passed in a clean push+pull"
+    s.close()
+
+
+def test_resumed_push_resends_only_missing_chunks(tmp_path):
+    """The exactly-once byte property: a push killed mid-object re-sends,
+    on resume, strictly less than a cold push — the chunks that landed
+    before the crash never move again."""
+    # cold baseline: same content, fresh remote
+    root_c, s_c = remote_env(tmp_path / "cold")
+    cold_bytes = s_c.push()[0]["bytes_sent"]
+    s_c.close()
+
+    plan = FaultPlan(seed=7, crash_at={"remote:push-mid-object": 1})
+    root, s = remote_env(tmp_path / "crash", plan)
+    with pytest.raises(CrashInjected):
+        s.push()
+    s2 = Session(Repository(root, fs=FS(NULL_FS)))
+    store = s2.repo.remote_by_name("siteA")
+    b0 = store.bytes_sent
+    rep = s2.recover()
+    assert rep["pushes_resumed"] == 1
+    resumed_bytes = store.bytes_sent - b0
+    assert 0 < resumed_bytes < cold_bytes
+    assert_remote_converged(s2)

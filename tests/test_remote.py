@@ -1,0 +1,482 @@
+"""Remote annex tier tests (DESIGN.md §13).
+
+Properties under test: chunk-level pushes move only absent content,
+presence is one batched round trip, pulls fail over across replicas when a
+site dies, drops are numcopies-safe against *fresh* probes only (cached
+presence can never authorize one), stranded remote tmps are swept on the
+next open, transfer retry/backoff charges are deterministic per seed, and
+the jobdb location index stays a hint tier that verify() cross-checks.
+"""
+import os
+import sqlite3
+
+import pytest
+
+import repro
+from repro.core import NetFaultRule, NetProfile, NetworkFaultModel
+from repro.core.chunks import ChunkParams
+from repro.core.faults import (
+    InjectedNetworkError,
+    RemoteUnavailable,
+    kill_token,
+)
+from repro.core.fsio import FS, NULL_FS, SimClock
+from repro.core.jobdb import JobDB
+from repro.core.remote import LAN, RemoteStore, push_keys
+from repro.core.repo import Repository
+from repro.core.session import Session
+from repro.core import slurm as S
+
+
+def write(root, rel, data):
+    p = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    with open(p, "w") as f:
+        f.write(data)
+
+
+def make_session(tmp_path, net_faults=None, chunked=False, numcopies=1,
+                 clock=None):
+    root = str(tmp_path / "proj")
+    os.makedirs(root, exist_ok=True)
+    kw = {}
+    if chunked:
+        kw = dict(
+            chunk_threshold=1 << 12,
+            chunk_params=ChunkParams(min_size=1 << 9, avg_bits=10,
+                                     max_size=1 << 13),
+        )
+    s = repro.open(
+        root, create=True, annex_threshold=64, net_faults=net_faults,
+        numcopies=numcopies, clock=clock, **kw,
+    )
+    return root, s
+
+
+# --------------------------------------------------------------- push / pull
+def test_push_pull_roundtrip_and_cold_restore(tmp_path):
+    root, s = make_session(tmp_path)
+    write(root, "data/a.dat", "a" * 500)
+    write(root, "data/b.dat", "b" * 300)
+    s.save(message="seed")
+    s.add_remote(str(tmp_path / "siteA"), name="siteA", net="lan")
+    reports = s.push()
+    assert len(reports) == 1 and reports[0]["keys_sent"] == 2
+    assert reports[0]["bytes_sent"] == 800
+
+    # idempotent: a second push moves nothing (batched presence pre-pass)
+    r2 = s.push()[0]
+    assert r2["keys_sent"] == 0 and r2["keys_skipped"] == 2
+    assert r2["bytes_sent"] == 0
+
+    # cold restore: drop local copies (replica verified), then fetch back
+    s.drop("data/a.dat")
+    s.drop("data/b.dat")
+    ka = s.repo.annex_key_at("data/a.dat")
+    assert not s.repo.annex.has(ka, fresh=True)
+    rep = s.fetch()
+    assert rep["keys_fetched"] == 2 and rep["bytes_received"] == 800
+    s.repo.annex_get("data/a.dat")
+    with open(os.path.join(root, "data/a.dat")) as f:
+        assert f.read() == "a" * 500
+
+
+def test_incremental_push_moves_only_changed_chunks(tmp_path):
+    root, s = make_session(tmp_path, chunked=True)
+    blob = bytearray(os.urandom(1 << 16))  # 64 KiB -> dozens of chunks
+    with open(os.path.join(root, "big.dat"), "wb") as f:
+        f.write(blob)
+    s.save(message="v1")
+    store = s.add_remote(str(tmp_path / "siteA"), name="siteA", net="lan")
+    r1 = s.push()[0]
+    assert r1["chunks_sent"] > 4
+    cold_bytes = r1["bytes_sent"]
+    assert cold_bytes >= len(blob)
+
+    # ~1% churn: the content-defined cutter keeps most chunk boundaries,
+    # so the second push moves a small fraction of the cold bytes
+    blob[100:200] = os.urandom(100)
+    with open(os.path.join(root, "big.dat"), "wb") as f:
+        f.write(blob)
+    s.save(message="v2")
+    r2 = s.push()[0]
+    assert r2["keys_sent"] == 1
+    assert 0 < r2["bytes_sent"] < 0.5 * cold_bytes
+    # the remote can reassemble the new version faithfully
+    key = s.repo.annex_key_at("big.dat")
+    out = str(tmp_path / "reassembled")
+    store.copy_to(key, out)
+    with open(out, "rb") as f:
+        assert f.read() == bytes(blob)
+
+
+def test_has_many_is_one_round_trip(tmp_path):
+    clock = SimClock()
+    root, s = make_session(tmp_path, clock=clock)
+    for i in range(20):
+        write(root, f"f{i}.dat", f"{i}" * 100)
+    s.save(message="seed")
+    store = s.add_remote(str(tmp_path / "siteA"), name="siteA",
+                         net=NetProfile(name="slow", latency_s=0.5,
+                                        up_bw=1e9, down_bw=1e9))
+    keys = [s.repo.annex_key_at(f"f{i}.dat") for i in range(20)]
+    t0 = store.fs.clock.total
+    assert store.has_many(keys, fresh=True) == set()
+    elapsed = store.fs.clock.total - t0
+    # 20 per-key round trips would cost >= 10 s; the batch costs ~1 RTT
+    assert elapsed < 2 * 0.5
+
+
+# ------------------------------------------------------- failover / faults
+def test_pull_fails_over_to_live_replica(tmp_path):
+    # only pulls issue "recv" requests, so the outage hits the pull's first
+    # download attempt from siteA — after the pushes completed cleanly
+    model = NetworkFaultModel(
+        seed=3,
+        rules=[NetFaultRule(op="recv", remote="siteA", kind="outage", nth=1)],
+    )
+    root, s = make_session(tmp_path, net_faults=model)
+    write(root, "x.dat", "x" * 400)
+    s.save(message="seed")
+    s.add_remote(str(tmp_path / "siteA"), name="siteA", net="lan")
+    s.add_remote(str(tmp_path / "siteB"), name="siteB", net="wan")
+    s.push()  # both replicas hold the content
+    s.drop("x.dat", force=True)
+
+    # siteA dies on the pull's download request:
+    # the pull must complete from siteB, reporting the failover
+    rep = s.pull()
+    assert rep["keys_fetched"] == 1
+    assert rep["failovers"] >= 1
+    assert set(rep["sources"].values()) == {"siteB"}
+    a = s.repo.remote_by_name("siteA")
+    assert not a.available
+
+    # push to every *available* remote skips the dead one
+    write(root, "y.dat", "y" * 200)
+    s.save(message="more")
+    reports = s.push()
+    assert [r["remote"] for r in reports] == ["siteB"]
+    # an explicit push to the dead site surfaces the outage
+    with pytest.raises(RemoteUnavailable):
+        s.push(remote="siteA")
+
+
+def test_pull_raises_when_no_replica_serves(tmp_path):
+    root, s = make_session(tmp_path)
+    write(root, "x.dat", "x" * 400)
+    s.save(message="seed")
+    s.add_remote(str(tmp_path / "siteA"), name="siteA")
+    s.push()
+    s.drop("x.dat", force=True)
+    s.repo.remote_by_name("siteA").mark_unavailable()
+    with pytest.raises((RemoteUnavailable, FileNotFoundError)):
+        s.pull()
+
+
+def test_transient_errors_retried_with_seeded_backoff(tmp_path):
+    def run(sub):
+        clock = SimClock()
+        model = NetworkFaultModel(
+            seed=11,
+            rules=[NetFaultRule(op="send", kind="error", every=2, times=4)],
+            max_retries=4,
+            backoff_base_s=0.05,
+        )
+        root, s = make_session(tmp_path / sub, net_faults=model, clock=clock)
+        write(root, "x.dat", "x" * 5000)
+        write(root, "y.dat", "y" * 5000)
+        s.save(message="seed")
+        s.add_remote(str(tmp_path / sub / "siteA"), name="siteA", net="lan")
+        rep = s.push()[0]
+        assert rep["keys_sent"] == 2
+        assert rep["retries"] >= 1
+        # content landed despite the injected failures
+        store = s.repo.remote_by_name("siteA")
+        for p in ("x.dat", "y.dat"):
+            assert store.has(s.repo.annex_key_at(p), fresh=True)
+        return rep["retries"], clock.total
+
+    # same seed, same schedule: retries and backoff *charges* are identical
+    assert run("r1") == run("r2")
+
+
+def test_stall_charges_clock_and_times_out(tmp_path):
+    clock = SimClock()
+    net = NetProfile(name="flaky", latency_s=1e-3, up_bw=1e9, down_bw=1e9,
+                     timeout_s=2.0)
+    model = NetworkFaultModel(
+        seed=0,
+        rules=[
+            # first request hangs past the timeout (transient, retried);
+            # the retry stalls 0.5 s but completes. The second rule's
+            # counter only advances on requests the first rule let through,
+            # so nth=1 means "the retry".
+            NetFaultRule(op="send", kind="stall", stall_s=10.0, nth=1,
+                         times=1),
+            NetFaultRule(op="send", kind="stall", stall_s=0.5, nth=1,
+                         times=1),
+        ],
+    )
+    root, s = make_session(tmp_path, net_faults=model, clock=clock)
+    write(root, "x.dat", "x" * 300)
+    s.save(message="seed")
+    s.add_remote(str(tmp_path / "siteA"), name="siteA", net=net)
+    t0 = clock.total
+    rep = s.push()[0]
+    assert rep["keys_sent"] == 1 and rep["retries"] == 1
+    # the client waited: a full timeout (2 s, not the 10 s stall), one
+    # backoff, and the 0.5 s second stall are all on the clock
+    assert clock.total - t0 >= 2.0 + 0.5
+
+
+def test_retries_exhausted_surface_the_error(tmp_path):
+    model = NetworkFaultModel(
+        seed=0, max_retries=2,
+        rules=[NetFaultRule(op="send", kind="error")],  # every send fails
+    )
+    root, s = make_session(tmp_path, net_faults=model)
+    write(root, "x.dat", "x" * 300)
+    s.save(message="seed")
+    s.add_remote(str(tmp_path / "siteA"), name="siteA")
+    with pytest.raises(InjectedNetworkError):
+        s.push()
+
+
+# ------------------------------------------------------------ numcopies
+def test_drop_refused_until_replica_verified(tmp_path):
+    root, s = make_session(tmp_path)  # numcopies = 1
+    write(root, "x.dat", "x" * 400)
+    s.save(message="seed")
+    with pytest.raises(RuntimeError, match="refusing to drop"):
+        s.drop("x.dat")
+    s.add_remote(str(tmp_path / "siteA"), name="siteA")
+    with pytest.raises(RuntimeError, match="refusing to drop"):
+        s.drop("x.dat")  # remote configured but still empty
+    s.push()
+    s.drop("x.dat")  # one verified replica satisfies numcopies=1
+    key = s.repo.annex_key_at("x.dat")
+    assert not s.repo.annex.has(key, fresh=True)
+
+
+def test_numcopies_two_requires_two_replicas(tmp_path):
+    root, s = make_session(tmp_path, numcopies=2)
+    write(root, "x.dat", "x" * 400)
+    s.save(message="seed")
+    s.add_remote(str(tmp_path / "siteA"), name="siteA")
+    s.push()
+    with pytest.raises(RuntimeError, match="numcopies=2"):
+        s.drop("x.dat")
+    s.add_remote(str(tmp_path / "siteB"), name="siteB")
+    s.push(remote="siteB")
+    s.drop("x.dat")
+
+
+def test_stale_cached_presence_cannot_authorize_drop(tmp_path):
+    """The drop-safety property: the remote's known-key set is warm (the
+    push populated it), then the replica loses the object behind our back.
+    A presence cache must never authorize the drop — verified_copies goes
+    through fresh probes, sees the loss, and refuses."""
+    root, s = make_session(tmp_path)
+    write(root, "x.dat", "x" * 400)
+    s.save(message="seed")
+    store = s.add_remote(str(tmp_path / "siteA"), name="siteA")
+    s.push()
+    key = s.repo.annex_key_at("x.dat")
+    assert store._is_known(key)  # cached presence says it is there
+    os.remove(store._path(key))  # the site silently lost it
+    assert store.has(key) is True  # the stale cache still lies...
+    with pytest.raises(RuntimeError, match="refusing to drop"):
+        s.drop("x.dat")  # ...but can not authorize the drop
+    # an unreachable replica confirms nothing either
+    write(root, "y.dat", "y" * 200)
+    s.save(message="more")
+    s.push()
+    store.mark_unavailable()
+    with pytest.raises(RuntimeError, match="refusing to drop"):
+        s.drop("y.dat")
+
+
+def test_unavailable_remote_confirms_nothing(tmp_path):
+    model = NetworkFaultModel(
+        seed=0, max_retries=1,
+        rules=[NetFaultRule(op="query", kind="error")],  # probes all fail
+    )
+    root, s = make_session(tmp_path, net_faults=model)
+    write(root, "x.dat", "x" * 400)
+    s.save(message="seed")
+    s.add_remote(str(tmp_path / "siteA"), name="siteA")
+    with pytest.raises((RuntimeError, InjectedNetworkError)):
+        s.drop("x.dat")
+
+
+# -------------------------------------------------- stranded remote tmps
+def test_disconnect_strands_remote_tmp_swept_on_open(tmp_path):
+    """A mid-stream disconnect kills the link before the remote-side tmp is
+    published or cleaned (a dead link runs no remote cleanup). The tmp is
+    owner-stamped; once the writer is provably dead, the next open of the
+    store sweeps it."""
+    model = NetworkFaultModel(
+        seed=0, max_retries=0,
+        rules=[NetFaultRule(op="send", kind="disconnect", nth=2, times=1)],
+    )
+    root, s = make_session(tmp_path, net_faults=model)
+    write(root, "x.dat", "x" * (3 << 20))  # several streamed blocks
+    s.save(message="seed")
+    store = s.add_remote(str(tmp_path / "siteA"), name="siteA")
+    with pytest.raises(InjectedNetworkError, match="disconnect"):
+        s.push()
+    litter = [n for n in os.listdir(store.root) if n.startswith("tmp-")]
+    assert len(litter) == 1  # the half-uploaded object is stranded
+
+    # same incarnation still owns the tmp: a sweep must NOT reclaim it
+    assert store.count_stale_tmps(max_age_s=None) == 0
+
+    # the client dies; reopening the site store reclaims the litter
+    kill_token(store.fs.token)
+    store2 = RemoteStore(store.root, name="siteA")
+    assert [n for n in os.listdir(store2.root)
+            if n.startswith("tmp-")] == []
+
+    # and the interrupted push now completes exactly-once
+    s2 = Session(Repository(root, fs=FS(NULL_FS)))
+    rep = s2.recover()
+    assert rep["pushes_resumed"] == 1
+    assert s2.verify()["divergence"] == 0
+    key = s2.repo.annex_key_at("x.dat")
+    assert s2.repo.remote_by_name("siteA").has(key, fresh=True)
+
+
+# ----------------------------------------------------- locations / whereis
+def test_locations_recorded_and_whereis(tmp_path):
+    root, s = make_session(tmp_path)
+    write(root, "x.dat", "x" * 400)
+    s.save(message="seed")
+    s.add_remote(str(tmp_path / "siteA"), name="siteA")
+    s.push()
+    key = s.repo.annex_key_at("x.dat")
+    w = s.whereis(["x.dat"])
+    assert set(w[key]["stores"]) == {"local", "siteA"}
+    assert w[key]["recorded"] == ["siteA"]
+    # drop + pull moves the copy; whereis keeps both views coherent
+    s.drop("x.dat")
+    w = s.whereis(["x.dat"], fresh=True)
+    assert w[key]["stores"] == ["siteA"]
+    s.pull()
+    w = s.whereis(["x.dat"], fresh=True)
+    assert set(w[key]["stores"]) == {"local", "siteA"}
+
+
+def test_verify_flags_stale_locations_as_warning(tmp_path):
+    root, s = make_session(tmp_path)
+    write(root, "x.dat", "x" * 400)
+    s.save(message="seed")
+    store = s.add_remote(str(tmp_path / "siteA"), name="siteA")
+    s.push()
+    key = s.repo.annex_key_at("x.dat")
+    os.remove(store._path(key))  # site lost the object; the hint is stale
+    rep = s.verify()
+    kinds = [i["kind"] for i in rep["issues"]]
+    assert "stale-location" in kinds
+    # the hint tier is a warning, never divergence
+    assert rep["divergence"] == 0
+    s.verify(repair=True)
+    db = JobDB(s.repo.repro_dir)
+    assert db.locations_of([key])[key] == []
+
+
+def test_verify_repairs_remote_manifest_divergence(tmp_path):
+    root, s = make_session(tmp_path, chunked=True)
+    with open(os.path.join(root, "big.dat"), "wb") as f:
+        f.write(os.urandom(1 << 15))
+    s.save(message="seed")
+    store = s.add_remote(str(tmp_path / "siteA"), name="siteA")
+    s.push()
+    key = s.repo.annex_key_at("big.dat")
+    truth = s.repo.annex.manifest_of(key)
+    assert truth is not None
+    # corrupt the remote manifest: rebind the key to a subset of chunks
+    from repro.core.annex import encode_chunk_manifest
+
+    bad = encode_chunk_manifest(key, truth[:1], store.chunk_params)
+    with open(store._path(key), "wb") as f:
+        f.write(bad)
+    rep = s.verify()
+    assert "remote-manifest-divergence" in [i["kind"] for i in rep["issues"]]
+    assert rep["divergence"] > 0
+    s.verify(repair=True)
+    rep2 = s.verify()
+    assert rep2["divergence"] == 0
+    assert store.manifest_of(key) == truth
+
+
+# --------------------------------------------------------- jobdb migration
+def test_jobdb_v3_to_v4_migration(tmp_path):
+    repro_dir = str(tmp_path / ".repro")
+    os.makedirs(repro_dir)
+    db_path = os.path.join(repro_dir, "jobdb.sqlite")
+    JobDB(repro_dir)  # lands at the current version
+    conn = sqlite3.connect(db_path)
+    assert conn.execute("PRAGMA user_version").fetchone()[0] == 4
+    # rebuild a v3-shaped db: runcache present, no annex_locations
+    conn.execute("DROP TABLE annex_locations")
+    conn.execute("PRAGMA user_version = 0")  # force shape detection
+    conn.commit()
+    conn.close()
+    db = JobDB(repro_dir)
+    db.locations_record("siteA", ["SHA256-s1--ab"])
+    assert db.locations_of(["SHA256-s1--ab"]) == {"SHA256-s1--ab": ["siteA"]}
+    db.locations_forget("siteA")
+    assert db.locations_all() == []
+    conn = sqlite3.connect(db_path)
+    assert conn.execute("PRAGMA user_version").fetchone()[0] == 4
+    conn.close()
+
+
+# ------------------------------------------------------- scheduler hookup
+def test_finish_push_to_replicates_outputs(tmp_path):
+    root, s = make_session(tmp_path)
+    s.add_remote(str(tmp_path / "backup"), name="backup")
+    write(root, "j.sh", "#!/bin/bash\nprintf 'x%.0s' {1..300} > out.dat\n")
+    job_ids = s.submit_many(
+        [repro.RunSpec(script="j.sh", outputs=["out.dat"])]
+    )
+    s.wait()
+    res = s.finish(push_to="backup")
+    assert all(r.state == S.COMPLETED for r in res)
+    key = s.repo.annex_key_at("out.dat")
+    assert s.repo.remote_by_name("backup").has(key, fresh=True)
+    # the location index learned about the replica
+    assert "backup" in s.scheduler.db.locations_of([key])[key]
+    del job_ids
+    s.close()
+
+
+# ----------------------------------------------------------- config plumb
+def test_remotes_persist_in_config_and_reopen(tmp_path):
+    root, s = make_session(tmp_path)
+    s.add_remote(str(tmp_path / "siteA"), name="siteA", net="wan")
+    with pytest.raises(ValueError, match="duplicate|already|siteA"):
+        s.add_remote(str(tmp_path / "elsewhere"), name="siteA")
+    write(root, "x.dat", "x" * 400)
+    s.save(message="seed")
+    s.push()
+    s2 = repro.open(root)
+    store = s2.repo.remote_by_name("siteA")
+    assert store.net.name == "wan"
+    key = s2.repo.annex_key_at("x.dat")
+    assert store.has(key, fresh=True)
+
+
+def test_push_pull_against_plain_store_still_works(tmp_path):
+    """net_retry and the transfer orchestration degrade gracefully to a
+    plain same-filesystem AnnexStore (no fault model, no retries)."""
+    from repro.core.annex import AnnexStore
+
+    root, s = make_session(tmp_path)
+    write(root, "x.dat", "x" * 400)
+    s.save(message="seed")
+    plain = AnnexStore(str(tmp_path / "plain"), FS(NULL_FS), name="plain")
+    rep = push_keys(s.repo, plain, journal=False)
+    assert rep["keys_sent"] == 1
+    assert plain.has(s.repo.annex_key_at("x.dat"), fresh=True)
