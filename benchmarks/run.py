@@ -56,7 +56,16 @@ unless (a) the incremental push at ~3% churn moves <= 0.2x the cold push's
 bytes and (b) the degraded-network pull completes — every key restored —
 within the bounded per-operation retry budget.
 
-``python -m benchmarks.run --check-all`` runs all eight gates in one
+``python -m benchmarks.run --check-dag`` runs the pipeline DAG benchmark
+(a 3-level fan campaign — prep feeding 40 train->eval chains — submitted
+as one afterok-chained ``submit_pipeline`` call, then replayed after one
+train script is invalidated), writes ``BENCH_dag.json``, and fails unless
+(a) the 3-level campaign costs exactly 3 submit batches, (b) afterok
+ordering held on every edge, (c) the partial replay costs <= 0.3x the
+cold campaign on the sim clock, and (d) the replay resubmits only the
+invalidated cone (2 submissions, every other stage memoized).
+
+``python -m benchmarks.run --check-all`` runs all nine gates in one
 invocation and exits non-zero if any failed.
 """
 from __future__ import annotations
@@ -73,6 +82,7 @@ BENCH_FAULTS_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_faults.
 BENCH_CACHE_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_cache.json")
 BENCH_CKPT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_ckpt.json")
 BENCH_REMOTE_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_remote.json")
+BENCH_DAG_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_dag.json")
 
 
 def _write_rows_json(
@@ -491,6 +501,84 @@ def check_remote() -> None:
         raise SystemExit(1)
 
 
+def _write_dag_json(rows: list[dict]) -> None:
+    out_rows = [
+        {
+            "case": r["case"],
+            "n_stages": r["n_stages"],
+            "n_levels": r["n_levels"],
+            "submit_batches": r["submit_batches"],
+            "slurm_submissions": r["slurm_submissions"],
+            "n_memoized": r["n_memoized"],
+            "all_finished": r["all_finished"],
+            "deps_ok": r["deps_ok"],
+            "sim_s_total": r["sim_s_total"],
+            "wall_s_total": r["wall_s_total"],
+        }
+        for r in rows
+        if r["bench"] == "dag"
+    ]
+    path = os.path.normpath(BENCH_DAG_JSON)
+    with open(path, "w") as f:
+        json.dump(out_rows, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {path} ({len(out_rows)} rows)", file=sys.stderr)
+
+
+def _dag_claims(rows: list[dict]) -> list[tuple[str, bool, str]]:
+    dag = {r["case"]: r for r in rows if r["bench"] == "dag"}
+    if "campaign_cold" not in dag or "campaign_replay" not in dag:
+        return []
+    cold, warm = dag["campaign_cold"], dag["campaign_replay"]
+    cone = 2  # one invalidated train stage + its eval dependent
+    return [
+        (
+            f"pipeline DAG: {cold['n_stages']}-stage {cold['n_levels']}-level"
+            " campaign submits in one batch per level",
+            cold["submit_batches"] == cold["n_levels"]
+            and cold["slurm_submissions"] == cold["n_stages"],
+            f"{cold['submit_batches']} batches for"
+            f" {cold['slurm_submissions']} jobs",
+        ),
+        (
+            "pipeline DAG: afterok ordering held on every edge",
+            bool(cold["all_finished"]) and bool(cold["deps_ok"]),
+            f"{cold['n_stages']} stages finished, edges point at producers",
+        ),
+        (
+            "pipeline DAG: partial replay <= 0.3x the cold campaign",
+            warm["sim_s_total"] <= 0.3 * cold["sim_s_total"],
+            f"cold={cold['sim_s_total']:.1f}s warm={warm['sim_s_total']:.1f}s"
+            f" ({warm['sim_s_total'] / cold['sim_s_total']:.3f}x)",
+        ),
+        (
+            "pipeline DAG: replay resubmits only the invalidated cone",
+            warm["slurm_submissions"] == cone
+            and warm["n_memoized"] == warm["n_stages"] - cone
+            and bool(warm["all_finished"]),
+            f"{warm['slurm_submissions']} resubmissions,"
+            f" {warm['n_memoized']}/{warm['n_stages']} memoized",
+        ),
+    ]
+
+
+def check_dag() -> None:
+    """Pipeline DAG gate: a multi-level campaign must submit as one
+    topological batch per level with afterok ordering intact, and a
+    partial replay must re-execute only the invalidated cone at a
+    fraction of the cold campaign's cost."""
+    from . import bench_dag
+
+    rows = bench_dag.run()
+    _write_dag_json(rows)
+    ok = True
+    for name, passed, detail in _dag_claims(rows):
+        ok &= passed
+        print(f"# [{'PASS' if passed else 'FAIL'}] {name}: {detail}")
+    if not ok:
+        raise SystemExit(1)
+
+
 def _write_schedule_json(rows: list[dict]) -> None:
     batch_rows = [
         {
@@ -608,8 +696,9 @@ def check_schedule() -> None:
 
 def main() -> None:
     from . import (
-        bench_cache, bench_ckpt, bench_conflicts, bench_faults, bench_finish,
-        bench_ingest, bench_octopus, bench_remote, bench_schedule,
+        bench_cache, bench_ckpt, bench_conflicts, bench_dag, bench_faults,
+        bench_finish, bench_ingest, bench_octopus, bench_remote,
+        bench_schedule,
     )
 
     rows = []
@@ -629,6 +718,8 @@ def main() -> None:
     rows += bench_ckpt.run()
     print("# running bench_remote (remote tier, §13) ...", file=sys.stderr)
     rows += bench_remote.run()
+    print("# running bench_dag (pipeline DAG, §14) ...", file=sys.stderr)
+    rows += bench_dag.run()
     print("# running bench_conflicts (§5.5) ...", file=sys.stderr)
     rows += bench_conflicts.run()
     print("# running bench_octopus (Fig. 6 / A2) ...", file=sys.stderr)
@@ -642,6 +733,7 @@ def main() -> None:
     _write_cache_json(rows)
     _write_ckpt_json(rows)
     _write_remote_json(rows)
+    _write_dag_json(rows)
 
     print("name,us_per_call,derived")
     claims = []
@@ -682,6 +774,10 @@ def main() -> None:
             name = f"remote/{r['case']}/{r['n_objs']}objs"
             us = r["wall_s"] * 1e6 / r["n_objs"]
             derived = f"moved={r['bytes_moved'] / 2**20:.2f}MiB"
+        elif r["bench"] == "dag":
+            name = f"dag/{r['case']}/{r['n_stages']}stages"
+            us = r["wall_s_total"] * 1e6 / r["n_stages"]
+            derived = f"sim={r['sim_s_total']:.3f}s_total"
         elif r["bench"] == "conflict_check":
             name = f"conflicts/{r['scheduled_jobs']}jobs"
             us = r["wall_us_per_check"]
@@ -714,6 +810,7 @@ def main() -> None:
     claims += _cache_claims(rows)
     claims += _ckpt_claims(rows)
     claims += _remote_claims(rows)
+    claims += _dag_claims(rows)
     conf = {r["scheduled_jobs"]: r for r in rows if r["bench"] == "conflict_check"}
     claims.append(("§5.5: conflict check ~O(1) in scheduled jobs",
                    conf[50_000]["wall_us_per_check"] < 20 * conf[100]["wall_us_per_check"],
@@ -733,13 +830,14 @@ def main() -> None:
 if __name__ == "__main__":
     args = sys.argv[1:]
     if "--check-all" in args:
-        # all eight gates in one invocation; report every failure, then exit
+        # all nine gates in one invocation; report every failure, then exit
         failed = []
         for name, gate in (
             ("finish", check_finish), ("schedule", check_schedule),
             ("pack", check_pack), ("ingest", check_ingest),
             ("faults", check_faults), ("cache", check_cache),
             ("ckpt", check_ckpt), ("remote", check_remote),
+            ("dag", check_dag),
         ):
             print(f"# --check-{name} ...", file=sys.stderr)
             try:
@@ -775,6 +873,9 @@ if __name__ == "__main__":
         ran_gate = True
     if "--check-remote" in args:
         check_remote()
+        ran_gate = True
+    if "--check-dag" in args:
+        check_dag()
         ran_gate = True
     if not ran_gate:
         main()

@@ -1,0 +1,110 @@
+"""Pipeline campaign: the DESIGN.md §14 DAG engine end-to-end — a
+3-stage preprocess -> train -> evaluate chain submitted as ONE campaign,
+a mid-campaign failure whose dependents are cancelled for free, and a
+cache-aware replay that re-executes only the failed cone.
+
+  1. three chained ``RunSpec``s; :class:`repro.Pipeline` infers the
+     edges from output -> input overlap (no explicit wiring) and batches
+     the DAG into topological levels
+  2. ``Session.run_pipeline`` submits one ``submit_many`` per level,
+     chained with Slurm ``afterok`` dependencies — the client never
+     polls between stages
+  3. the train stage is broken on purpose: Slurm cancels ``evaluate``
+     the moment ``train`` fails (afterok cascade), and
+     ``finish(close_failed_jobs=True)`` closes both rows — the
+     dependent as ``cancelled-dependency``
+  4. the script is fixed and the SAME pipeline is resubmitted:
+     ``preprocess`` short-circuits from the §11 run cache (scripts are
+     declared as inputs, so its key is unchanged) while ``train`` and
+     ``evaluate`` — the failed cone — really re-execute
+
+Run:  PYTHONPATH=src python examples/pipeline_campaign.py
+"""
+import os
+import tempfile
+
+import repro
+from repro import Pipeline, RunSpec
+
+
+def write(root: str, rel: str, text: str) -> None:
+    path = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def script(root: str, rel: str, body: str) -> None:
+    write(root, rel, "#!/bin/bash\nset -e\n" + body + "\n")
+
+
+def statuses(s, jobs) -> dict:
+    return {n: s.scheduler.db.get(j)["status"] for n, j in jobs.items()}
+
+
+def main() -> None:
+    work = tempfile.mkdtemp(prefix="repro_pipeline_")
+    root = os.path.join(work, "project")
+    s = repro.open(root, create=True, annex_threshold=256)
+    print(f"== repository at {root}")
+
+    # -- 1. three chained stages; edges are INFERRED from the data flow.
+    # Scripts are declared as inputs so editing one invalidates exactly
+    # its stage in the run cache.
+    script(root, "preprocess.sh",
+           "mkdir -p data; printf 'clean%.0s' {1..80} > data/clean.txt")
+    script(root, "train.sh", "exit 42  # broken on purpose (fixed below)")
+    script(root, "evaluate.sh",
+           "mkdir -p report; wc -c < model/weights.bin > report/score.txt")
+    stages = {
+        "preprocess": RunSpec(
+            script="preprocess.sh", inputs=["preprocess.sh"],
+            outputs=["data/clean.txt"],
+        ),
+        "train": RunSpec(
+            script="train.sh", inputs=["train.sh", "data/clean.txt"],
+            outputs=["model/weights.bin"],
+        ),
+        "evaluate": RunSpec(
+            script="evaluate.sh",
+            inputs=["evaluate.sh", "model/weights.bin"],
+            outputs=["report/score.txt"],
+        ),
+    }
+    pipeline = Pipeline(stages)
+    print(f"== inferred edges: {pipeline.edges()}")
+    print(f"== topological levels: {pipeline.levels()}")
+
+    # -- 2+3. one campaign, one submit batch per level. train fails, so
+    # Slurm cancels evaluate without it ever starting; close_failed_jobs
+    # closes the failed row and its cancelled dependent.
+    out = s.run_pipeline(pipeline, close_failed_jobs=True)
+    st = statuses(s, out["jobs"])
+    print(f"== mid-campaign failure: {st}")
+    assert st["preprocess"] == "finished"
+    assert st["train"] == "closed-failed"
+    assert st["evaluate"] == "cancelled-dependency"
+
+    # -- 4. fix the broken stage and replay the SAME pipeline: only the
+    # failed cone (train + evaluate) re-executes; preprocess comes back
+    # from the run cache as a memoized provenance commit.
+    script(root, "train.sh",
+           "mkdir -p model; cat data/clean.txt > model/weights.bin")
+    out2 = s.run_pipeline(Pipeline(stages))
+    st2 = statuses(s, out2["jobs"])
+    print(f"== replay from cache:   {st2}")
+    assert st2["preprocess"] == "memoized"
+    assert st2["train"] == "finished"
+    assert st2["evaluate"] == "finished"
+
+    score = open(os.path.join(root, "report/score.txt")).read().strip()
+    print(f"== report/score.txt = {score} bytes of weights")
+    assert score == "400"
+    assert s.verify()["divergence"] == 0
+    print("== pipeline campaign: failure cascaded, replay re-ran only "
+          "the failed cone, provenance verified")
+    s.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -28,7 +28,7 @@ if [ "$MODE" = "all" ] || [ "$MODE" = "tests" ]; then
 fi
 
 if [ "$MODE" = "all" ] || [ "$MODE" = "gates" ]; then
-    for gate in finish schedule pack ingest faults cache ckpt remote; do
+    for gate in finish schedule pack ingest faults cache ckpt remote dag; do
         run_step "gate-${gate}" python -m benchmarks.run "--check-${gate}"
     done
 fi

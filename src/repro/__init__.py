@@ -11,12 +11,14 @@ Only the lightweight core is imported here; the modeling subpackages
 (``repro.models``, ``repro.train``, ...) pull in jax and are imported
 explicitly by their users.
 """
+from .core.dag import Pipeline, PipelineError
 from .core.faults import FaultPlan, FaultRule
 from .core.remote import NetFaultRule, NetProfile, NetworkFaultModel
 from .core.session import Session, open  # noqa: A004 (module-level `open` is the API)
 from .core.spec import RunSpec, SpecError
 
 __all__ = [
-    "Session", "open", "RunSpec", "SpecError", "FaultPlan", "FaultRule",
+    "Session", "open", "RunSpec", "SpecError", "Pipeline", "PipelineError",
+    "FaultPlan", "FaultRule",
     "NetFaultRule", "NetProfile", "NetworkFaultModel",
 ]

@@ -13,6 +13,7 @@ from .conflicts import (
     normalize,
     proper_prefixes,
 )
+from .dag import Pipeline, PipelineError
 from .faults import (
     CrashInjected,
     FaultPlan,
@@ -44,6 +45,7 @@ from .spec import RunSpec, SpecError
 
 __all__ = [
     "AnnexStore", "make_pointer", "parse_pointer",
+    "Pipeline", "PipelineError",
     "OutputConflict", "ProtectedOutputs", "WildcardOutputError",
     "normalize", "proper_prefixes",
     "CrashInjected", "FaultPlan", "FaultRule",

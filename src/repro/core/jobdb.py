@@ -97,11 +97,28 @@ CREATE TABLE IF NOT EXISTS annex_locations (
 CREATE INDEX IF NOT EXISTS idx_locations_remote ON annex_locations(remote);
 """
 
+_SCHEMA_V5 = """
+CREATE TABLE IF NOT EXISTS job_deps (
+    child_job  INTEGER NOT NULL REFERENCES jobs(job_id),
+    parent_job INTEGER NOT NULL REFERENCES jobs(job_id),
+    pipeline   TEXT,
+    PRIMARY KEY (child_job, parent_job)
+);
+CREATE INDEX IF NOT EXISTS idx_deps_parent ON job_deps(parent_job);
+CREATE TABLE IF NOT EXISTS job_pipeline (
+    job_id   INTEGER PRIMARY KEY REFERENCES jobs(job_id),
+    pipeline TEXT NOT NULL,
+    stage    TEXT NOT NULL
+);
+CREATE INDEX IF NOT EXISTS idx_pipeline ON job_pipeline(pipeline);
+"""
+
 _MIGRATIONS: tuple[tuple[int, str], ...] = (
     (1, _SCHEMA_V1),  # base schema (pre-spec)
     (2, _SCHEMA_V2),  # canonical spec stored per row (PR 2)
     (3, _SCHEMA_V3),  # run-cache index + execution key per row (PR 7)
     (4, _SCHEMA_V4),  # remote-location bookkeeping for the annex tier (PR 9)
+    (5, _SCHEMA_V5),  # pipeline tier: afterok dependency edges (PR 10)
 )
 
 
@@ -121,6 +138,8 @@ class JobDB:
         }
         if "jobs" not in tables:
             return 0
+        if "job_deps" in tables:
+            return 5
         if "annex_locations" in tables:
             return 4
         if "runcache" in tables:
@@ -153,7 +172,11 @@ class JobDB:
 
     # ------------------------------------------------------------------
     def add_jobs(
-        self, specs: list[RunSpec], exec_keys: list[str | None] | None = None
+        self,
+        specs: list[RunSpec],
+        exec_keys: list[str | None] | None = None,
+        pipeline: str | None = None,
+        stages: list[str] | None = None,
     ) -> list[int]:
         """Insert a batch of specs and protect their outputs atomically.
 
@@ -168,8 +191,9 @@ class JobDB:
         conn = self._conn()
         job_ids: list[int] = []
         keys = exec_keys if exec_keys is not None else [None] * len(specs)
+        stage_names = stages if stages is not None else [None] * len(specs)
         with conn:  # single transaction: all checks + inserts + protection
-            for spec, ekey in zip(specs, keys):
+            for spec, ekey, stage in zip(specs, keys, stage_names):
                 cur = conn.execute(
                     "INSERT INTO jobs (script, script_args, pwd, inputs, outputs,"
                     " alt_dir, is_array, array_n, message, spec, exec_key,"
@@ -192,6 +216,12 @@ class JobDB:
                 )
                 job_id = cur.lastrowid
                 job_ids.append(job_id)
+                if pipeline is not None and stage is not None:
+                    conn.execute(
+                        "INSERT OR REPLACE INTO job_pipeline"
+                        " (job_id, pipeline, stage) VALUES (?,?,?)",
+                        (job_id, pipeline, stage),
+                    )
                 # RunSpec construction already normalized the outputs and
                 # rejected intra-spec nesting; only cross-job checks remain
                 normed = list(spec.outputs)
@@ -281,27 +311,35 @@ class JobDB:
             )
             c.execute("DELETE FROM protected WHERE job_id=?", (job_id,))
 
+    # Every row query goes through this join so job dicts uniformly carry
+    # ``pipeline``/``stage`` (NULL for non-pipeline jobs) without widening
+    # the jobs table itself — keeps every migration pure CREATE TABLE.
+    _JOB_SELECT = (
+        "SELECT j.*, p.pipeline AS pipeline, p.stage AS stage FROM jobs j"
+        " LEFT JOIN job_pipeline p ON p.job_id = j.job_id"
+    )
+
     def get(self, job_id: int) -> dict | None:
         row = self._conn().execute(
-            "SELECT * FROM jobs WHERE job_id=?", (job_id,)
+            self._JOB_SELECT + " WHERE j.job_id=?", (job_id,)
         ).fetchone()
         return _to_dict(row) if row else None
 
     def by_slurm_id(self, slurm_id: int) -> dict | None:
         row = self._conn().execute(
-            "SELECT * FROM jobs WHERE slurm_id=?", (slurm_id,)
+            self._JOB_SELECT + " WHERE j.slurm_id=?", (slurm_id,)
         ).fetchone()
         return _to_dict(row) if row else None
 
     def open_jobs(self) -> list[dict]:
         rows = self._conn().execute(
-            "SELECT * FROM jobs WHERE status='scheduled' ORDER BY job_id"
+            self._JOB_SELECT + " WHERE j.status='scheduled' ORDER BY j.job_id"
         ).fetchall()
         return [_to_dict(r) for r in rows]
 
     def all_jobs(self) -> list[dict]:
         rows = self._conn().execute(
-            "SELECT * FROM jobs ORDER BY job_id"
+            self._JOB_SELECT + " ORDER BY j.job_id"
         ).fetchall()
         return [_to_dict(r) for r in rows]
 
@@ -310,8 +348,9 @@ class JobDB:
         ``add_jobs`` and ``set_slurm_ids``): unqueryable orphans, the §10
         sweep target."""
         rows = self._conn().execute(
-            "SELECT * FROM jobs WHERE status='scheduled' AND slurm_id IS NULL"
-            " ORDER BY job_id"
+            self._JOB_SELECT
+            + " WHERE j.status='scheduled' AND j.slurm_id IS NULL"
+            " ORDER BY j.job_id"
         ).fetchall()
         return [_to_dict(r) for r in rows]
 
@@ -339,6 +378,54 @@ class JobDB:
         return self._conn().execute(
             "SELECT COUNT(*) FROM protected WHERE kind='name'"
         ).fetchone()[0]
+
+    # ------------------------------------------- pipeline tier (v5, §14)
+    def add_deps(
+        self, pairs: list[tuple[int, int]], pipeline: str | None = None
+    ) -> None:
+        """Record afterok edges as (child_job, parent_job) pairs.
+        Idempotent (INSERT OR REPLACE) so journal replay can re-record."""
+        if not pairs:
+            return
+        with self._conn() as c:
+            c.executemany(
+                "INSERT OR REPLACE INTO job_deps (child_job, parent_job,"
+                " pipeline) VALUES (?,?,?)",
+                [(child, parent, pipeline) for child, parent in pairs],
+            )
+
+    def dependents_of(self, job_id: int) -> list[dict]:
+        """Job rows with an afterok edge on ``job_id`` (any status)."""
+        rows = self._conn().execute(
+            self._JOB_SELECT + " JOIN job_deps d ON j.job_id = d.child_job"
+            " WHERE d.parent_job=? ORDER BY j.job_id", (job_id,)
+        ).fetchall()
+        return [_to_dict(r) for r in rows]
+
+    def parents_of(self, job_id: int) -> list[dict]:
+        rows = self._conn().execute(
+            self._JOB_SELECT + " JOIN job_deps d ON j.job_id = d.parent_job"
+            " WHERE d.child_job=? ORDER BY j.job_id", (job_id,)
+        ).fetchall()
+        return [_to_dict(r) for r in rows]
+
+    def replace_dep_parent(self, old_parent: int, new_parent: int) -> None:
+        """Rewire every edge on ``old_parent`` to ``new_parent`` (straggler
+        replacement: dependents chain off the substitute job)."""
+        with self._conn() as c:
+            c.execute(
+                "UPDATE OR REPLACE job_deps SET parent_job=? WHERE parent_job=?",
+                (new_parent, old_parent),
+            )
+
+    def pipeline_rows(self, pipeline: str) -> dict[str, dict]:
+        """Latest job row per stage for one pipeline submission (keyed by
+        stage name) — how dag-journal replay finds what already landed."""
+        rows = self._conn().execute(
+            self._JOB_SELECT + " WHERE p.pipeline=? ORDER BY j.job_id",
+            (pipeline,),
+        ).fetchall()
+        return {r["stage"]: _to_dict(r) for r in rows if r["stage"]}
 
     # --------------------------------------------------- run cache (§11)
     def cache_lookup(self, exec_keys: list[str | None]) -> dict[str, dict]:

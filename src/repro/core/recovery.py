@@ -290,6 +290,8 @@ def recover(
         "pushes_resumed": 0,
         "pulls_resumed": 0,
         "remote_keys_resent": 0,
+        "dag_pipelines_resumed": 0,
+        "dag_levels_resubmitted": 0,
         "errors": [],
     }
     # 1. stale locks — before journal replay, which needs to take them
@@ -305,9 +307,21 @@ def recover(
         report["stale_tmps_swept"] += store.sweep_stale_tmps(
             max_age_s=max_tmp_age_s
         )
-    # 3. journals, oldest first (names sort by timestamp)
-    for path in sorted(list_journals(fs, repo.repro_dir)):
-        header, entries = read_journal(fs, path)
+    # 3. journals, oldest first (names sort by timestamp) — with one
+    # exception: ``dag`` journals replay LAST, after every submit journal
+    # has recovered its level's slurm ids / closed its dead rows. Replaying
+    # a pipeline before its levels' own journals would misread rows the
+    # submit replay was about to fix and double-submit their stages.
+    journals = [
+        (path, *read_journal(fs, path))
+        for path in sorted(list_journals(fs, repo.repro_dir))
+    ]
+    is_dag = lambda h: h is not None and h.get("kind") == "dag"  # noqa: E731
+    ordered = (
+        [j for j in journals if not is_dag(j[1])]
+        + [j for j in journals if is_dag(j[1])]
+    )
+    for path, header, entries in ordered:
         ok = True
         if header is None:
             pass  # header never landed: the batch had no effects yet
@@ -321,6 +335,8 @@ def recover(
             ok = _replay_push(session, header, entries, report)
         elif header.get("kind") == "pull":
             ok = _replay_pull(session, header, entries, report)
+        elif header.get("kind") == "dag":
+            ok = _replay_dag(session, header, entries, report)
         if ok:
             fs.unlink(path)
             report["journals_replayed"] += 1
@@ -593,6 +609,87 @@ def _replay_pull(session: "Session", header: dict, entries: list[dict],
         report["errors"].append(f"pull replay: {e}")
         return False
     report["pulls_resumed"] += 1
+    return True
+
+
+def _replay_dag(session: "Session", header: dict, entries: list[dict],
+                report: dict) -> bool:
+    """Exactly-once pipeline-submission replay (§14).
+
+    Crash window: anywhere between the dag journal's creation and its
+    retirement. The header carries the complete pipeline (stage specs +
+    edges), so the DAG is rebuilt and walked level by level:
+
+      - stages whose rows landed (found by their pipeline/stage row tags,
+        after every submit journal has already replayed) are *reused* —
+        their dependency edges are re-recorded idempotently;
+      - rows the crash left open with no slurm id are closed (the standard
+        unsubmitted-orphan rule) and their stages resubmitted;
+      - stages with no row at all are resubmitted, chained via afterok onto
+        whichever parent rows are real jobs.
+
+    Nothing runs twice: landed rows are never re-sbatched, and the
+    resubmission goes through submit_many's own journal discipline.
+    """
+    from .dag import Pipeline, PipelineError
+    from .spec import RunSpec, SpecError
+
+    del entries  # what landed is read back from the tagged rows, not trusted
+    sched = session.scheduler
+    db = sched.db
+    pid = header["pipeline"]
+    try:
+        pipeline = Pipeline({
+            n: RunSpec.from_json(js)
+            for n, js in header.get("stages", {}).items()
+        })
+    except (PipelineError, SpecError, KeyError, TypeError) as e:
+        report["errors"].append(f"dag replay {pid}: bad journal header: {e}")
+        return True  # unreplayable: retire it; the rows tell the story
+    rows = db.pipeline_rows(pid)
+    stage_jobs: dict[str, int] = {}
+    resubmitted = 0
+    for i, level in enumerate(pipeline.levels()):
+        missing: list[str] = []
+        for name in level:
+            row = rows.get(name)
+            if row is None:
+                missing.append(name)
+                continue
+            if row["status"] == "scheduled" and row["slurm_id"] is None:
+                # submission never completed and no submit journal covered
+                # it: close the orphan (releasing protection) and redo it
+                db.close_job(row["job_id"], status="closed-unsubmitted")
+                report["jobs_closed_unsubmitted"] += 1
+                missing.append(name)
+                continue
+            if row["status"] in ("closed-unsubmitted", "submit-failed"):
+                missing.append(name)
+                continue
+            stage_jobs[name] = row["job_id"]
+        # re-record landed stages' edges: the crash may have hit between
+        # dag:level-submitted and dag:deps-recorded (add_deps is idempotent)
+        db.add_deps(
+            [
+                (stage_jobs[c], stage_jobs[p])
+                for c in level if c in stage_jobs
+                for p in pipeline.parents[c] if p in stage_jobs
+            ],
+            pipeline=pid,
+        )
+        if not missing:
+            continue
+        try:
+            sched._submit_level(
+                pipeline, pid, i, missing, stage_jobs,
+                refresh=bool(header.get("refresh")),
+            )
+        except Exception as e:
+            report["errors"].append(f"dag replay {pid} level {i}: {e}")
+            return False
+        resubmitted += 1
+    report["dag_levels_resubmitted"] += resubmitted
+    report["dag_pipelines_resumed"] += 1
     return True
 
 

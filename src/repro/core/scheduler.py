@@ -27,9 +27,11 @@ from __future__ import annotations
 
 import os
 import statistics
+import uuid
 from dataclasses import dataclass
 
 from . import slurm as S
+from .dag import Pipeline
 from .faults import is_crash, is_transient
 from .jobdb import JobDB, job_spec
 from .records import TITLE_SLURM, RunRecord, spec_of
@@ -119,7 +121,15 @@ class SlurmScheduler:
         Returns the job DB id."""
         return self.submit_many([spec], refresh=refresh)[0]
 
-    def submit_many(self, specs: list[RunSpec], refresh: bool = False) -> list[int]:
+    def submit_many(
+        self,
+        specs: list[RunSpec],
+        refresh: bool = False,
+        dependencies: list[list[int]] | None = None,
+        provided: set[str] | None = None,
+        pipeline: str | None = None,
+        stages: list[str] | None = None,
+    ) -> list[int]:
         """Batched submission: N specs, ONE CLI-startup charge, ONE job-DB
         transaction, ONE shared §5.5 conflict pass (see ``JobDB.add_jobs``).
 
@@ -144,8 +154,20 @@ class SlurmScheduler:
         ``close_failed_jobs=True`` closes them — before using it after a
         crash, check the queue (``squeue``/``sacct``) for orphans, since
         closing releases their output protection.
+
+        Pipeline plumbing (§14, used by ``submit_pipeline``):
+        ``dependencies[i]`` lists parent *slurm* ids for spec i (afterok);
+        ``provided`` is the set of upstream-declared outputs — inputs under
+        it are not "missing" even though they don't exist yet; ``pipeline``
+        and ``stages`` tag the rows for dag-journal replay. A spec with a
+        live dependency never consults the run cache: its inputs are about
+        to be rewritten by the parent job, so a key derived from what is on
+        disk *now* would be stale. Its key is derived at finish time
+        instead, once the real inputs exist.
         """
         specs = list(specs)
+        deps = dependencies if dependencies is not None else [[] for _ in specs]
+        provided = provided or set()
         for spec in specs:
             if not isinstance(spec, RunSpec):
                 raise ScheduleError(f"submit expects RunSpec instances, got {type(spec).__name__}")
@@ -156,15 +178,19 @@ class SlurmScheduler:
                 )
         self._charge_cli()  # one startup charge for the whole batch
         for spec in specs:  # cheap existence probe before any DB or fetch work
-            missing = spec.missing_inputs(self.repo.root)
+            missing = spec.missing_inputs(self.repo.root, provided=provided)
             if missing:
                 raise ScheduleError(f"input does not exist: {missing[0]}")
 
         # §11: derive execution keys up front — uncacheable specs
         # (unresolvable inputs, cache disabled) key as None and always
-        # submit as novel
+        # submit as novel. Specs with pending afterok parents are forced
+        # uncacheable here (stale-input guard, see docstring).
         if self.cache is not None:
             exec_keys = self.cache.execution_keys(specs)
+            exec_keys = [
+                None if deps[i] else k for i, k in enumerate(exec_keys)
+            ]
         else:
             exec_keys = [None] * len(specs)
 
@@ -172,7 +198,9 @@ class SlurmScheduler:
         # one transaction, each output checked exactly once — BEFORE the
         # potentially expensive annex fetches, so a conflicting batch is
         # refused without moving any data
-        job_ids = self.db.add_jobs(specs, exec_keys=exec_keys)
+        job_ids = self.db.add_jobs(
+            specs, exec_keys=exec_keys, pipeline=pipeline, stages=stages
+        )
         fs = self.repo.fs
         fs.crash_point("submit:jobs-added")
 
@@ -209,13 +237,13 @@ class SlurmScheduler:
             for idx in novel:
                 spec = specs[idx]
                 unlocked = False
-                inputs = self._fetch_inputs(spec)
+                inputs = self._fetch_inputs(spec, provided=provided)
                 # unlock outputs that already exist so the job may overwrite
                 unlocked = True
                 for o in spec.outputs:
                     self.repo.unlock(o)
                 slurm_id = self._retry_slurm(
-                    lambda: self._submit_one(spec, inputs), "sbatch"
+                    lambda: self._submit_one(spec, inputs, deps[idx]), "sbatch"
                 )
                 jh.append({"job_id": job_ids[idx], "slurm_id": slurm_id})
                 fs.crash_point("submit:after-sbatch")
@@ -242,18 +270,158 @@ class SlurmScheduler:
         jh.done()
         return job_ids
 
-    def _fetch_inputs(self, spec: RunSpec) -> list[str]:
+    # ---------------------------------------------------- pipelines (§14)
+    def submit_pipeline(
+        self,
+        pipeline: Pipeline,
+        refresh: bool = False,
+        run_id: str | None = None,
+    ) -> dict[str, int]:
+        """Submit a whole :class:`~repro.core.dag.Pipeline` as topologically
+        batched ``submit_many`` calls — one batch per level, so an L-level
+        DAG costs L CLI charges however many stages it has — with
+        ``afterok`` dependency edges between levels.
+
+        Cache cutting (§11 x §14): levels are submitted in topological
+        order without waiting, so a stage whose parents all short-circuited
+        as ``memoized`` sees its inputs already materialized and gets its
+        own cache lookup; a stage chained to a *real* job submits uncached
+        with an afterok edge. Re-submitting a partially failed campaign
+        therefore re-executes exactly the failed stage's downstream cone —
+        everything else replays from the run cache.
+
+        The whole submission runs under an intent journal (kind ``dag``,
+        DESIGN §10): the header carries the full stage specs and edge list,
+        each level appends its job ids once landed, and ``recover()``
+        resubmits only the levels the crash prevented — already-landed
+        levels are found by their pipeline/stage row tags and reused.
+
+        Returns {stage name: job DB id}.
+        """
+        levels = pipeline.levels()
+        pid = run_id or (
+            f"{pipeline.pipeline_id[:12]}-{uuid.uuid4().hex[:8]}"
+        )
+        fs = self.repo.fs
+        jh = JournalHandle.begin(
+            fs, self.repo.repro_dir, "dag",
+            {
+                "pipeline": pid,
+                "stages": {n: s.to_json() for n, s in pipeline.stages.items()},
+                "edges": [list(e) for e in pipeline.edges()],
+                "levels": levels,
+                "refresh": bool(refresh),
+            },
+        )
+        fs.crash_point("dag:journal-written")
+        stage_jobs: dict[str, int] = {}
+        try:
+            for i, level in enumerate(levels):
+                self._submit_level(
+                    pipeline, pid, i, level, stage_jobs,
+                    refresh=refresh, journal=jh,
+                )
+        except BaseException as e:
+            if is_crash(e):
+                raise  # dead process: recover() resumes from the journal
+            # a soft failure (conflict, sbatch error) already closed the
+            # failing level's rows inside submit_many; earlier levels stay
+            # queued and valid, so the DB tells the whole story — retire
+            # the journal rather than have recovery resubmit a submission
+            # the caller saw fail
+            jh.done()
+            raise
+        fs.crash_point("dag:before-done")
+        jh.done()
+        return stage_jobs
+
+    def _submit_level(
+        self,
+        pipeline: Pipeline,
+        pid: str,
+        level_idx: int,
+        level: list[str],
+        stage_jobs: dict[str, int],
+        refresh: bool = False,
+        journal: JournalHandle | None = None,
+    ) -> list[str]:
+        """Submit one topological level (shared by ``submit_pipeline`` and
+        dag-journal replay). Mutates ``stage_jobs`` with the landed ids and
+        returns the stages *skipped* because their parent chain is dead
+        (failed/cancelled rows upstream — only possible during replay)."""
+        fs = self.repo.fs
+        names: list[str] = []
+        specs: list[RunSpec] = []
+        deps: list[list[int]] = []
+        skipped: list[str] = []
+        for name in level:
+            dep_ids: list[int] = []
+            alive = True
+            for p in pipeline.parents[name]:
+                prow = self.db.get(stage_jobs[p]) if p in stage_jobs else None
+                if prow is None:
+                    alive = False  # parent never landed: dead cone
+                    break
+                if prow["status"] == "scheduled" and prow["slurm_id"] is not None:
+                    dep_ids.append(prow["slurm_id"])
+                elif prow["status"] in ("finished", "memoized"):
+                    continue  # satisfied: outputs exist on disk
+                else:
+                    alive = False  # parent closed failed/cancelled
+                    break
+            if alive:
+                names.append(name)
+                specs.append(pipeline.stages[name])
+                deps.append(dep_ids)
+            else:
+                skipped.append(name)
+        if not names:
+            return skipped
+        provided: set[str] = set()
+        for name in names:
+            provided |= pipeline.upstream_outputs(name)
+        ids = self.submit_many(
+            specs, refresh=refresh, dependencies=deps,
+            provided=provided, pipeline=pid, stages=names,
+        )
+        fs.crash_point("dag:level-submitted")
+        stage_jobs.update(zip(names, ids))
+        self.db.add_deps(
+            [
+                (stage_jobs[c], stage_jobs[p])
+                for c in names
+                for p in pipeline.parents[c]
+                if p in stage_jobs
+            ],
+            pipeline=pid,
+        )
+        fs.crash_point("dag:deps-recorded")
+        if journal is not None:
+            journal.append({
+                "level": level_idx,
+                "jobs": {n: stage_jobs[n] for n in names},
+                "skipped": skipped,
+            })
+            fs.crash_point("dag:level-journaled")
+        return skipped
+
+    def _fetch_inputs(self, spec: RunSpec, provided: set[str] | None = None) -> list[str]:
         """Resolve + annex-fetch a spec's inputs (step (1) of datalad run,
         §3). Wildcards glob-expand like ``datalad run``; a missing literal
         input raises (``submit_many`` pre-checks existence before any DB
-        work, so this only fires on a race)."""
-        expanded = spec.expand_inputs(self.repo.root)
+        work, so this only fires on a race). Inputs an upstream pipeline
+        stage will produce (``provided``) are skipped — there is nothing to
+        fetch yet; the job reads them from the worktree once released."""
+        expanded = spec.expand_inputs(self.repo.root, provided=provided or ())
         for i in expanded:
             if os.path.isfile(os.path.join(self.repo.root, i)):
                 self.repo.annex_get(i)
         return expanded
 
-    def _submit_one(self, spec: RunSpec, inputs: list[str]) -> int:
+    def _submit_one(
+        self, spec: RunSpec, inputs: list[str],
+        dependency: list[int] | None = None,
+    ) -> int:
         """Stage alt-dir and sbatch (outputs already unlocked by the caller).
         Returns the slurm id."""
         workdir = os.path.normpath(os.path.join(self.repo.root, spec.pwd))
@@ -263,6 +431,7 @@ class SlurmScheduler:
             spec.script, workdir=workdir, args=spec.script_args,
             array_n=spec.array_n, time_limit_s=spec.time_limit_s,
             env=dict(spec.env) or None,
+            dependency=list(dependency) if dependency else None,
         )
 
     # ---------------------------------------------------- memoization (§11)
@@ -528,9 +697,21 @@ class SlurmScheduler:
             ),
             "sacct",
         )
+        # §14 satellite: a failed parent's afterok dependents were cancelled
+        # by the cluster and will never produce anything — close their rows
+        # (releasing output protection) instead of leaving them open to
+        # block future conflicting submissions. The failed parent itself
+        # keeps the §5.2 close/commit discipline.
+        dep_closed = self._close_failed_dependents(jobs, states)
         results: list[FinishResult] = []
         to_commit: list[tuple[dict, str]] = []
         for job in jobs:
+            if job["job_id"] in dep_closed:
+                results.append(FinishResult(
+                    job["job_id"], job["slurm_id"] or -1,
+                    "CANCELLED", None,
+                ))
+                continue
             if job["slurm_id"] is None:
                 # a crash between add_jobs and set_slurm_ids left this row
                 # without a submission id; it cannot be queried or committed.
@@ -584,6 +765,30 @@ class SlurmScheduler:
         if push_to is not None and any(r.commit for r in results):
             self._auto_push(push_to, results)
         return results
+
+    def _close_failed_dependents(
+        self, jobs: list[dict], states: dict[int, str]
+    ) -> set[int]:
+        """Close (transitively) every open afterok dependent of a job the
+        poll saw terminal-but-not-COMPLETED, as ``cancelled-dependency``.
+        Returns the closed job ids."""
+        frontier = [
+            j["job_id"] for j in jobs
+            if j["slurm_id"] is not None
+            and states.get(j["slurm_id"]) in S.TERMINAL
+            and states.get(j["slurm_id"]) != S.COMPLETED
+        ]
+        closed: set[int] = set()
+        while frontier:
+            parent = frontier.pop()
+            for row in self.db.dependents_of(parent):
+                jid = row["job_id"]
+                if jid in closed or row["status"] != "scheduled":
+                    continue
+                self.db.close_job(jid, status="cancelled-dependency")
+                closed.add(jid)
+                frontier.append(jid)
+        return closed
 
     def _auto_push(self, push_to: str | list[str],
                    results: list[FinishResult]) -> list[dict]:
@@ -765,13 +970,23 @@ class SlurmScheduler:
                         repo.fs.crash_point("finish:before-publish")
                         repo.set_branch(branch, commit)
                         repo.fs.crash_point("finish:after-publish")
+                ekey = job.get("exec_key")
                 if (
                     self.cache is not None and staged is not None
-                    and state == S.COMPLETED and job.get("exec_key")
+                    and state == S.COMPLETED and not ekey
+                ):
+                    # pipeline stages submit with no key (their inputs did
+                    # not exist yet / were about to be rewritten, §14) —
+                    # derive it now that the real inputs are on disk, so
+                    # replays of the same campaign can memoize this stage
+                    ekey = self.cache.execution_key(spec)
+                if (
+                    self.cache is not None and staged is not None
+                    and state == S.COMPLETED and ekey
                 ):
                     entries = staged[idx]
                     cache_rows.append({
-                        "exec_key": job["exec_key"],
+                        "exec_key": ekey,
                         "spec_id": spec.spec_id,
                         "commit_oid": commit,
                         "output_tree": entries,
@@ -1048,21 +1263,67 @@ class SlurmScheduler:
         row). ``scancel`` is idempotent and reports the job's terminal state
         instead of cancelling twice; a COMPLETED straggler is left open for
         a normal ``finish`` and no duplicate submission happens — returns
-        None in both already-resolved cases."""
+        None in both already-resolved cases.
+
+        Pipeline-aware (§14): afterok dependents of the straggler are first
+        detached-and-held (so the cancel cannot cascade into them), then
+        rewired onto the replacement's slurm id and released — they run
+        after the replacement, never after the cancelled original. The
+        jobdb dependency edges move to the replacement row so failure
+        handling and future rewires keep following the chain."""
         job = self.db.get(job_id)
         if job is None:
             raise ScheduleError(f"unknown job {job_id}")
         if job["status"] != "scheduled" or job["slurm_id"] is None:
             return None  # a racing finisher already resolved this job
+        # detach held dependents BEFORE cancelling: a cancelled parent would
+        # otherwise cascade-cancel the very jobs we mean to re-parent
+        dependents = [
+            r for r in self.db.dependents_of(job_id)
+            if r["status"] == "scheduled" and r["slurm_id"] is not None
+        ]
+        detached: list[dict] = []
+        for d in dependents:
+            ok = self._retry_slurm(
+                lambda d=d: self.cluster.scontrol_update_dependency(
+                    d["slurm_id"], remove=[job["slurm_id"]], hold=True
+                ),
+                "scontrol",
+            )
+            if ok:
+                detached.append(d)
         state = self._retry_slurm(
             lambda: self.cluster.scancel(job["slurm_id"]), "scancel"
         )
         if state == S.COMPLETED:
             # lost the race: the job finished before the cancel landed.
-            # Leave the row open so finish() commits it exactly once.
+            # Leave the row open so finish() commits it exactly once; the
+            # afterok edges we removed are satisfied by definition.
+            for d in detached:
+                self.cluster.scontrol_release(d["slurm_id"])
             return None
         self.db.close_job(job_id, status="cancelled-straggler")
         spec = job_spec(job).replace(
             message=f"straggler reschedule of job {job_id}"
         )
-        return self.submit(spec)
+        try:
+            new_id = self.submit(spec)
+        except BaseException:
+            # no replacement: the dependents' parent is gone — same
+            # semantics as a failed parent, so cancel and close them
+            for d in detached:
+                self.cluster.scancel(d["slurm_id"])
+                self.db.close_job(d["job_id"], status="cancelled-dependency")
+            raise
+        new_row = self.db.get(new_id)
+        for d in detached:
+            if new_row["status"] == "scheduled" and new_row["slurm_id"] is not None:
+                self.cluster.scontrol_update_dependency(
+                    d["slurm_id"], add=[new_row["slurm_id"]]
+                )
+            # a memoized replacement needs no edge: its outputs are already
+            # materialized, so the afterok contract is satisfied
+            self.cluster.scontrol_release(d["slurm_id"])
+        if dependents:
+            self.db.replace_dep_parent(job_id, new_id)
+        return new_id

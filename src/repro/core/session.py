@@ -198,6 +198,41 @@ class Session:
         """Commit results of finished jobs (``slurm-finish``)."""
         return self.scheduler.finish(**kw)
 
+    def run_pipeline(
+        self,
+        pipeline,
+        refresh: bool = False,
+        wait: bool = True,
+        finish: bool = True,
+        timeout: float = 600.0,
+        **finish_kw,
+    ) -> dict:
+        """Submit a :class:`~repro.core.dag.Pipeline` DAG as one campaign
+        (§14): topologically batched ``submit_many`` calls chained with
+        ``afterok`` edges, memoized stages cut out of the DAG before
+        anything reaches Slurm. With ``wait`` (default) blocks until every
+        real job is terminal; with ``finish`` (default) then commits the
+        results — so a mid-campaign failure can be replayed by simply
+        calling ``run_pipeline`` again: completed stages come back from the
+        run cache and only the failed cone re-executes.
+
+        Returns ``{"jobs": {stage: job_id}, "results": [FinishResult]}``.
+        """
+        jobs = self.scheduler.submit_pipeline(pipeline, refresh=refresh)
+        out: dict = {"jobs": dict(jobs), "results": []}
+        if not wait:
+            return out
+        open_ids = [
+            jid for jid in jobs.values()
+            if (row := self.scheduler.db.get(jid))
+            and row["status"] == "scheduled"
+        ]
+        if open_ids:
+            self.wait(open_ids, timeout=timeout)
+        if finish:
+            out["results"] = self.scheduler.finish(**finish_kw)
+        return out
+
     def reschedule(self, commitish: str | None = None, **kw) -> list[int]:
         """Resubmit from stored specs (``slurm-reschedule``)."""
         return self.scheduler.reschedule(commitish=commitish, **kw)

@@ -84,6 +84,9 @@ class SlurmJob:
     submit_time: float = field(default_factory=time.time)
     tasks: list[TaskState] = field(default_factory=list)
     cancelled: bool = False
+    dependency: list[int] = field(default_factory=list)  # afterok parents
+    held: bool = False  # scontrol hold: stay PENDING even with no deps
+    started: bool = False  # tasks handed to the pool (at most once)
 
     def aggregate_state(self) -> str:
         states = [t.state for t in self.tasks]
@@ -108,7 +111,28 @@ class SlurmCluster:
     """Executor interface (sbatch/sacct/scancel)."""
 
     def sbatch(self, script: str, workdir: str, args: str = "", array_n: int = 1,
-               time_limit_s: float | None = None, env: dict | None = None) -> int:
+               time_limit_s: float | None = None, env: dict | None = None,
+               dependency: list[int] | None = None) -> int:
+        """Submit a job. ``dependency`` is a list of parent job ids with
+        ``afterok`` semantics: the job stays PENDING until every parent is
+        COMPLETED, and is cancelled if any parent ends in another terminal
+        state (real Slurm leaves it DependencyNeverSatisfied; we model the
+        ``--kill-on-invalid-dep=yes`` behaviour so campaigns drain)."""
+        raise NotImplementedError
+
+    def scontrol_update_dependency(
+        self, job_id: int, add: list[int] | None = None,
+        remove: list[int] | None = None, hold: bool = False,
+    ) -> bool:
+        """Rewire a *pending* job's afterok parents (``scontrol update
+        Dependency=...``). ``hold`` additionally holds the job so it does
+        not start even if its dependency set becomes empty — callers use
+        remove+hold, then add+release once the replacement parent exists.
+        Returns False if the job already started or finished."""
+        raise NotImplementedError
+
+    def scontrol_release(self, job_id: int) -> None:
+        """Clear a hold set by :meth:`scontrol_update_dependency`."""
         raise NotImplementedError
 
     def sacct(self, job_id: int) -> str:
@@ -151,18 +175,24 @@ class LocalSlurmCluster(SlurmCluster):
         self.sacct_cost_s = sacct_cost_s
         self._jobs: dict[int, SlurmJob] = {}
         self._procs: dict[tuple[int, int], subprocess.Popen] = {}
-        self._lock = threading.Lock()
+        # RLock: dependency resolution runs inside _maybe_done, which is
+        # reached both with and without the lock held
+        self._lock = threading.RLock()
         self._next_id = first_job_id
         self._done_events: dict[int, threading.Event] = {}
+        self._waiting: dict[int, set[int]] = {}  # held job -> unmet parents
+        self._dependents: dict[int, list[int]] = {}  # parent -> held children
 
     # -- submission ------------------------------------------------------
     def sbatch(self, script: str, workdir: str, args: str = "", array_n: int = 1,
-               time_limit_s: float | None = None, env: dict | None = None) -> int:
+               time_limit_s: float | None = None, env: dict | None = None,
+               dependency: list[int] | None = None) -> int:
         if self.faults is not None:
             self.faults.on_slurm("sbatch")
         self.clock.charge(self.sbatch_cost_s)
         if not os.path.exists(os.path.join(workdir, script)) and not os.path.isabs(script):
             raise FileNotFoundError(f"job script not found: {script} (cwd {workdir})")
+        failed_parent = False
         with self._lock:
             job_id = self._next_id
             self._next_id += 1
@@ -170,12 +200,82 @@ class LocalSlurmCluster(SlurmCluster):
                 job_id=job_id, script=script, args=args, workdir=workdir,
                 array_n=array_n, time_limit_s=time_limit_s, env=env,
                 tasks=[TaskState() for _ in range(array_n)],
+                dependency=list(dependency or []),
             )
             self._jobs[job_id] = job
             self._done_events[job_id] = threading.Event()
-        for task_id in range(array_n):
-            self.pool.submit(self._run_task, job, task_id)
+            waiting: set[int] = set()
+            for p in job.dependency:
+                parent = self._jobs.get(p)
+                if parent is None:
+                    raise KeyError(f"unknown dependency job {p}")
+                # done-event set means the parent's dependent resolution
+                # already ran (or is running): resolve this edge inline —
+                # a late registration would never be visited again
+                if self._done_events[p].is_set():
+                    if parent.aggregate_state() != COMPLETED:
+                        failed_parent = True
+                    continue
+                waiting.add(p)
+                self._dependents.setdefault(p, []).append(job_id)
+            if failed_parent:
+                self._detach(job_id)
+            elif waiting:
+                self._waiting[job_id] = waiting
+        if failed_parent:
+            self._cancel_dependent(job)
+        elif not waiting:
+            self._start_tasks(job)
         return job_id
+
+    def _start_tasks(self, job: SlurmJob) -> None:
+        with self._lock:
+            if job.started or job.cancelled:
+                return
+            job.started = True
+        for task_id in range(job.array_n):
+            self.pool.submit(self._run_task, job, task_id)
+
+    def _detach(self, job_id: int) -> None:
+        """Drop every parent->job_id registration (lock held by caller)."""
+        self._waiting.pop(job_id, None)
+        for deps in self._dependents.values():
+            while job_id in deps:
+                deps.remove(job_id)
+
+    def _cancel_dependent(self, job: SlurmJob) -> None:
+        """A parent ended non-COMPLETED: the afterok child dies PENDING."""
+        with self._lock:
+            job.cancelled = True
+            for t in job.tasks:
+                if t.state == PENDING:
+                    t.state = CANCELLED
+        self._maybe_done(job)
+
+    def _resolve_dependents(self, job: SlurmJob) -> None:
+        """Called once `job` is terminal: release or cancel held children."""
+        state = job.aggregate_state()
+        to_start: list[SlurmJob] = []
+        to_cancel: list[SlurmJob] = []
+        with self._lock:
+            for child_id in self._dependents.pop(job.job_id, []):
+                waiting = self._waiting.get(child_id)
+                if waiting is None:
+                    continue
+                child = self._jobs[child_id]
+                if state == COMPLETED:
+                    waiting.discard(job.job_id)
+                    if not waiting:
+                        del self._waiting[child_id]
+                        if not child.held:
+                            to_start.append(child)
+                else:
+                    self._detach(child_id)
+                    to_cancel.append(child)
+        for child in to_start:
+            self._start_tasks(child)
+        for child in to_cancel:
+            self._cancel_dependent(child)  # cascades via _maybe_done
 
     def _log_path(self, job: SlurmJob, task_id: int) -> str:
         if job.array_n > 1:
@@ -273,6 +373,7 @@ class LocalSlurmCluster(SlurmCluster):
     def _maybe_done(self, job: SlurmJob) -> None:
         if all(t.state in TERMINAL for t in job.tasks):
             self._done_events[job.job_id].set()
+            self._resolve_dependents(job)
 
     # -- queries -----------------------------------------------------------
     def sacct(self, job_id: int) -> str:
@@ -335,6 +436,7 @@ class LocalSlurmCluster(SlurmCluster):
             if all(t.state in TERMINAL for t in job.tasks):
                 return job.aggregate_state()
             job.cancelled = True
+            self._detach(job_id)  # a directly-cancelled held job stops waiting
             for t in job.tasks:
                 if t.state == PENDING:
                     t.state = CANCELLED
@@ -345,6 +447,64 @@ class LocalSlurmCluster(SlurmCluster):
             p.kill()
         self._maybe_done(job)
         return job.aggregate_state()
+
+    def scontrol_update_dependency(
+        self, job_id: int, add: list[int] | None = None,
+        remove: list[int] | None = None, hold: bool = False,
+    ) -> bool:
+        if self.faults is not None:
+            self.faults.on_slurm("scontrol")
+        failed_parent = False
+        with self._lock:
+            job = self._jobs.get(job_id)
+            if job is None or job.started or job.cancelled:
+                return False
+            waiting = self._waiting.pop(job_id, set())
+            for r in remove or []:
+                waiting.discard(r)
+                if r in self._dependents:
+                    while job_id in self._dependents[r]:
+                        self._dependents[r].remove(job_id)
+                if r in job.dependency:
+                    job.dependency.remove(r)
+            for a in add or []:
+                parent = self._jobs.get(a)
+                if parent is None:
+                    raise KeyError(f"unknown dependency job {a}")
+                job.dependency.append(a)
+                if self._done_events[a].is_set():
+                    if parent.aggregate_state() != COMPLETED:
+                        failed_parent = True
+                    continue
+                waiting.add(a)
+                self._dependents.setdefault(a, []).append(job_id)
+            if hold:
+                job.held = True
+            if failed_parent:
+                self._detach(job_id)
+            elif waiting:
+                self._waiting[job_id] = waiting
+            release_now = not failed_parent and not waiting and not job.held
+        if failed_parent:
+            self._cancel_dependent(job)
+        elif release_now:
+            self._start_tasks(job)
+        return True
+
+    def scontrol_release(self, job_id: int) -> None:
+        if self.faults is not None:
+            self.faults.on_slurm("scontrol")
+        with self._lock:
+            job = self._jobs.get(job_id)
+            if job is None:
+                return
+            job.held = False
+            start = (
+                not job.started and not job.cancelled
+                and job_id not in self._waiting
+            )
+        if start:
+            self._start_tasks(job)
 
     def wait(self, job_ids: list[int] | None = None, timeout: float = 300.0) -> None:
         ids = job_ids if job_ids is not None else list(self._jobs)
@@ -366,12 +526,19 @@ class SubprocessSlurmCluster(SlurmCluster):
     """
 
     def sbatch(self, script: str, workdir: str, args: str = "", array_n: int = 1,
-               time_limit_s: float | None = None, env: dict | None = None) -> int:
+               time_limit_s: float | None = None, env: dict | None = None,
+               dependency: list[int] | None = None) -> int:
         cmd = ["sbatch", "--parsable"]
         if array_n > 1:
             cmd.append(f"--array=0-{array_n - 1}")
         if time_limit_s:
             cmd.append(f"--time={max(1, int(time_limit_s // 60))}")
+        if dependency:
+            # kill-on-invalid-dep so a failed parent drains the cone instead
+            # of leaving DependencyNeverSatisfied jobs pinning the queue —
+            # matching LocalSlurmCluster's cancel-on-parent-failure model
+            cmd.append("--dependency=afterok:" + ":".join(str(d) for d in dependency))
+            cmd.append("--kill-on-invalid-dep=yes")
         cmd += [script] + ([a for a in args.split() if a] if args else [])
         # spec env goes through the submission environment (sbatch defaults
         # to --export=ALL), not the --export flag — values with commas or
@@ -423,6 +590,24 @@ class SubprocessSlurmCluster(SlurmCluster):
         # real scancel is already idempotent on terminal jobs (exit 0)
         subprocess.run(["scancel", str(job_id)], check=True)
         return None
+
+    def scontrol_update_dependency(
+        self, job_id: int, add: list[int] | None = None,
+        remove: list[int] | None = None, hold: bool = False,
+    ) -> bool:
+        # real scontrol replaces the whole dependency expression; the add
+        # list is the replacement set (the caller rewires edge-by-edge, so
+        # remove-only calls clear the expression)
+        dep = "afterok:" + ":".join(str(a) for a in add) if add else ""
+        rc = subprocess.run(
+            ["scontrol", "update", f"JobId={job_id}", f"Dependency={dep}"],
+        ).returncode
+        if rc == 0 and hold:
+            subprocess.run(["scontrol", "hold", str(job_id)], check=True)
+        return rc == 0
+
+    def scontrol_release(self, job_id: int) -> None:
+        subprocess.run(["scontrol", "release", str(job_id)], check=True)
 
     def wait(self, job_ids: list[int] | None = None, timeout: float = 300.0) -> None:
         deadline = time.time() + timeout

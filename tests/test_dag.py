@@ -1,0 +1,368 @@
+"""Pipeline DAG engine (DESIGN §14): edge inference, topological batching
+with afterok dependencies, failure cascades, cache-aware partial replay,
+and straggler rewiring under dependents."""
+import os
+import time
+
+import pytest
+
+import repro
+from repro.core import Pipeline, PipelineError
+from repro.core.dag import _overlaps
+from repro.core.slurm import (
+    CANCELLED,
+    COMPLETED,
+    FAILED,
+    PENDING,
+    LocalSlurmCluster,
+)
+from repro.core.spec import RunSpec
+
+
+def write(root, rel, data):
+    p = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    with open(p, "w") as f:
+        f.write(data)
+
+
+def script(root, rel, body):
+    write(root, rel, "#!/bin/bash\n" + body + "\n")
+
+
+def make_session(tmp_path, **kw):
+    root = str(tmp_path / "proj")
+    os.makedirs(root, exist_ok=True)
+    s = repro.open(root, create=True, **kw)
+    return root, s
+
+
+def three_stage(root):
+    """preprocess -> train -> evaluate, scripts declared as inputs so
+    editing a script invalidates its stage's cache entry."""
+    script(root, "pre.sh", "mkdir -p data; printf 'clean%.0s' {1..60} > data/clean.txt")
+    script(root, "train.sh", "mkdir -p model; cat data/clean.txt > model/weights.bin")
+    script(root, "eval.sh", "mkdir -p report; wc -c < model/weights.bin > report/score.txt")
+    return {
+        "preprocess": RunSpec(
+            script="pre.sh", inputs=["pre.sh"], outputs=["data/clean.txt"]
+        ),
+        "train": RunSpec(
+            script="train.sh",
+            inputs=["train.sh", "data/clean.txt"],
+            outputs=["model/weights.bin"],
+        ),
+        "evaluate": RunSpec(
+            script="eval.sh",
+            inputs=["eval.sh", "model/weights.bin"],
+            outputs=["report/score.txt"],
+        ),
+    }
+
+
+# ------------------------------------------------------------ DAG structure
+def test_edge_inference_and_levels():
+    a = RunSpec(script="a.sh", outputs=["data/raw.txt"])
+    b = RunSpec(script="b.sh", inputs=["data/raw.txt"], outputs=["data/b.txt"])
+    c = RunSpec(script="c.sh", inputs=["data/raw.txt"], outputs=["data/c.txt"])
+    d = RunSpec(
+        script="d.sh", inputs=["data/b.txt", "data/c.txt"], outputs=["out.txt"]
+    )
+    p = Pipeline({"a": a, "b": b, "c": c, "d": d})
+    assert p.roots() == ["a"]
+    assert p.levels() == [["a"], ["b", "c"], ["d"]]
+    assert ("a", "b") in p.edges() and ("c", "d") in p.edges()
+    assert set(p.downstream_cone("a")) == {"a", "b", "c", "d"}
+    assert set(p.downstream_cone("b")) == {"b", "d"}
+    assert "data/raw.txt" in p.upstream_outputs("d")
+    assert len(p) == 4
+
+
+def test_wildcard_input_matches_upstream_output():
+    a = RunSpec(script="a.sh", outputs=["logs/run1.json"])
+    b = RunSpec(script="b.sh", inputs=["logs/*.json"], outputs=["sum.txt"])
+    p = Pipeline({"a": a, "b": b})
+    assert p.edges() == [("a", "b")]
+    # directory-producing parent: wildcard under the produced directory
+    c = RunSpec(script="c.sh", outputs=["results"])
+    d = RunSpec(script="d.sh", inputs=["results/**/*.csv"], outputs=["agg.txt"])
+    assert Pipeline({"c": c, "d": d}).edges() == [("c", "d")]
+
+
+def test_literal_input_under_output_directory():
+    a = RunSpec(script="a.sh", outputs=["data"])
+    b = RunSpec(script="b.sh", inputs=["data/part/x.txt"], outputs=["y.txt"])
+    assert Pipeline({"a": a, "b": b}).edges() == [("a", "b")]
+
+
+def test_overlap_helper():
+    assert _overlaps("data/x.txt", "data/x.txt")
+    assert _overlaps("data/x.txt", "data")  # literal under output dir
+    assert _overlaps("data", "data/x.txt")  # output nested under input dir
+    assert _overlaps("data/*.txt", "data/x.txt")  # wildcard match
+    assert _overlaps("data/**/a.csv", "data")  # static dir under output
+    assert not _overlaps("data/*.txt", "other/x.txt")
+    assert not _overlaps("database", "data")  # no false prefix overlap
+
+
+def test_cycle_is_rejected():
+    a = RunSpec(script="a.sh", inputs=["b.txt"], outputs=["a.txt"])
+    b = RunSpec(script="b.sh", inputs=["a.txt"], outputs=["b.txt"])
+    with pytest.raises(PipelineError, match="cycle"):
+        Pipeline({"a": a, "b": b})
+
+
+def test_ambiguous_producer_is_rejected():
+    a = RunSpec(script="a.sh", outputs=["out.txt"])
+    b = RunSpec(script="b.sh", outputs=["out.txt"])
+    with pytest.raises(PipelineError):
+        Pipeline({"a": a, "b": b})
+
+
+def test_self_consumption_is_rejected():
+    a = RunSpec(script="a.sh", inputs=["x.txt"], outputs=["x.txt"])
+    with pytest.raises(PipelineError, match="own output"):
+        Pipeline({"a": a})
+
+
+def test_stage_validation():
+    with pytest.raises(PipelineError, match="no stages"):
+        Pipeline({})
+    with pytest.raises(PipelineError, match="script specs"):
+        Pipeline({"a": RunSpec(cmd="true")})
+    with pytest.raises(PipelineError, match="duplicate"):
+        Pipeline([
+            ("a", RunSpec(script="a.sh", outputs=["x"])),
+            ("a", RunSpec(script="b.sh", outputs=["y"])),
+        ])
+
+
+def test_resource_overrides():
+    a = RunSpec(script="a.sh", outputs=["x.txt"])
+    b = RunSpec(script="b.sh", inputs=["x.txt"], outputs=["y.txt"])
+    p = Pipeline(
+        {"a": a, "b": b},
+        resources={"b": {"time_limit_s": 120, "array_n": 4}},
+    )
+    assert p.stages["b"].time_limit_s == 120.0
+    assert p.stages["b"].array_n == 4
+    assert p.stages["a"].time_limit_s is None
+    with pytest.raises(PipelineError, match="unknown stage"):
+        Pipeline({"a": a}, resources={"zz": {"array_n": 2}})
+    with pytest.raises(PipelineError, match="non-resource"):
+        Pipeline({"a": a}, resources={"a": {"script": "evil.sh"}})
+
+
+def test_pipeline_id_stable_and_shape_sensitive():
+    a = RunSpec(script="a.sh", outputs=["x.txt"])
+    b = RunSpec(script="b.sh", inputs=["x.txt"], outputs=["y.txt"])
+    assert Pipeline({"a": a, "b": b}).pipeline_id == Pipeline(
+        {"a": a, "b": b}
+    ).pipeline_id
+    assert Pipeline({"a": a, "b": b}).pipeline_id != Pipeline(
+        {"a": a}
+    ).pipeline_id
+
+
+def test_missing_inputs_respects_provided(tmp_path):
+    spec = RunSpec(
+        script="t.sh", inputs=["data/clean.txt", "cfg.json"], outputs=["m.bin"]
+    )
+    root = str(tmp_path)
+    write(root, "cfg.json", "{}")
+    assert spec.missing_inputs(root) == ["data/clean.txt"]
+    assert spec.missing_inputs(root, provided={"data/clean.txt"}) == []
+    # nested-under-provided-directory counts as provided too
+    spec2 = RunSpec(script="t.sh", inputs=["data/part/x.txt"], outputs=["m"])
+    assert spec2.missing_inputs(root, provided={"data"}) == []
+    assert spec2.expand_inputs(root, provided={"data"}) == []
+    with pytest.raises(FileNotFoundError):
+        spec2.expand_inputs(root)
+
+
+# --------------------------------------------------- afterok on the cluster
+def test_afterok_holds_then_releases(tmp_path):
+    cluster = LocalSlurmCluster(max_workers=2)
+    wd = str(tmp_path)
+    script(wd, "a.sh", "sleep 0.2; date +%s.%N > a.done")
+    script(wd, "b.sh", "date +%s.%N > b.done")
+    pa = cluster.sbatch("a.sh", workdir=wd)
+    pb = cluster.sbatch("b.sh", workdir=wd, dependency=[pa])
+    assert cluster.sacct(pb) == PENDING  # held, not running
+    cluster.wait([pa, pb], timeout=30)
+    assert cluster.sacct(pa) == COMPLETED and cluster.sacct(pb) == COMPLETED
+    ta = float(open(os.path.join(wd, "a.done")).read())
+    tb = float(open(os.path.join(wd, "b.done")).read())
+    assert tb >= ta  # dependent started only after the parent finished
+    cluster.shutdown()
+
+
+def test_afterok_failed_parent_cascades(tmp_path):
+    cluster = LocalSlurmCluster(max_workers=2)
+    wd = str(tmp_path)
+    script(wd, "boom.sh", "exit 3")
+    script(wd, "child.sh", "touch child.ran")
+    p = cluster.sbatch("boom.sh", workdir=wd)
+    c = cluster.sbatch("child.sh", workdir=wd, dependency=[p])
+    g = cluster.sbatch("child.sh", workdir=wd, dependency=[c])
+    cluster.wait([p, c, g], timeout=30)
+    assert cluster.sacct(p) == FAILED
+    assert cluster.sacct(c) == CANCELLED
+    assert cluster.sacct(g) == CANCELLED  # cascades through grandchildren
+    assert not os.path.exists(os.path.join(wd, "child.ran"))
+    cluster.shutdown()
+
+
+# ------------------------------------------------------------- end to end
+def test_three_level_campaign_three_batches(tmp_path):
+    root, s = make_session(tmp_path)
+    stages = three_stage(root)
+    p = Pipeline(stages)
+    assert p.levels() == [["preprocess"], ["train"], ["evaluate"]]
+    batches = []
+    real = s.scheduler.submit_many
+
+    def counting(specs, **kw):
+        batches.append(list(kw.get("stages") or []))
+        return real(specs, **kw)
+
+    s.scheduler.submit_many = counting
+    out = s.run_pipeline(p)
+    rows = [s.scheduler.db.get(j) for j in out["jobs"].values()]
+    assert all(r["status"] == "finished" for r in rows)
+    # one topologically-batched submit_many per level, no more
+    assert batches == [["preprocess"], ["train"], ["evaluate"]]
+    assert open(os.path.join(root, "report/score.txt")).read().strip() == "300"
+    # pipeline rows are tagged and edges recorded
+    assert {r["stage"] for r in rows} == set(stages)
+    pid = rows[0]["pipeline"]
+    assert pid and all(r["pipeline"] == pid for r in rows)
+    deps = s.scheduler.db.parents_of(out["jobs"]["evaluate"])
+    assert [d["stage"] for d in deps] == ["train"]
+    s.cluster.shutdown()
+
+
+def test_warm_replay_fully_memoized(tmp_path):
+    root, s = make_session(tmp_path)
+    p = Pipeline(three_stage(root))
+    s.run_pipeline(p)
+    before = len(s.cluster._jobs)
+    out = s.run_pipeline(p)
+    rows = [s.scheduler.db.get(j) for j in out["jobs"].values()]
+    assert all(r["status"] == "memoized" for r in rows)
+    assert len(s.cluster._jobs) == before  # nothing reached Slurm
+    s.cluster.shutdown()
+
+
+def test_partial_replay_reruns_only_failed_cone(tmp_path):
+    root, s = make_session(tmp_path)
+    stages = three_stage(root)
+    p = Pipeline(stages)
+    s.run_pipeline(p)
+    # invalidate the middle stage: train.sh content is keyed because the
+    # script is declared as an input
+    script(root, "train.sh",
+           "mkdir -p model; cat data/clean.txt data/clean.txt > model/weights.bin")
+    before = len(s.cluster._jobs)
+    out = s.run_pipeline(Pipeline(stages))
+    rows = {n: s.scheduler.db.get(j) for n, j in out["jobs"].items()}
+    assert rows["preprocess"]["status"] == "memoized"
+    assert rows["train"]["status"] == "finished"
+    assert rows["evaluate"]["status"] == "finished"
+    assert len(s.cluster._jobs) == before + 2  # only the train cone ran
+    assert open(os.path.join(root, "report/score.txt")).read().strip() == "600"
+    s.cluster.shutdown()
+
+
+def test_failed_parent_closes_dependents_and_replay_recovers(tmp_path):
+    root, s = make_session(tmp_path)
+    stages = three_stage(root)
+    script(root, "train.sh", "exit 7")  # mid-campaign failure
+    out = s.run_pipeline(Pipeline(stages), close_failed_jobs=True)
+    rows = {n: s.scheduler.db.get(j) for n, j in out["jobs"].items()}
+    assert rows["preprocess"]["status"] == "finished"
+    assert rows["train"]["status"] == "closed-failed"
+    assert rows["evaluate"]["status"] == "cancelled-dependency"
+    assert s.cluster.sacct(rows["evaluate"]["slurm_id"]) == CANCELLED
+    # closing the cascade released every protected output
+    assert s.scheduler.db.n_protected() == 0
+    # fix the stage and replay: only the failed cone re-executes
+    script(root, "train.sh", "mkdir -p model; cat data/clean.txt > model/weights.bin")
+    before = len(s.cluster._jobs)
+    out2 = s.run_pipeline(Pipeline(stages))
+    rows2 = {n: s.scheduler.db.get(j) for n, j in out2["jobs"].items()}
+    assert rows2["preprocess"]["status"] == "memoized"
+    assert rows2["train"]["status"] == "finished"
+    assert rows2["evaluate"]["status"] == "finished"
+    assert len(s.cluster._jobs) == before + 2
+    assert s.verify()["divergence"] == 0
+    s.cluster.shutdown()
+
+
+def test_diamond_pipeline_runs_in_level_order(tmp_path):
+    root, s = make_session(tmp_path)
+    script(root, "a.sh", "printf 'r%.0s' {1..80} > raw.txt")
+    script(root, "b.sh", "tr r b < raw.txt > b.txt")
+    script(root, "c.sh", "tr r c < raw.txt > c.txt")
+    script(root, "d.sh", "cat b.txt c.txt > d.txt")
+    p = Pipeline({
+        "a": RunSpec(script="a.sh", outputs=["raw.txt"]),
+        "b": RunSpec(script="b.sh", inputs=["raw.txt"], outputs=["b.txt"]),
+        "c": RunSpec(script="c.sh", inputs=["raw.txt"], outputs=["c.txt"]),
+        "d": RunSpec(
+            script="d.sh", inputs=["b.txt", "c.txt"], outputs=["d.txt"]
+        ),
+    })
+    out = s.run_pipeline(p)
+    assert all(
+        s.scheduler.db.get(j)["status"] == "finished"
+        for j in out["jobs"].values()
+    )
+    assert len(open(os.path.join(root, "d.txt")).read()) == 160
+    d_parents = {
+        r["stage"] for r in s.scheduler.db.parents_of(out["jobs"]["d"])
+    }
+    assert d_parents == {"b", "c"}
+    s.cluster.shutdown()
+
+
+# ----------------------------------------------- straggler with dependents
+def test_reschedule_straggler_rewires_dependents(tmp_path):
+    root, s = make_session(tmp_path)
+    # the parent blocks until a sentinel file appears, so both the original
+    # and its replacement are controllable from the test
+    script(root, "slow.sh", "while [ ! -f go ]; do sleep 0.05; done; "
+           "printf 'p%.0s' {1..70} > parent.txt")
+    script(root, "child.sh", "cat parent.txt parent.txt > child.txt")
+    p = Pipeline({
+        "slow": RunSpec(script="slow.sh", outputs=["parent.txt"]),
+        "child": RunSpec(
+            script="child.sh", inputs=["parent.txt"], outputs=["child.txt"]
+        ),
+    })
+    jobs = s.scheduler.submit_pipeline(p)
+    child_row = s.scheduler.db.get(jobs["child"])
+    old_slurm = s.scheduler.db.get(jobs["slow"])["slurm_id"]
+    new_id = s.scheduler.reschedule_straggler(jobs["slow"])
+    assert new_id is not None
+    new_row = s.scheduler.db.get(new_id)
+    # original closed, replacement open, child rewired onto the replacement
+    assert s.scheduler.db.get(jobs["slow"])["status"] == "cancelled-straggler"
+    assert s.cluster.sacct(old_slurm) == CANCELLED
+    assert s.cluster.sacct(child_row["slurm_id"]) == PENDING  # NOT cascaded
+    parents = s.scheduler.db.parents_of(jobs["child"])
+    assert [r["job_id"] for r in parents] == [new_id]
+    # release the sentinel: replacement completes, child runs after it
+    write(root, "go", "")
+    s.wait([new_id, jobs["child"]], timeout=30)
+    assert s.cluster.sacct(new_row["slurm_id"]) == COMPLETED
+    assert s.cluster.sacct(child_row["slurm_id"]) == COMPLETED
+    results = s.scheduler.finish()
+    assert os.path.getsize(os.path.join(root, "child.txt")) == 140
+    statuses = {
+        r["job_id"]: r["status"] for r in s.scheduler.db.all_jobs()
+    }
+    assert statuses[new_id] == "finished"
+    assert statuses[jobs["child"]] == "finished"
+    assert s.verify()["divergence"] == 0
+    s.cluster.shutdown()

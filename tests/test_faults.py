@@ -770,3 +770,78 @@ def test_resumed_push_resends_only_missing_chunks(tmp_path):
     resumed_bytes = store.bytes_sent - b0
     assert 0 < resumed_bytes < cold_bytes
     assert_remote_converged(s2)
+
+
+# --------------------------------------------- §14 pipeline DAG crash matrix
+# dag:* bracket the level-by-level pipeline submission: a journal is written
+# before anything reaches the DB, each level crosses submit -> deps-recorded
+# -> journaled, and before-done retires the journal. Recovery resubmits
+# exactly the levels the crash prevented.
+DAG_POINTS = [
+    ("dag:journal-written", 2),   # nothing landed: both levels resubmit
+    ("dag:level-submitted", 1),   # level 0 landed, level 1 resubmits
+    ("dag:deps-recorded", 1),
+    ("dag:level-journaled", 1),
+    ("dag:before-done", 0),       # everything landed: pure journal retire
+]
+
+
+def dag_pipeline(root):
+    from repro.core import Pipeline
+
+    write(root, "a.sh", "#!/bin/bash\nprintf 'a%.0s' {1..200} > a.out\n")
+    write(root, "b.sh", "#!/bin/bash\ncat a.out a.out > b.out\n")
+    return Pipeline({
+        "a": repro.RunSpec(script="a.sh", outputs=["a.out"]),
+        "b": repro.RunSpec(
+            script="b.sh", inputs=["a.out"], outputs=["b.out"]
+        ),
+    })
+
+
+@pytest.mark.parametrize("point,resubmit", DAG_POINTS)
+def test_dag_crash_matrix(tmp_path, point, resubmit):
+    """Kill the client at every dag:* boundary of a 2-level pipeline
+    submission: recovery resumes the campaign from the journal, resubmits
+    only the missing levels, and the finished campaign is byte-identical
+    to an uncrashed one (zero divergence, every stage finished once)."""
+    plan = FaultPlan(seed=7, crash_at={point: 1})
+    root, s, _ = setup_session(tmp_path, plan, n_jobs=0)
+    pipeline = dag_pipeline(root)
+    cluster = s.cluster
+    with pytest.raises(CrashInjected):
+        s.scheduler.submit_pipeline(pipeline)
+    s2 = reboot(root, cluster)
+    rep = s2.recover()
+    assert rep["dag_pipelines_resumed"] == 1
+    assert rep["dag_levels_resubmitted"] == resubmit
+    rows = {
+        r["stage"]: r for r in s2.scheduler.db.all_jobs() if r["stage"]
+    }
+    assert set(rows) == {"a", "b"}
+    open_ids = [
+        r["job_id"] for r in rows.values() if r["status"] == "scheduled"
+    ]
+    s2.wait(open_ids)
+    s2.finish()
+    assert_consistent(s2, [r["job_id"] for r in rows.values()])
+    # the afterok edge survived (or was re-recorded) across the crash
+    parents = s2.scheduler.db.parents_of(rows["b"]["job_id"])
+    assert [p["job_id"] for p in parents] == [rows["a"]["job_id"]]
+    # recovery is idempotent: the journal is retired
+    rep2 = s2.recover()
+    assert rep2["journals_replayed"] == 0
+    assert rep2["dag_pipelines_resumed"] == 0
+    cluster.shutdown()
+
+
+def test_dag_crash_points_recorded(tmp_path):
+    """A clean pipeline campaign passes every DAG_POINTS boundary — guards
+    against the matrix list and the submission path drifting apart."""
+    plan = FaultPlan(seed=0, record_points=True)
+    root, s, _ = setup_session(tmp_path, plan, n_jobs=0)
+    s.run_pipeline(dag_pipeline(root))
+    s.close()
+    log = set(plan.crash_point_log)
+    for point, _ in DAG_POINTS:
+        assert point in log, f"{point} never passed in a clean campaign"

@@ -417,9 +417,12 @@ def test_jobdb_v3_to_v4_migration(tmp_path):
     db_path = os.path.join(repro_dir, "jobdb.sqlite")
     JobDB(repro_dir)  # lands at the current version
     conn = sqlite3.connect(db_path)
-    assert conn.execute("PRAGMA user_version").fetchone()[0] == 4
-    # rebuild a v3-shaped db: runcache present, no annex_locations
+    assert conn.execute("PRAGMA user_version").fetchone()[0] == 5
+    # rebuild a v3-shaped db: runcache present, no annex_locations and no
+    # pipeline tier tables
     conn.execute("DROP TABLE annex_locations")
+    conn.execute("DROP TABLE job_deps")
+    conn.execute("DROP TABLE job_pipeline")
     conn.execute("PRAGMA user_version = 0")  # force shape detection
     conn.commit()
     conn.close()
@@ -429,7 +432,7 @@ def test_jobdb_v3_to_v4_migration(tmp_path):
     db.locations_forget("siteA")
     assert db.locations_all() == []
     conn = sqlite3.connect(db_path)
-    assert conn.execute("PRAGMA user_version").fetchone()[0] == 4
+    assert conn.execute("PRAGMA user_version").fetchone()[0] == 5
     conn.close()
 
 

@@ -186,7 +186,7 @@ def test_migration_upgrades_a_v1_db_exactly_once(tmp_path):
 
     db = JobDB(repro_dir)
     conn = sqlite3.connect(db_path)  # noqa: the db file is shared
-    assert conn.execute("PRAGMA user_version").fetchone()[0] == 4
+    assert conn.execute("PRAGMA user_version").fetchone()[0] == 5
     cols = {r[1] for r in conn.execute("PRAGMA table_info(jobs)")}
     assert {"spec", "exec_key"} <= cols
     tables = {
@@ -203,7 +203,7 @@ def test_migration_upgrades_a_v1_db_exactly_once(tmp_path):
     # idempotent: reopening applies nothing further
     db2 = JobDB(repro_dir)
     conn = sqlite3.connect(db_path)
-    assert conn.execute("PRAGMA user_version").fetchone()[0] == 4
+    assert conn.execute("PRAGMA user_version").fetchone()[0] == 5
     conn.close()
 
 
@@ -212,7 +212,7 @@ def test_fresh_db_lands_at_current_version(tmp_path):
     os.makedirs(repro_dir)
     JobDB(repro_dir)
     conn = sqlite3.connect(os.path.join(repro_dir, "jobdb.sqlite"))
-    assert conn.execute("PRAGMA user_version").fetchone()[0] == 4
+    assert conn.execute("PRAGMA user_version").fetchone()[0] == 5
     conn.close()
 
 
