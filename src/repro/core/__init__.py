@@ -13,7 +13,7 @@ from .conflicts import (
     normalize,
     proper_prefixes,
 )
-from .dag import Pipeline, PipelineError
+from .dag import Pipeline, PipelineError, PipelineWarning
 from .faults import (
     CrashInjected,
     FaultPlan,
@@ -45,7 +45,7 @@ from .spec import RunSpec, SpecError
 
 __all__ = [
     "AnnexStore", "make_pointer", "parse_pointer",
-    "Pipeline", "PipelineError",
+    "Pipeline", "PipelineError", "PipelineWarning",
     "OutputConflict", "ProtectedOutputs", "WildcardOutputError",
     "normalize", "proper_prefixes",
     "CrashInjected", "FaultPlan", "FaultRule",

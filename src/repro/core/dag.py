@@ -33,12 +33,13 @@ from __future__ import annotations
 import fnmatch
 import hashlib
 import json
+import warnings
 from typing import Iterable, Mapping
 
 from .conflicts import ProtectedOutputs, OutputConflict, has_wildcard, normalize
 from .spec import RunSpec, SpecError
 
-__all__ = ["Pipeline", "PipelineError"]
+__all__ = ["Pipeline", "PipelineError", "PipelineWarning"]
 
 # RunSpec fields a per-stage resource override may touch.  The data
 # contract (inputs/outputs/script) is identity — overriding it would
@@ -48,6 +49,11 @@ _OVERRIDABLE = frozenset({"time_limit_s", "array_n", "env", "alt_dir", "message"
 
 class PipelineError(SpecError):
     """Invalid pipeline: bad shape, ambiguous producers, or cycles."""
+
+
+class PipelineWarning(UserWarning):
+    """Suspicious but not fatal pipeline shape (e.g. a root-level wildcard
+    input that no declared stage output anchors)."""
 
 
 def _static_dir(pattern: str) -> str:
@@ -160,6 +166,7 @@ class Pipeline:
     def _infer_edges(self) -> None:
         for name, spec in self.stages.items():
             for inp in spec.inputs:
+                matched = False
                 for out, producer in self.produced_by.items():
                     if not _overlaps(inp, out):
                         continue
@@ -167,8 +174,31 @@ class Pipeline:
                         raise PipelineError(
                             f"stage {name!r} consumes its own output {out!r}"
                         )
+                    matched = True
                     self.parents[name].add(producer)
                     self.children[producer].add(name)
+                # a root-level wildcard (`*.npy`) has no static directory to
+                # anchor against a producer's *directory* output (`prep`),
+                # so edge inference cannot see through it: since wildcard
+                # inputs are never reported missing either, the stage would
+                # silently submit with no afterok edge and could run before
+                # its intended producer. We cannot soundly infer the edge
+                # (any output *might* be a directory — chaining on that
+                # guess would fabricate cycles), so surface the hazard.
+                if (
+                    not matched and has_wildcard(inp) and not _static_dir(inp)
+                    and any(p != name for p in self.produced_by.values())
+                ):
+                    warnings.warn(
+                        f"stage {name!r}: root-level wildcard input {inp!r} "
+                        "matches no declared stage output, so no dependency "
+                        "edge was inferred; if it names files another stage "
+                        "writes inside an output directory, anchor it under "
+                        f"that directory (e.g. '<dir>/{inp}') or the stage "
+                        "may run before its producer",
+                        PipelineWarning,
+                        stacklevel=3,
+                    )
 
     def _toposort(self) -> list[list[str]]:
         """Kahn level batching; leftover nodes mean a cycle."""

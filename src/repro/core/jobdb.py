@@ -409,14 +409,24 @@ class JobDB:
         ).fetchall()
         return [_to_dict(r) for r in rows]
 
-    def replace_dep_parent(self, old_parent: int, new_parent: int) -> None:
-        """Rewire every edge on ``old_parent`` to ``new_parent`` (straggler
-        replacement: dependents chain off the substitute job)."""
+    def replace_dep_parent(
+        self, old_parent: int, new_parent: int,
+        children: list[int] | None = None,
+    ) -> None:
+        """Rewire edges on ``old_parent`` to ``new_parent`` (straggler
+        replacement: dependents chain off the substitute job). With
+        ``children``, only those child rows move — callers pass exactly the
+        dependents the cluster actually detached, so jobdb edges never point
+        at the replacement while the cluster still chains to the original."""
+        if children is not None and not children:
+            return
+        sql = "UPDATE OR REPLACE job_deps SET parent_job=? WHERE parent_job=?"
+        params: tuple = (new_parent, old_parent)
+        if children is not None:
+            sql += f" AND child_job IN ({','.join('?' * len(children))})"
+            params += tuple(children)
         with self._conn() as c:
-            c.execute(
-                "UPDATE OR REPLACE job_deps SET parent_job=? WHERE parent_job=?",
-                (new_parent, old_parent),
-            )
+            c.execute(sql, params)
 
     def pipeline_rows(self, pipeline: str) -> dict[str, dict]:
         """Latest job row per stage for one pipeline submission (keyed by

@@ -1324,6 +1324,12 @@ class SlurmScheduler:
             # a memoized replacement needs no edge: its outputs are already
             # materialized, so the afterok contract is satisfied
             self.cluster.scontrol_release(d["slurm_id"])
-        if dependents:
-            self.db.replace_dep_parent(job_id, new_id)
+        # move only the edges of dependents the cluster actually detached:
+        # a dependent scontrol_update_dependency could not rewire (already
+        # started/terminal) is still chained to the old job on the cluster,
+        # and its jobdb edge must keep saying so for failure handling
+        if detached:
+            self.db.replace_dep_parent(
+                job_id, new_id, children=[d["job_id"] for d in detached]
+            )
         return new_id

@@ -194,6 +194,12 @@ class LocalSlurmCluster(SlurmCluster):
             raise FileNotFoundError(f"job script not found: {script} (cwd {workdir})")
         failed_parent = False
         with self._lock:
+            # validate the whole dependency list BEFORE registering the job:
+            # raising mid-registration would leave a phantom never-terminal
+            # PENDING row plus stale _dependents entries for earlier parents
+            for p in dependency or []:
+                if p not in self._jobs:
+                    raise KeyError(f"unknown dependency job {p}")
             job_id = self._next_id
             self._next_id += 1
             job = SlurmJob(
@@ -206,9 +212,7 @@ class LocalSlurmCluster(SlurmCluster):
             self._done_events[job_id] = threading.Event()
             waiting: set[int] = set()
             for p in job.dependency:
-                parent = self._jobs.get(p)
-                if parent is None:
-                    raise KeyError(f"unknown dependency job {p}")
+                parent = self._jobs[p]
                 # done-event set means the parent's dependent resolution
                 # already ran (or is running): resolve this edge inline —
                 # a late registration would never be visited again
@@ -459,6 +463,11 @@ class LocalSlurmCluster(SlurmCluster):
             job = self._jobs.get(job_id)
             if job is None or job.started or job.cancelled:
                 return False
+            # validate before mutating: a KeyError mid-rewire would leave
+            # the job half-detached and dropped from _waiting for good
+            for a in add or []:
+                if a not in self._jobs:
+                    raise KeyError(f"unknown dependency job {a}")
             waiting = self._waiting.pop(job_id, set())
             for r in remove or []:
                 waiting.discard(r)
@@ -468,9 +477,7 @@ class LocalSlurmCluster(SlurmCluster):
                 if r in job.dependency:
                     job.dependency.remove(r)
             for a in add or []:
-                parent = self._jobs.get(a)
-                if parent is None:
-                    raise KeyError(f"unknown dependency job {a}")
+                parent = self._jobs[a]
                 job.dependency.append(a)
                 if self._done_events[a].is_set():
                     if parent.aggregate_state() != COMPLETED:
@@ -595,16 +602,60 @@ class SubprocessSlurmCluster(SlurmCluster):
         self, job_id: int, add: list[int] | None = None,
         remove: list[int] | None = None, hold: bool = False,
     ) -> bool:
-        # real scontrol replaces the whole dependency expression; the add
-        # list is the replacement set (the caller rewires edge-by-edge, so
-        # remove-only calls clear the expression)
-        dep = "afterok:" + ":".join(str(a) for a in add) if add else ""
-        rc = subprocess.run(
-            ["scontrol", "update", f"JobId={job_id}", f"Dependency={dep}"],
-        ).returncode
-        if rc == 0 and hold:
-            subprocess.run(["scontrol", "hold", str(job_id)], check=True)
-        return rc == 0
+        # hold FIRST: 'scontrol update Dependency=' replaces the whole
+        # expression, and a job left momentarily dependency-free before a
+        # later hold would be eligible to start — defeating the
+        # detach-and-hold invariant reschedule_straggler relies on
+        if hold:
+            if subprocess.run(["scontrol", "hold", str(job_id)]).returncode != 0:
+                return False
+        ok = self._rewrite_dependency(job_id, add or [], remove or [])
+        if not ok and hold:
+            # don't leave a stray user hold on a job we failed to rewire
+            subprocess.run(["scontrol", "release", str(job_id)])
+        return ok
+
+    def _rewrite_dependency(
+        self, job_id: int, add: list[int], remove: list[int]
+    ) -> bool:
+        # real scontrol REPLACES the Dependency expression: read the
+        # current one and write back current - remove + add so a
+        # remove-only call keeps the job's other afterok parents (and any
+        # non-afterok clauses) instead of clearing them
+        out = subprocess.run(
+            ["scontrol", "show", "job", str(job_id)],
+            capture_output=True, text=True,
+        )
+        if out.returncode != 0:
+            return False
+        state, expr = "", ""
+        for tok in out.stdout.split():
+            if tok.startswith("JobState="):
+                state = tok.split("=", 1)[1]
+            elif tok.startswith("Dependency="):
+                expr = tok.split("=", 1)[1]
+        if state != PENDING:
+            return False  # started/finished jobs cannot be rewired
+        afterok: list[int] = []
+        others: list[str] = []
+        if expr not in ("", "(null)"):
+            for clause in expr.split(","):
+                kind, _, rest = clause.partition(":")
+                if kind == "afterok":
+                    # newer Slurm annotates ids, e.g. afterok:123(unfulfilled)
+                    ids = [p.partition("(")[0] for p in rest.split(":")]
+                    afterok += [int(p) for p in ids if p.isdigit()]
+                else:
+                    others.append(clause)
+        keep = [i for i in afterok if i not in set(remove)]
+        keep += [a for a in add if a not in keep]
+        clauses = others + (
+            ["afterok:" + ":".join(str(i) for i in keep)] if keep else []
+        )
+        return subprocess.run(
+            ["scontrol", "update", f"JobId={job_id}",
+             f"Dependency={','.join(clauses)}"],
+        ).returncode == 0
 
     def scontrol_release(self, job_id: int) -> None:
         subprocess.run(["scontrol", "release", str(job_id)], check=True)

@@ -3,12 +3,14 @@ with afterok dependencies, failure cascades, cache-aware partial replay,
 and straggler rewiring under dependents."""
 import os
 import time
+import warnings
 
 import pytest
 
 import repro
 from repro.core import Pipeline, PipelineError
-from repro.core.dag import _overlaps
+from repro.core.dag import PipelineWarning, _overlaps
+from repro.core.jobdb import JobDB
 from repro.core.slurm import (
     CANCELLED,
     COMPLETED,
@@ -366,3 +368,136 @@ def test_reschedule_straggler_rewires_dependents(tmp_path):
     assert statuses[jobs["child"]] == "finished"
     assert s.verify()["divergence"] == 0
     s.cluster.shutdown()
+
+
+# --------------------------------------------------- edge-case hardening
+def test_root_level_wildcard_warns():
+    prep = RunSpec(script="p.sh", outputs=["prep"])
+    # unanchored: `*.npy` cannot be tied to the directory output `prep`, so
+    # no edge is inferred — the hazard must be surfaced, not silent
+    loose = RunSpec(script="c.sh", inputs=["*.npy"], outputs=["agg.txt"])
+    with pytest.warns(PipelineWarning, match="root-level wildcard"):
+        p = Pipeline({"prep": prep, "consume": loose})
+    assert p.edges() == []
+    # anchored under the producing directory: edge inferred, no warning
+    anchored = RunSpec(
+        script="c.sh", inputs=["prep/*.npy"], outputs=["agg.txt"]
+    )
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert Pipeline({"prep": prep, "consume": anchored}).edges() == [
+            ("prep", "consume")
+        ]
+        # a root-level wildcard that literally matches an output is fine too
+        a = RunSpec(script="a.sh", outputs=["x.npy"])
+        b = RunSpec(script="b.sh", inputs=["*.npy"], outputs=["y.txt"])
+        assert Pipeline({"a": a, "b": b}).edges() == [("a", "b")]
+        # no producers at all (single root stage): nothing to warn about
+        Pipeline({"prep": RunSpec(
+            script="p.sh", inputs=["*.raw"], outputs=["prep"]
+        )})
+
+
+def test_sbatch_unknown_dependency_leaves_no_phantom(tmp_path):
+    cluster = LocalSlurmCluster(max_workers=2)
+    wd = str(tmp_path)
+    script(wd, "a.sh", "true")
+    pa = cluster.sbatch("a.sh", workdir=wd)
+    before = set(cluster._jobs)
+    with pytest.raises(KeyError, match="unknown dependency"):
+        cluster.sbatch("a.sh", workdir=wd, dependency=[pa, 999_999])
+    # nothing was registered: no phantom never-terminal PENDING job and no
+    # stale parent->child entries for the valid parents in the list
+    assert set(cluster._jobs) == before
+    assert not any(cluster._dependents.values())
+    cluster.wait([pa], timeout=30)
+    assert cluster.sacct(pa) == COMPLETED
+    cluster.shutdown()
+
+
+def test_scontrol_unknown_add_keeps_edges_intact(tmp_path):
+    cluster = LocalSlurmCluster(max_workers=2)
+    wd = str(tmp_path)
+    script(wd, "slow.sh", "while [ ! -f go ]; do sleep 0.05; done")
+    script(wd, "b.sh", "true")
+    pa = cluster.sbatch("slow.sh", workdir=wd)
+    pb = cluster.sbatch("b.sh", workdir=wd, dependency=[pa])
+    with pytest.raises(KeyError, match="unknown dependency"):
+        cluster.scontrol_update_dependency(pb, add=[999_999])
+    # the failed rewire left the afterok edge in place: pb still waits for
+    # pa and is released when it completes (the old half-mutation dropped
+    # pb from the waiting set, stranding it PENDING forever)
+    assert cluster.sacct(pb) == PENDING
+    write(wd, "go", "")
+    cluster.wait([pa, pb], timeout=30)
+    assert cluster.sacct(pb) == COMPLETED
+    cluster.shutdown()
+
+
+def test_subprocess_rewire_holds_first_and_preserves_parents(monkeypatch):
+    from repro.core import slurm as slurm_mod
+
+    cluster = slurm_mod.SubprocessSlurmCluster()
+    calls = []
+
+    class R:
+        def __init__(self, stdout=""):
+            self.returncode = 0
+            self.stdout = stdout
+
+    def fake_run(cmd, **kw):
+        calls.append(list(cmd))
+        if cmd[:3] == ["scontrol", "show", "job"]:
+            return R(
+                "JobId=7 JobName=x JobState=PENDING Reason=Dependency\n"
+                "   Dependency=afterok:101(unfulfilled):102,singleton\n"
+            )
+        return R()
+
+    monkeypatch.setattr(slurm_mod.subprocess, "run", fake_run)
+    assert cluster.scontrol_update_dependency(7, remove=[101], hold=True)
+    # hold lands BEFORE the expression is rewritten, so the job is never
+    # momentarily dependency-free and eligible to start
+    assert calls[0] == ["scontrol", "hold", "7"]
+    update = next(c for c in calls if c[:2] == ["scontrol", "update"])
+    # remove-only keeps the OTHER afterok parent and non-afterok clauses:
+    # real scontrol replaces the whole expression, so the backend must
+    # read-modify-write it
+    assert update[-1] == "Dependency=singleton,afterok:102"
+
+    calls.clear()
+    assert cluster.scontrol_update_dependency(7, add=[555])
+    update = next(c for c in calls if c[:2] == ["scontrol", "update"])
+    assert update[-1] == "Dependency=singleton,afterok:101:102:555"
+
+    # a non-PENDING job cannot be rewired; the hold taken first is released
+    def fake_run_running(cmd, **kw):
+        calls.append(list(cmd))
+        if cmd[:3] == ["scontrol", "show", "job"]:
+            return R("JobId=7 JobState=RUNNING Dependency=(null)\n")
+        return R()
+
+    calls.clear()
+    monkeypatch.setattr(slurm_mod.subprocess, "run", fake_run_running)
+    assert not cluster.scontrol_update_dependency(7, remove=[101], hold=True)
+    assert ["scontrol", "release", "7"] in calls
+
+
+def test_replace_dep_parent_children_filter(tmp_path):
+    repro_dir = str(tmp_path / ".repro")
+    os.makedirs(repro_dir)
+    db = JobDB(repro_dir)
+    old = db.add_job(RunSpec(script="p.sh", outputs=["p.txt"]))
+    new = db.add_job(RunSpec(script="p2.sh", outputs=["p2.txt"]))
+    c1 = db.add_job(RunSpec(script="c1.sh", outputs=["c1.txt"]))
+    c2 = db.add_job(RunSpec(script="c2.sh", outputs=["c2.txt"]))
+    db.add_deps([(c1, old), (c2, old)])
+    # only c1 was detached on the cluster: move just its edge — c2 still
+    # chains off the old job there, and jobdb must keep saying so
+    db.replace_dep_parent(old, new, children=[c1])
+    assert [r["job_id"] for r in db.parents_of(c1)] == [new]
+    assert [r["job_id"] for r in db.parents_of(c2)] == [old]
+    db.replace_dep_parent(old, new, children=[])  # no-op
+    assert [r["job_id"] for r in db.parents_of(c2)] == [old]
+    db.replace_dep_parent(old, new)  # unfiltered form moves the rest
+    assert [r["job_id"] for r in db.parents_of(c2)] == [new]
